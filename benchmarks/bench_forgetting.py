@@ -1,0 +1,46 @@
+"""Paper Figs. 5-7 / 11-13: LRU/LFU forgetting vs recall and memory.
+
+Claims under test: forgetting bounds state growth; LRU preserves (or
+improves, under drift) recall better than aggressively-tuned LFU; LFU
+yields the smallest state. Plus the paper's *future-work* policy,
+gradual forgetting (exponential state decay), implemented here.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.forgetting import ForgettingConfig
+from repro.core.pipeline import StreamConfig, run_stream
+
+GRADUAL = ForgettingConfig(policy="gradual", trigger_every=2048,
+                           gradual_gamma=0.9)
+
+
+def rows(events: int = 12_288):
+    from benchmarks.common import LFU, LRU, make_cfg, stream_for
+
+    out = []
+    for dataset in ("movielens",):
+        users, items = stream_for(dataset, events, drift=True)
+        for n_i in (2, 4):
+            results = {}
+            for label, forget in (("none", None), ("lru", LRU), ("lfu", LFU),
+                                  ("gradual", GRADUAL)):
+                cfg = make_cfg("disgd", dataset, n_i, forget)
+                res = run_stream(users, items, cfg)
+                occ = res.occupancy_summary()
+                results[label] = (res, occ)
+                out.append({
+                    "name": f"forgetting/disgd/{dataset}/n_i={n_i}/{label}",
+                    "us_per_call": 1e6 * res.wall_seconds / max(
+                        res.events_processed, 1),
+                    "derived": (
+                        f"recall@10={res.recall.mean():.4f}"
+                        f" users/worker={occ['user_mean']:.1f}"
+                        f" items/worker={occ['item_mean']:.1f}"
+                    ),
+                })
+    return out

@@ -1,0 +1,36 @@
+"""Paper Fig. 4 / Fig. 10: per-worker state-size distribution vs n_i.
+
+Claim under test: mean per-worker user/item state shrinks super-linearly
+as n_i grows (>50% memory reduction headline).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def rows(events: int = 16_384):
+    from benchmarks.common import run
+
+    out = []
+    for dataset in ("movielens", "netflix"):
+        base = None
+        for n_i in (1, 2, 4):
+            res = run("disgd", dataset, n_i, events)
+            occ = res.occupancy_summary()
+            if n_i == 1:
+                base = occ
+            u_frac = occ["user_mean"] / max(base["user_mean"], 1e-9)
+            i_frac = occ["item_mean"] / max(base["item_mean"], 1e-9)
+            out.append({
+                "name": f"memory/disgd/{dataset}/n_i={n_i}",
+                "us_per_call": 1e6 * res.wall_seconds / max(
+                    res.events_processed, 1),
+                "derived": (
+                    f"users/worker={occ['user_mean']:.1f}"
+                    f"({u_frac:.2f}x-central)"
+                    f" items/worker={occ['item_mean']:.1f}"
+                    f"({i_frac:.2f}x-central)"
+                ),
+            })
+    return out

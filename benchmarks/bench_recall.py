@@ -1,0 +1,30 @@
+"""Paper Fig. 3 / Fig. 9: moving-average Recall@10, central vs S&R n_i.
+
+Claim under test: recall *improves* with the replication factor n_i, for
+both DISGD and DICS, on both dataset profiles.
+"""
+
+from __future__ import annotations
+
+
+def rows(events_disgd: int = 16_384, events_dics: int = 6_144):
+    from benchmarks.common import run
+
+    out = []
+    for algorithm, events in (("disgd", events_disgd), ("dics", events_dics)):
+        for dataset in ("movielens", "netflix"):
+            base = None
+            for n_i in (1, 2, 4):
+                res = run(algorithm, dataset, n_i, events)
+                recall = res.recall.mean()
+                if n_i == 1:
+                    base = recall
+                us_per_call = 1e6 * res.wall_seconds / max(
+                    res.events_processed, 1)
+                out.append({
+                    "name": f"recall/{algorithm}/{dataset}/n_i={n_i}",
+                    "us_per_call": us_per_call,
+                    "derived": f"recall@10={recall:.4f}"
+                               f" vs_central={recall / max(base, 1e-9):.2f}x",
+                })
+    return out

@@ -1,0 +1,33 @@
+"""Worker-load skew under S&R routing (paper Section 6 future work).
+
+The paper observes that data skew may imbalance worker load. The S&R key
+is (item mod n_i, user mod g), so zipf-popular items concentrate on their
+split's row. This benchmark quantifies it: per-micro-batch max/mean worker
+load for growing n_i on the drifted movielens-profile stream, plus the
+events dropped by bucket-capacity overflow (re-queued by the pipeline).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def rows(events: int = 12_288):
+    from benchmarks.common import run
+
+    out = []
+    for n_i in (2, 4, 6):
+        res = run("disgd", "movielens", n_i, events)
+        loads = np.stack(res.load_history).astype(float)  # [batches, n_c]
+        imb = (loads.max(axis=1) / np.maximum(loads.mean(axis=1), 1e-9))
+        out.append({
+            "name": f"skew/disgd/movielens/n_i={n_i}",
+            "us_per_call": 1e6 * res.wall_seconds / max(
+                res.events_processed, 1),
+            "derived": (
+                f"max/mean_load={imb.mean():.2f}"
+                f" worst_batch={imb.max():.2f}"
+                f" requeued_frac={1 - res.events_processed / (res.events_processed + res.dropped + 1e-9):.4f}"
+            ),
+        })
+    return out

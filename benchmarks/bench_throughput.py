@@ -1,0 +1,38 @@
+"""Paper Fig. 8 / Fig. 14: throughput, central vs S&R (± forgetting).
+
+Claim under test: splitting & replication raises end-to-end events/sec
+(on real clusters by orders of magnitude; here the simulated workers share
+one CPU, so the measured gain comes from smaller per-worker state — the
+same mechanism, compressed scale; the mesh-level scaling is covered by the
+dry-run collective schedule instead).
+"""
+
+from __future__ import annotations
+
+
+def rows(events: int = 12_288):
+    from benchmarks.common import LFU, LRU, run
+
+    out = []
+    for algorithm in ("disgd", "dics"):
+        ev = events if algorithm == "disgd" else events // 2
+        for dataset in ("movielens",):
+            base = None
+            for n_i, forget, label in (
+                (1, None, "central"),
+                (2, None, "n_i=2"),
+                (4, None, "n_i=4"),
+                (4, LRU, "n_i=4+lru"),
+                (4, LFU, "n_i=4+lfu"),
+            ):
+                res = run(algorithm, dataset, n_i, ev, forget)
+                thpt = res.throughput
+                if base is None:
+                    base = thpt
+                out.append({
+                    "name": f"throughput/{algorithm}/{dataset}/{label}",
+                    "us_per_call": 1e6 / max(thpt, 1e-9),
+                    "derived": f"events/s={thpt:,.0f}"
+                               f" speedup={thpt / base:.2f}x",
+                })
+    return out

@@ -1,0 +1,102 @@
+"""§Perf hillclimb driver: re-lower one (arch, shape) with config overrides
+and diff the roofline terms against the recorded baseline.
+
+  PYTHONPATH=src python -m benchmarks.perf_iter \
+      --arch stablelm_3b --shape train_4k --set q_chunk=512 remat=False
+
+Overrides use ``field=value`` (ints/floats/bools/None parsed); nested MoE/SSM
+fields as ``moe.group_size=1024``.
+"""
+
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import dataclasses
+import json
+
+
+def _parse(v: str):
+    if v in ("True", "False"):
+        return v == "True"
+    if v == "None":
+        return None
+    try:
+        return int(v)
+    except ValueError:
+        pass
+    try:
+        return float(v)
+    except ValueError:
+        return v
+
+
+def apply_overrides(cfg, pairs):
+    for key, val in pairs:
+        if "." in key:
+            head, sub = key.split(".", 1)
+            inner = getattr(cfg, head)
+            inner = dataclasses.replace(inner, **{sub: val})
+            cfg = dataclasses.replace(cfg, **{head: inner})
+        else:
+            cfg = dataclasses.replace(cfg, **{key: val})
+    return cfg
+
+
+def main():
+    from repro.launch import dryrun
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--set", nargs="*", default=[])
+    ap.add_argument("--shard", nargs="*", default=[],
+                    help="logical=mesh axes, e.g. inner= ff=model (empty "
+                         "value replicates that logical axis)")
+    ap.add_argument("--baseline", default="reports/dryrun_16x16.json")
+    args = ap.parse_args()
+
+    pairs = [(kv.split("=", 1)[0], _parse(kv.split("=", 1)[1]))
+             for kv in args.set]
+    if args.shard:
+        def _axes(v: str):
+            axes = tuple(a for a in v.split(",") if a)
+            if not axes:
+                return ()           # replicate
+            if len(axes) == 1:
+                return (axes[0],)   # single-axis candidate
+            return (axes,)          # one multi-axis candidate
+        shard_ov = tuple(
+            (kv.split("=", 1)[0], _axes(kv.split("=", 1)[1]))
+            for kv in args.shard
+        )
+        pairs.append(("sharding_overrides", shard_ov))
+
+    # lower_combo applies top-level overrides via dataclasses.replace; we
+    # pre-resolve nested ones here.
+    from repro.configs import get_config
+    cfg = apply_overrides(get_config(args.arch), pairs)
+    flat = {f.name: getattr(cfg, f.name)
+            for f in dataclasses.fields(cfg)}
+
+    r = dryrun.lower_combo(args.arch, args.shape, overrides=flat)
+    print(json.dumps({k: v for k, v in r.items()
+                      if k in ("roofline", "collectives", "memory",
+                               "compile_s", "microbatches")}, indent=1))
+
+    try:
+        base = json.load(open(args.baseline))
+        b = next(x for x in base
+                 if x["arch"] == args.arch and x["shape"] == args.shape)
+        br, nr = b["roofline"], r["roofline"]
+        print("\n# delta vs baseline")
+        for term in ("compute_s", "memory_s", "collective_s"):
+            o, n = br[term], nr[term]
+            pct = (n - o) / o * 100 if o else float("nan")
+            print(f"{term}: {o:.4f} -> {n:.4f}  ({pct:+.1f}%)")
+    except (FileNotFoundError, StopIteration):
+        print("# no baseline found for delta")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""Render reports/dryrun_*.json into the EXPERIMENTS.md tables.
+
+  PYTHONPATH=src python -m benchmarks.report_md reports/dryrun_16x16.json
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PiB"
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def dryrun_table(reports):
+    rows = ["| arch | shape | mesh | plan | micro | compile | args/dev | temp/dev |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in reports:
+        mem = r.get("memory", {})
+        n = r.get("n_devices", 1)
+        rows.append(
+            "| {arch} | {shape} | {mesh} | {plan} | {micro} | {comp} | {arg} | {temp} |".format(
+                arch=r["arch"], shape=r["shape"], mesh=r.get("mesh", "-"),
+                plan=("run" if r.get("plan") == "run" else
+                      "ERROR" if r.get("plan") == "ERROR" else "skip"),
+                micro=r.get("microbatches", "-"),
+                comp=f"{r.get('compile_s', 0):.0f}s" if "compile_s" in r else "-",
+                arg=fmt_bytes(mem.get("argument_bytes")),
+                temp=fmt_bytes(mem.get("temp_bytes")),
+            )
+        )
+    return "\n".join(rows)
+
+
+def roofline_table(reports):
+    rows = ["| arch | shape | compute | memory* | collective | dominant | useful (6ND/HLO) |",
+            "|---|---|---|---|---|---|---|"]
+    for r in reports:
+        if r.get("plan") != "run" or "roofline" not in r:
+            continue
+        ro = r["roofline"]
+        rows.append(
+            "| {arch} | {shape} | {c} | {m} | {k} | **{dom}** | {u:.2f} |".format(
+                arch=r["arch"], shape=r["shape"],
+                c=fmt_s(ro["compute_s"]), m=fmt_s(ro["memory_s"]),
+                k=fmt_s(ro["collective_s"]), dom=ro["dominant"],
+                u=ro["useful_ratio"],
+            )
+        )
+    return "\n".join(rows)
+
+
+def skip_table(reports):
+    rows = ["| arch | shape | reason |", "|---|---|---|"]
+    for r in reports:
+        plan = r.get("plan", "")
+        if plan not in ("run", "ERROR"):
+            rows.append(f"| {r['arch']} | {r['shape']} | {plan} |")
+        elif plan == "ERROR":
+            rows.append(f"| {r['arch']} | {r['shape']} | ERROR: "
+                        f"{r.get('error', '?')} |")
+    return "\n".join(rows)
+
+
+def main():
+    for path in sys.argv[1:]:
+        reports = json.load(open(path))
+        print(f"\n### {path}\n")
+        print(dryrun_table(reports))
+        print("\n#### Roofline (per chip, per step)\n")
+        print(roofline_table(reports))
+        print("\n#### Skips / errors\n")
+        print(skip_table(reports))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Benchmark runner. One module per paper table/figure; prints
+``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run [--only recall,kernels] [--fast]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+SUITES = ("kernels", "recall", "memory", "forgetting", "throughput", "skew")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: " + ",".join(SUITES))
+    ap.add_argument("--fast", action="store_true",
+                    help="quarter-size streams (CI mode)")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else set(SUITES)
+
+    from benchmarks import (bench_forgetting, bench_kernels, bench_memory,
+                            bench_recall, bench_skew, bench_throughput)
+
+    scale = 4 if args.fast else 1
+    plans = {
+        "kernels": lambda: bench_kernels.rows(),
+        "recall": lambda: bench_recall.rows(16_384 // scale, 6_144 // scale),
+        "memory": lambda: bench_memory.rows(16_384 // scale),
+        "forgetting": lambda: bench_forgetting.rows(12_288 // scale),
+        "throughput": lambda: bench_throughput.rows(12_288 // scale),
+        "skew": lambda: bench_skew.rows(12_288 // scale),
+    }
+
+    print("name,us_per_call,derived")
+    t0 = time.perf_counter()
+    for suite in SUITES:
+        if suite not in only:
+            continue
+        t1 = time.perf_counter()
+        for row in plans[suite]():
+            print(f"{row['name']},{row['us_per_call']:.2f},{row['derived']}")
+        print(f"# suite {suite} done in {time.perf_counter()-t1:.1f}s",
+              file=sys.stderr)
+    print(f"# total {time.perf_counter()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

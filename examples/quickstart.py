@@ -1,0 +1,45 @@
+"""Quickstart: distributed streaming recommendation in ~40 lines.
+
+Streams synthetic MovieLens-like ratings through DISGD on a 2x2 S&R worker
+grid (the paper's n_i=2 configuration), with prequential Recall@10 — the
+paper's Algorithm 1+2+4 end to end.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import sys
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core.disgd import DisgdHyper
+from repro.core.pipeline import StreamConfig, run_stream
+from repro.core.routing import GridSpec
+from repro.data.stream import MOVIELENS_25M, scaled, synth_stream
+
+
+def main():
+    profile = scaled(MOVIELENS_25M, 0.003)
+    users, items, _ = synth_stream(profile, seed=0)
+    print(f"stream: {users.size} ratings, "
+          f"{users.max()+1} users, {items.max()+1} items")
+
+    for n_i in (1, 2):  # n_i=1 == the paper's central ISGD baseline
+        grid = GridSpec(n_i)
+        cfg = StreamConfig(
+            algorithm="disgd",
+            grid=grid,
+            micro_batch=1024,
+            hyper=DisgdHyper(u_cap=1024 // grid.g, i_cap=128 // grid.n_i),
+        )
+        res = run_stream(users, items, cfg)
+        occ = res.occupancy_summary()
+        label = "central ISGD" if n_i == 1 else f"DISGD n_i={n_i}"
+        print(f"{label:14s} recall@10={res.recall.mean():.4f} "
+              f"throughput={res.throughput:,.0f} ev/s "
+              f"mean state/worker: users={occ['user_mean']:.0f} "
+              f"items={occ['item_mean']:.0f}")
+
+
+if __name__ == "__main__":
+    main()

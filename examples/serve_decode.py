@@ -1,0 +1,25 @@
+"""Serve a small model with batched requests: prefill + streaming decode.
+
+  PYTHONPATH=src python examples/serve_decode.py [--arch h2o_danube_1p8b]
+"""
+
+import sys
+sys.path.insert(0, "src")
+
+import argparse
+
+from repro.launch import serve as serve_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="h2o_danube_1p8b")
+    args = ap.parse_args()
+    serve_mod.main([
+        "--arch", args.arch, "--smoke",
+        "--batch", "4", "--prompt-len", "64", "--gen", "16",
+    ])
+
+
+if __name__ == "__main__":
+    main()

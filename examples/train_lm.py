@@ -1,0 +1,33 @@
+"""Train a ~25M-parameter member of the zoo for a few hundred steps on CPU.
+
+Uses the launcher's real code path (sharding rules, AdamW, schedule,
+checkpointing) on a reduced stablelm-family config; loss must decrease.
+
+  PYTHONPATH=src python examples/train_lm.py [--arch stablelm_3b] [--steps 200]
+"""
+
+import sys
+sys.path.insert(0, "src")
+
+import argparse
+
+from repro.launch import train as train_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm_3b")
+    ap.add_argument("--steps", type=int, default=200)
+    args = ap.parse_args()
+
+    losses = train_mod.main([
+        "--arch", args.arch, "--smoke",
+        "--steps", str(args.steps),
+        "--batch", "8", "--seq", "128",
+        "--lr", "1e-3", "--log-every", "20",
+    ])
+    assert losses[-1] < losses[0], "loss did not decrease"
+
+
+if __name__ == "__main__":
+    main()

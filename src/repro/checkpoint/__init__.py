@@ -1,0 +1,3 @@
+from repro.checkpoint.checkpointer import save_checkpoint, restore_checkpoint
+
+__all__ = ["save_checkpoint", "restore_checkpoint"]

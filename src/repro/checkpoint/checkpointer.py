@@ -1,0 +1,90 @@
+"""Msgpack pytree checkpointer (no external deps beyond msgpack).
+
+Arrays are stored as (dtype, shape, raw bytes); the pytree structure is
+reconstructed from nested dicts/lists/tuples. Step-numbered directories
+with an atomic rename commit so a killed run never leaves a torn
+checkpoint (the usual production discipline, scaled down).
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
+
+_ARR = "__arr__"
+_TUP = "__tuple__"
+
+
+def _encode(obj):
+    if isinstance(obj, (jax.Array, np.ndarray)):
+        arr = np.asarray(obj)
+        if arr.dtype == jnp.bfloat16:
+            return {_ARR: ["bfloat16", list(arr.shape),
+                           arr.view(np.uint16).tobytes()]}
+        return {_ARR: [arr.dtype.str, list(arr.shape), arr.tobytes()]}
+    if isinstance(obj, tuple):
+        return {_TUP: [_encode(x) for x in obj]}
+    if isinstance(obj, dict):
+        return {str(k): _encode(v) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [_encode(x) for x in obj]
+    return obj
+
+
+def _decode(obj):
+    if isinstance(obj, dict):
+        if _ARR in obj:
+            dtype, shape, buf = obj[_ARR]
+            if dtype == "bfloat16":
+                return np.frombuffer(buf, np.uint16).reshape(shape).view(
+                    jnp.bfloat16
+                )
+            return np.frombuffer(buf, np.dtype(dtype)).reshape(shape)
+        if _TUP in obj:
+            return tuple(_decode(x) for x in obj[_TUP])
+        return {k: _decode(v) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [_decode(x) for x in obj]
+    return obj
+
+
+def save_checkpoint(directory: str, step: int, tree) -> str:
+    os.makedirs(directory, exist_ok=True)
+    # NamedTuples and other containers flatten through _encode only if they
+    # are dict/list/tuple; convert exotic nodes via jax first.
+    payload = msgpack.packb(_encode(jax.tree.map(lambda x: x, tree)),
+                            use_bin_type=True)
+    final = os.path.join(directory, f"step_{step:08d}.msgpack")
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
+    with os.fdopen(fd, "wb") as f:
+        f.write(payload)
+    os.replace(tmp, final)
+    return final
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(f[len("step_"):-len(".msgpack")])
+        for f in os.listdir(directory)
+        if f.startswith("step_") and f.endswith(".msgpack")
+    ]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, step: int | None = None):
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"step_{step:08d}.msgpack")
+    with open(path, "rb") as f:
+        return step, _decode(msgpack.unpackb(f.read(), raw=False))

@@ -1,0 +1,22 @@
+"""Architecture configs. ``get_config(arch_id)`` / ``get_smoke_config``."""
+
+from repro.configs.base import (
+    ArchConfig,
+    MoeConfig,
+    SsmConfig,
+    ARCH_IDS,
+    get_config,
+    get_smoke_config,
+)
+from repro.configs.shapes import SHAPES, InputShape
+
+__all__ = [
+    "ArchConfig",
+    "MoeConfig",
+    "SsmConfig",
+    "ARCH_IDS",
+    "get_config",
+    "get_smoke_config",
+    "SHAPES",
+    "InputShape",
+]

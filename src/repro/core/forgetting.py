@@ -1,0 +1,156 @@
+"""Forgetting techniques (paper Section 5.2): LRU and LFU state eviction.
+
+The paper bounds unbounded stream state with cache-management policies:
+
+  * **LFU** — triggered every ``c`` processed records; evicts users/items
+    whose request *frequency* is below a controller threshold.
+  * **LRU** — triggered every ``t`` time units; evicts users/items whose
+    *last-touch timestamp* is older than a controller threshold.
+
+Both are pure functions over the fixed-capacity tables: an evicted entry's
+id becomes ``-1``, its statistics reset, and — for DICS — the co-occurrence
+rows/columns of evicted items are zeroed (the iteration cost the paper
+calls out as the DICS throughput limiter).
+
+The event clock doubles as the paper's processing-time: in a stream with
+monotone arrival, "every t seconds" and "every c records" coincide up to
+rate, so both triggers are expressed in events.
+
+Beyond-paper variant: ``evict_to_budget`` keeps at most ``budget`` live
+entries by evicting the worst under either policy — a bounded-memory
+guarantee the paper only approaches by parameter tuning.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.state import DicsState, DisgdState, Tables
+
+__all__ = ["ForgettingConfig", "apply_forgetting", "evict_to_budget"]
+
+
+class ForgettingConfig(NamedTuple):
+    policy: str = "none"        # "none" | "lru" | "lfu" | "gradual"
+    trigger_every: int = 4096   # c records (LFU) / t clock ticks (LRU)
+    # Controller parameters:
+    lfu_min_freq: int = 2       # evict entries seen fewer than this
+    lru_max_age: int = 8192     # evict entries untouched for this many events
+    # Gradual forgetting (the paper's future-work direction): instead of
+    # hard eviction, every trigger decays all learned state toward the
+    # prior — factor vectors shrink toward 0 (DISGD) and co-occurrence
+    # counts discount (DICS), so stale taste fades smoothly under drift.
+    gradual_gamma: float = 0.98
+
+
+def _user_mask(t: Tables, cfg: ForgettingConfig):
+    live = t.user_ids >= 0
+    if cfg.policy == "lfu":
+        return live & (t.user_freq < cfg.lfu_min_freq)
+    if cfg.policy == "lru":
+        return live & (t.clock - t.user_ts > cfg.lru_max_age)
+    return jnp.zeros_like(live)
+
+
+def _item_mask(t: Tables, cfg: ForgettingConfig):
+    live = t.item_ids >= 0
+    if cfg.policy == "lfu":
+        return live & (t.item_freq < cfg.lfu_min_freq)
+    if cfg.policy == "lru":
+        return live & (t.clock - t.item_ts > cfg.lru_max_age)
+    return jnp.zeros_like(live)
+
+
+def _evict_tables(t: Tables, u_evict, i_evict) -> Tables:
+    return t._replace(
+        user_ids=jnp.where(u_evict, -1, t.user_ids),
+        item_ids=jnp.where(i_evict, -1, t.item_ids),
+        user_freq=jnp.where(u_evict, 0, t.user_freq),
+        item_freq=jnp.where(i_evict, 0, t.item_freq),
+        user_ts=jnp.where(u_evict, 0, t.user_ts),
+        item_ts=jnp.where(i_evict, 0, t.item_ts),
+    )
+
+
+def apply_forgetting(state, cfg: ForgettingConfig):
+    """Scan-and-evict (paper's periodic scan), for either algorithm's state.
+
+    The *trigger* (every c records / t ticks) is the caller's job — the
+    pipeline invokes this between micro-batches when
+    ``clock % trigger_every`` wraps; this function is the scan itself.
+    """
+    if cfg.policy == "none":
+        return state
+    if cfg.policy == "gradual":
+        return _apply_gradual(state, cfg.gradual_gamma)
+    t = state.tables
+    u_evict = _user_mask(t, cfg)
+    i_evict = _item_mask(t, cfg)
+    return _apply_masks(state, u_evict, i_evict)
+
+
+def _apply_gradual(state, gamma: float):
+    """Beyond-paper (its stated future work): exponential state decay."""
+    if isinstance(state, DisgdState):
+        return state._replace(
+            user_vecs=state.user_vecs * gamma,
+            item_vecs=state.item_vecs * gamma,
+        )
+    if isinstance(state, DicsState):
+        return state._replace(
+            co=state.co * gamma,
+            item_cnt=state.item_cnt * gamma,
+        )
+    raise TypeError(f"unknown state type {type(state)}")
+
+
+def _apply_masks(state, u_evict, i_evict):
+    t = _evict_tables(state.tables, u_evict, i_evict)
+    rated = state.rated & ~u_evict[:, None] & ~i_evict[None, :]
+    if isinstance(state, DisgdState):
+        return DisgdState(
+            tables=t,
+            user_vecs=jnp.where(u_evict[:, None], 0.0, state.user_vecs),
+            item_vecs=jnp.where(i_evict[:, None], 0.0, state.item_vecs),
+            rated=rated,
+        )
+    if isinstance(state, DicsState):
+        keep = ~i_evict
+        co = state.co * (keep[:, None] & keep[None, :]).astype(state.co.dtype)
+        return DicsState(
+            tables=t,
+            co=co,
+            item_cnt=jnp.where(i_evict, 0.0, state.item_cnt),
+            rated=rated,
+        )
+    raise TypeError(f"unknown state type {type(state)}")
+
+
+def evict_to_budget(state, user_budget: int, item_budget: int, policy: str = "lru"):
+    """Beyond-paper: hard memory bound — keep the best ``budget`` entries.
+
+    Ranks live entries by LRU recency (``ts``) or LFU frequency and evicts
+    everything past the budget.
+    """
+    t = state.tables
+    if policy == "lru":
+        u_score, i_score = t.user_ts, t.item_ts
+    elif policy == "lfu":
+        u_score, i_score = t.user_freq, t.item_freq
+    else:
+        raise ValueError(policy)
+
+    def mask(score, ids, budget):
+        score = jnp.where(ids >= 0, score, jnp.iinfo(jnp.int32).min)
+        # Threshold = budget-th largest score among live entries.
+        kth = jax.lax.top_k(score, min(budget, score.shape[0]))[0][-1]
+        keep = (score >= kth) & (ids >= 0)
+        # Tie-break overflow: keep at most budget via cumsum.
+        overflow = jnp.cumsum(keep.astype(jnp.int32)) > budget
+        return (ids >= 0) & (~keep | overflow)
+
+    return _apply_masks(state, mask(u_score, t.user_ids, user_budget),
+                        mask(i_score, t.item_ids, item_budget))

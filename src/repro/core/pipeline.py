@@ -1,0 +1,230 @@
+"""End-to-end S&R streaming pipeline (paper Figure 1/2).
+
+Ties together routing (Alg. 1), the per-worker incremental algorithms
+(Alg. 2 / Alg. 3), forgetting, and prequential evaluation (Alg. 4) into the
+micro-batched streaming loop described in DESIGN.md §2:
+
+  host: key events (Alg. 1) -> capacity buckets -> device
+  device: every worker ``lax.scan``s its bucket (recommend -> eval -> train)
+  host: scatter recall bits back to stream order; trigger forgetting scans
+
+Workers are simulated on CPU with ``vmap`` over the worker axis; the same
+step functions run under ``shard_map`` on the production mesh via
+``repro.launch`` (each mesh coordinate = one worker).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dics as dics_lib
+from repro.core import disgd as disgd_lib
+from repro.core import forgetting as forgetting_lib
+from repro.core import routing, state as state_lib
+from repro.core.evaluator import RecallAccumulator
+
+__all__ = ["StreamConfig", "StreamResult", "run_stream", "make_worker_step"]
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    algorithm: str = "disgd"                 # "disgd" | "dics"
+    grid: routing.GridSpec = routing.GridSpec(1, 0)
+    micro_batch: int = 2048
+    capacity_factor: float = 2.0             # bucket capacity vs fair share
+    forgetting: forgetting_lib.ForgettingConfig = forgetting_lib.ForgettingConfig()
+    hyper: Any = None                        # DisgdHyper | DicsHyper (caps etc.)
+    seed: int = 0
+    record_every: int = 4                    # occupancy snapshot cadence
+
+    def resolved_hyper(self):
+        h = self.hyper
+        if h is None:
+            h = (disgd_lib.DisgdHyper() if self.algorithm == "disgd"
+                 else dics_lib.DicsHyper())
+        return h._replace(n_i=self.grid.n_i, g=self.grid.g)
+
+    @property
+    def bucket_capacity(self) -> int:
+        fair = self.micro_batch / self.grid.n_c
+        return max(8, int(np.ceil(fair * self.capacity_factor)))
+
+
+@dataclasses.dataclass
+class StreamResult:
+    recall: RecallAccumulator
+    user_occupancy: list      # [(events_processed, np[n_c])]
+    item_occupancy: list
+    events_processed: int
+    dropped: int
+    wall_seconds: float
+    load_history: list        # per-batch worker loads (skew diagnostics)
+
+    @property
+    def throughput(self) -> float:
+        return self.events_processed / max(self.wall_seconds, 1e-9)
+
+    def occupancy_summary(self):
+        """Mean per-worker live entries at end of stream (paper's metric)."""
+        u = self.user_occupancy[-1][1] if self.user_occupancy else np.zeros(1)
+        i = self.item_occupancy[-1][1] if self.item_occupancy else np.zeros(1)
+        return {
+            "user_mean": float(np.mean(u)), "user_max": int(np.max(u)),
+            "item_mean": float(np.mean(i)), "item_max": int(np.max(i)),
+            "user_total": int(np.sum(u)), "item_total": int(np.sum(i)),
+        }
+
+
+def make_worker_step(cfg: StreamConfig) -> Callable:
+    """vmapped + jitted micro-batch step over all workers."""
+    hyper = cfg.resolved_hyper()
+    key = jax.random.key(cfg.seed)
+
+    if cfg.algorithm == "disgd":
+        def one(state, ev):
+            return disgd_lib.disgd_worker_step(state, ev, hyper, key)
+    elif cfg.algorithm == "dics":
+        def one(state, ev):
+            return dics_lib.dics_worker_step(state, ev, hyper)
+    else:
+        raise ValueError(cfg.algorithm)
+
+    stepped = jax.vmap(one, in_axes=(0, 0))
+
+    @jax.jit
+    def step(states, ev_u, ev_i):
+        return stepped(states, (ev_u, ev_i))
+
+    return step
+
+
+def init_states(cfg: StreamConfig):
+    hyper = cfg.resolved_hyper()
+    if cfg.algorithm == "disgd":
+        one = state_lib.init_disgd_state(hyper.u_cap, hyper.i_cap, hyper.k)
+    else:
+        one = state_lib.init_dics_state(hyper.u_cap, hyper.i_cap)
+    n_c = cfg.grid.n_c
+    return jax.tree.map(lambda x: jnp.broadcast_to(x, (n_c,) + x.shape), one)
+
+
+def run_stream(users: np.ndarray, items: np.ndarray, cfg: StreamConfig,
+               verbose: bool = False) -> StreamResult:
+    """Run the full prequential stream; returns curves + paper metrics."""
+    assert users.shape == items.shape
+    n = users.shape[0]
+    grid = cfg.grid
+    cap = cfg.bucket_capacity
+    step = make_worker_step(cfg)
+    states = init_states(cfg)
+
+    forget = None
+    if cfg.forgetting.policy != "none":
+        forget = jax.jit(
+            jax.vmap(partial(forgetting_lib.apply_forgetting, cfg=cfg.forgetting))
+        )
+
+    acc = RecallAccumulator()
+    user_occ, item_occ, loads = [], [], []
+    dropped = 0
+    processed = 0
+    carry_u = np.empty(0, dtype=np.int64)
+    carry_i = np.empty(0, dtype=np.int64)
+    events_since_trigger = 0
+
+    occ_fn = jax.jit(jax.vmap(lambda s: state_lib.occupancy(s.tables)))
+
+    t0 = time.perf_counter()
+    n_batches = int(np.ceil(n / cfg.micro_batch))
+    for b in range(n_batches):
+        lo, hi = b * cfg.micro_batch, min((b + 1) * cfg.micro_batch, n)
+        bu = np.concatenate([carry_u, users[lo:hi]])
+        bi = np.concatenate([carry_i, items[lo:hi]])
+        keys = (bi % grid.n_i) * grid.g + (bu % grid.g)
+        buckets, kept, load = routing.bucket_dispatch_np(
+            keys.astype(np.int64), grid.n_c, cap
+        )
+        # Overflow events re-queue into the next micro-batch (not lost).
+        carry_u, carry_i = bu[~kept], bi[~kept]
+        if b == n_batches - 1 and carry_u.size:
+            dropped += carry_u.size  # tail overflow at end of stream
+
+        ev_u = np.where(buckets >= 0, bu[np.clip(buckets, 0, None)], -1)
+        ev_i = np.where(buckets >= 0, bi[np.clip(buckets, 0, None)], -1)
+        states, hits, evaluated = step(
+            states, jnp.asarray(ev_u, jnp.int32), jnp.asarray(ev_i, jnp.int32)
+        )
+
+        # Stream-order scatter needs bucket indices relative to this batch.
+        acc.add_batch(buckets, np.asarray(hits), np.asarray(evaluated), bu.shape[0])
+        processed += int(kept.sum())
+        loads.append(load)
+
+        events_since_trigger += int(kept.sum())
+        if forget is not None and events_since_trigger >= cfg.forgetting.trigger_every:
+            states = forget(states)
+            events_since_trigger = 0
+
+        if b % cfg.record_every == 0 or b == n_batches - 1:
+            u_occ, i_occ = occ_fn(states)
+            user_occ.append((processed, np.asarray(u_occ)))
+            item_occ.append((processed, np.asarray(i_occ)))
+        if verbose and b % 16 == 0:
+            print(f"[stream] batch {b}/{n_batches} recall so far: {acc.mean():.4f}")
+
+    jax.block_until_ready(states)
+    wall = time.perf_counter() - t0
+    return StreamResult(
+        recall=acc,
+        user_occupancy=user_occ,
+        item_occupancy=item_occ,
+        events_processed=processed,
+        dropped=dropped,
+        wall_seconds=wall,
+        load_history=loads,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Fault tolerance: checkpoint/resume of the streaming state
+# ---------------------------------------------------------------------------
+
+
+def save_stream_checkpoint(directory: str, events_processed: int, states,
+                           carry=(None, None)):
+    """Persist worker states (+ the re-queue carry) mid-stream."""
+    from repro.checkpoint import save_checkpoint
+
+    carry_u, carry_i = carry
+    tree = {
+        "states": jax.tree.map(np.asarray, states),
+        "carry_u": np.asarray(carry_u if carry_u is not None else
+                              np.empty(0, np.int64)),
+        "carry_i": np.asarray(carry_i if carry_i is not None else
+                              np.empty(0, np.int64)),
+    }
+    return save_checkpoint(directory, events_processed, tree)
+
+
+def restore_stream_checkpoint(directory: str, cfg: StreamConfig,
+                              step: int | None = None):
+    """Restore worker states with the structure of ``init_states(cfg)``."""
+    from repro.checkpoint import restore_checkpoint
+
+    events_processed, tree = restore_checkpoint(directory, step)
+    template = init_states(cfg)
+    flat_t, treedef = jax.tree.flatten(template)
+    flat_s = jax.tree.leaves(tree["states"])
+    assert len(flat_t) == len(flat_s), "checkpoint/config structure mismatch"
+    states = jax.tree.unflatten(
+        treedef,
+        [jnp.asarray(s, t.dtype) for s, t in zip(flat_s, flat_t)],
+    )
+    return events_processed, states, (tree["carry_u"], tree["carry_i"])

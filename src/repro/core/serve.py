@@ -1,0 +1,73 @@
+"""Recommendation serving: batched top-N queries against worker state.
+
+Training (Alg. 2/3) interleaves recommend+update per event; production
+systems also serve *read-only* recommendation queries at much higher QPS
+than the rating stream. This module answers batches of user queries
+against a worker's current state, using the Pallas masked-scoring kernel
+(`kernels/scoring.py`) for the users x items matmul — the hot spot the
+paper's evaluation loop spends its time in.
+
+The per-event training path and this batched path must agree; the
+equivalence is tested in tests/test_serve.py.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import state as state_lib
+from repro.core.state import DisgdState
+from repro.kernels import ops
+
+__all__ = ["recommend_topn", "recommend_topn_ref"]
+
+
+def _gather_queries(state: DisgdState, user_ids, g: int, u_cap: int):
+    slots = state_lib.slot_of(user_ids, g, u_cap)
+    known = state.tables.user_ids[slots] == user_ids
+    u_vecs = jnp.where(known[:, None], state.user_vecs[slots], 0.0)
+    rated = state.rated[slots] & known[:, None]
+    valid_items = state.tables.item_ids >= 0
+    mask = valid_items[None, :] & ~rated
+    return u_vecs, mask, known
+
+
+@partial(jax.jit, static_argnames=("top_n", "g", "u_cap", "use_kernel"))
+def recommend_topn(state: DisgdState, user_ids, *, top_n: int = 10,
+                   g: int = 1, u_cap: int = 1024, use_kernel: bool = True):
+    """Top-N item ids for a batch of users on one worker.
+
+    Args:
+      state: the worker's DISGD state.
+      user_ids: int32[B] global user ids (queries for unknown users get
+        popularity-free empty lists: all -1).
+      top_n / g / u_cap: hyperparameters (see DisgdHyper).
+      use_kernel: route the scoring matmul through the Pallas kernel.
+
+    Returns:
+      (item_ids int32[B, top_n] (-1 padded), scores f32[B, top_n]).
+    """
+    u_vecs, mask, known = _gather_queries(state, user_ids, g, u_cap)
+    if use_kernel:
+        scores = ops.masked_scores(u_vecs, state.item_vecs, mask)
+    else:
+        scores = jnp.where(
+            mask,
+            jnp.einsum("bk,ik->bi", u_vecs, state.item_vecs),
+            -jnp.inf,
+        )
+    k = min(top_n, scores.shape[-1])
+    top_scores, top_idx = jax.lax.top_k(scores, k)
+    ids = state.tables.item_ids[top_idx]
+    ok = jnp.isfinite(top_scores) & known[:, None]
+    return jnp.where(ok, ids, -1), jnp.where(ok, top_scores, -jnp.inf)
+
+
+def recommend_topn_ref(state: DisgdState, user_ids, *, top_n: int = 10,
+                       g: int = 1, u_cap: int = 1024):
+    """Oracle path (no kernel) for equivalence testing."""
+    return recommend_topn(state, user_ids, top_n=top_n, g=g, u_cap=u_cap,
+                          use_kernel=False)

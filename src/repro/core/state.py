@@ -1,0 +1,115 @@
+"""Per-worker state for the S&R streaming recommenders.
+
+A Flink worker in the paper holds unbounded hash maps (user vectors, item
+vectors, pair counts, rating history). XLA requires static shapes, so each
+worker here holds *fixed-capacity id-slotted tables*:
+
+  slot(id) = (id // n_splits) % capacity
+
+where ``n_splits`` is the number of grid splits along that axis (``g`` user
+groups for users, ``n_i`` item splits for items). When capacity covers the
+id space the mapping is exact (collision-free) and the semantics match the
+paper's hash maps; with smaller capacity, a colliding insert *evicts* the
+previous tenant — a capacity-bound policy the paper reaches for via its
+forgetting techniques (LRU/LFU), which we also implement in
+``forgetting.py``.
+
+Empty slots carry id ``-1``. "Memory consumption" in the paper is measured
+as the *number of entries* per worker; here that is table occupancy
+(``occupancy()``).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Tables",
+    "DisgdState",
+    "DicsState",
+    "init_disgd_state",
+    "init_dics_state",
+    "slot_of",
+    "occupancy",
+]
+
+
+def slot_of(ids, n_splits: int, capacity: int):
+    """Map global id(s) to a local table slot."""
+    return (jnp.asarray(ids) // n_splits) % capacity
+
+
+class Tables(NamedTuple):
+    """Bookkeeping shared by both algorithms (ids / freshness / frequency)."""
+
+    user_ids: jax.Array   # i32[U_cap], -1 = empty
+    item_ids: jax.Array   # i32[I_cap], -1 = empty
+    user_freq: jax.Array  # i32[U_cap], LFU counter
+    item_freq: jax.Array  # i32[I_cap]
+    user_ts: jax.Array    # i32[U_cap], last-touch event clock, LRU
+    item_ts: jax.Array    # i32[I_cap]
+    clock: jax.Array      # i32[], per-worker event counter
+
+
+class DisgdState(NamedTuple):
+    """DISGD worker state: local shards of the factor matrices U and I."""
+
+    tables: Tables
+    user_vecs: jax.Array  # f32[U_cap, k]
+    item_vecs: jax.Array  # f32[I_cap, k]
+    rated: jax.Array      # bool[U_cap, I_cap] local rating history R
+
+
+class DicsState(NamedTuple):
+    """DICS worker state: co-occurrence counts for incremental cosine.
+
+    With the paper's positive-only binary feedback, TencentRec's
+    ``sum_u min(r_up, r_uq)`` is the co-rating count and ``sum r_up`` the
+    item count, so Eq. 6 reduces to ``co[p,q] / sqrt(cnt[p] * cnt[q])``.
+    """
+
+    tables: Tables
+    co: jax.Array        # f32[I_cap, I_cap] pairwise co-rating counts
+    item_cnt: jax.Array  # f32[I_cap] per-item rating counts
+    rated: jax.Array     # bool[U_cap, I_cap]
+
+
+def _init_tables(u_cap: int, i_cap: int) -> Tables:
+    return Tables(
+        user_ids=jnp.full((u_cap,), -1, jnp.int32),
+        item_ids=jnp.full((i_cap,), -1, jnp.int32),
+        user_freq=jnp.zeros((u_cap,), jnp.int32),
+        item_freq=jnp.zeros((i_cap,), jnp.int32),
+        user_ts=jnp.zeros((u_cap,), jnp.int32),
+        item_ts=jnp.zeros((i_cap,), jnp.int32),
+        clock=jnp.zeros((), jnp.int32),
+    )
+
+
+def init_disgd_state(u_cap: int, i_cap: int, k: int, dtype=jnp.float32) -> DisgdState:
+    return DisgdState(
+        tables=_init_tables(u_cap, i_cap),
+        user_vecs=jnp.zeros((u_cap, k), dtype),
+        item_vecs=jnp.zeros((i_cap, k), dtype),
+        rated=jnp.zeros((u_cap, i_cap), bool),
+    )
+
+
+def init_dics_state(u_cap: int, i_cap: int, dtype=jnp.float32) -> DicsState:
+    return DicsState(
+        tables=_init_tables(u_cap, i_cap),
+        co=jnp.zeros((i_cap, i_cap), dtype),
+        item_cnt=jnp.zeros((i_cap,), dtype),
+        rated=jnp.zeros((u_cap, i_cap), bool),
+    )
+
+
+def occupancy(tables: Tables):
+    """Paper's memory metric: number of live entries per table."""
+    return (
+        jnp.sum(tables.user_ids >= 0).astype(jnp.int32),
+        jnp.sum(tables.item_ids >= 0).astype(jnp.int32),
+    )

@@ -1,0 +1,92 @@
+"""Public entry points for the Pallas kernels.
+
+Each op pads to hardware-aligned shapes, dispatches to the Pallas kernel
+(interpret mode off-TPU so CPU validation exercises the same kernel body),
+and falls back to the jnp oracle where a kernel precondition cannot be met.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.isgd import isgd_update_pallas
+from repro.kernels.scoring import masked_scores_pallas
+from repro.kernels.swa_attention import swa_attention_pallas
+
+__all__ = ["on_tpu", "masked_scores", "isgd_update", "swa_attention"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x, axis: int, multiple: int, value=0):
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def masked_scores(u_vecs, item_vecs, mask, *, block_b: int = 128,
+                  block_i: int = 512, interpret: bool | None = None):
+    """Masked recommendation scoring: f32[B, I], -inf where masked."""
+    if interpret is None:
+        interpret = not on_tpu()
+    b, k = u_vecs.shape
+    i = item_vecs.shape[0]
+    block_b = min(block_b, max(8, 1 << (b - 1).bit_length()))
+    block_i = min(block_i, max(128, 1 << (i - 1).bit_length()))
+
+    up = _pad_to(_pad_to(u_vecs, 0, block_b), 1, 128)
+    ip = _pad_to(_pad_to(item_vecs, 0, block_i), 1, 128)
+    mp = _pad_to(_pad_to(mask, 0, block_b, value=False), 1, block_i, value=False)
+    out = masked_scores_pallas(
+        up, ip, mp, block_b=block_b, block_i=block_i, interpret=interpret
+    )
+    return out[:b, :i]
+
+
+def isgd_update(user_tab, item_tab, u_slots, i_slots, valid, *, eta: float,
+                lam: float, interpret: bool | None = None):
+    """Streaming ISGD micro-batch update; returns updated tables."""
+    if interpret is None:
+        interpret = not on_tpu()
+    k = user_tab.shape[1]
+    if k % 128 != 0:
+        # Lane-pad the factor dim; zero columns are invariant under the
+        # update (err uses the dot over true lanes only since pads are 0).
+        user_p = _pad_to(user_tab, 1, 128)
+        item_p = _pad_to(item_tab, 1, 128)
+        u_out, i_out = isgd_update_pallas(
+            user_p, item_p, u_slots, i_slots, valid, eta=eta, lam=lam,
+            interpret=interpret,
+        )
+        return u_out[:, :k], i_out[:, :k]
+    return isgd_update_pallas(
+        user_tab, item_tab, u_slots, i_slots, valid, eta=eta, lam=lam,
+        interpret=interpret,
+    )
+
+
+def swa_attention(q, k, v, *, window: int | None = None, causal: bool = True,
+                  block_q: int = 128, block_k: int = 128,
+                  interpret: bool | None = None):
+    """Flash sliding-window attention. q:[B,Hq,S,D], k/v:[B,Hkv,S,D]."""
+    if interpret is None:
+        interpret = not on_tpu()
+    s = q.shape[2]
+    if s < block_q or s % block_q or s % block_k:
+        # Small/ragged sequences: oracle is cheaper than a padded kernel.
+        return ref.swa_attention(q, k, v, window=window, causal=causal)
+    return swa_attention_pallas(
+        q, k, v, window=window, causal=causal,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )

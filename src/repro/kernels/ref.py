@@ -1,0 +1,86 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth the kernels are validated
+against (tests sweep shapes/dtypes with ``assert_allclose``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["masked_scores", "isgd_apply", "swa_attention"]
+
+
+def masked_scores(u_vecs, item_vecs, mask):
+    """Recommendation scoring oracle.
+
+    Args:
+      u_vecs: f32[B, k] user vectors.
+      item_vecs: f32[I, k] item matrix (one worker's local shard).
+      mask: bool[B, I] True where the item is a valid candidate for the row
+        (live slot, not yet rated by that user).
+
+    Returns:
+      f32[B, I] scores; ``-inf`` where masked.
+    """
+    scores = jnp.einsum(
+        "bk,ik->bi", u_vecs.astype(jnp.float32), item_vecs.astype(jnp.float32)
+    )
+    return jnp.where(mask, scores, -jnp.inf)
+
+
+def isgd_apply(user_tab, item_tab, u_slots, i_slots, valid, *, eta, lam):
+    """Sequential ISGD micro-batch oracle (paper Eqs. 3/4, err = 1 - u.i).
+
+    Processes events in order, in-place on the tables — the reference for
+    the streaming-update kernel.
+    """
+
+    def body(carry, ev):
+        u_tab, i_tab = carry
+        us, is_, v = ev
+        u = u_tab[us]
+        i = i_tab[is_]
+        err = 1.0 - jnp.dot(u, i)
+        u_new = u + eta * (err * i - lam * u)
+        i_new = i + eta * (err * u - lam * i)
+        u_tab = jnp.where(v, u_tab.at[us].set(u_new), u_tab)
+        i_tab = jnp.where(v, i_tab.at[is_].set(i_new), i_tab)
+        return (u_tab, i_tab), None
+
+    (user_tab, item_tab), _ = jax.lax.scan(
+        body, (user_tab, item_tab), (u_slots, i_slots, valid)
+    )
+    return user_tab, item_tab
+
+
+def swa_attention(q, k, v, *, window: int | None, causal: bool = True):
+    """Sliding-window (or full causal) attention oracle.
+
+    Args:
+      q: f32[B, Hq, S, D]
+      k, v: f32[B, Hkv, S, D] with Hq % Hkv == 0 (GQA).
+      window: attend to keys in ``(pos - window, pos]``; None = unbounded.
+      causal: apply the causal mask (False for encoder self-attention).
+
+    Returns f32[B, Hq, S, D].
+    """
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), kr.astype(jnp.float32)
+    ) / jnp.sqrt(jnp.float32(d))
+    qi = jnp.arange(s)[:, None]
+    ki = jnp.arange(s)[None, :]
+    m = jnp.ones((s, s), bool)
+    if causal:
+        m &= ki <= qi
+    if window is not None:
+        m &= ki > qi - window
+    logits = jnp.where(m, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vr.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,154 @@
+"""Pallas TPU kernel: flash sliding-window attention (prefill hot spot).
+
+Used by the SWA architectures (h2o-danube, hymba's attention heads) whose
+rolling-buffer KV cache is what lets ``long_500k`` run at all. Standard
+flash-attention-2 structure adapted to TPU:
+
+  * grid = (batch*q_heads, q_blocks, kv_blocks); the kv dimension is the
+    innermost (sequential) axis carrying the online-softmax state.
+  * Blocks of Q (bQ, D) / K,V (bK, D) in VMEM; QK^T and PV on the MXU with
+    fp32 accumulation; running (m, l, acc) in VMEM scratch.
+  * GQA without materializing repeated KV: the K/V BlockSpec index maps
+    divide the head index by the group size, so a KV head's block is read
+    once per Q-head group straight from HBM.
+  * Out-of-window KV blocks are masked; fully-out-of-window blocks are
+    skipped via ``pl.when`` (block-level sparsity — this is where the
+    sub-quadratic prefill comes from).
+
+Validated in interpret mode against ``ref.swa_attention``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["swa_attention_pallas"]
+
+NEG_INF = -1e30
+
+
+def _swa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                scale: float, window, causal: bool,
+                block_q: int, block_k: int, kv_steps: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    # Block-level skip: causal (k block entirely after q block) or window
+    # (k block entirely before the window of every q row in the block).
+    q_last = q_start + block_q - 1
+    relevant = jnp.bool_(True)
+    if causal:
+        relevant &= k_start <= q_last
+    if window is not None:
+        relevant &= k_start + block_k - 1 > q_last - window - (block_q - 1)
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[0, :, :]
+        k = k_ref[0, :, :]
+        v = v_ref[0, :, :]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (bQ, bK)
+
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = jnp.ones(s.shape, jnp.bool_)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_cur = jnp.max(s, axis=1)[:, None]
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        # Rows with no visible keys yet: keep everything zeroed.
+        p = jnp.where(m_new > NEG_INF / 2, p, 0.0)
+        l_new = alpha * l_prev + jnp.sum(p, axis=1)[:, None]
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(ki == kv_steps - 1)
+    def _finalize():
+        l = l_scr[...]
+        o_ref[0, :, :] = (
+            acc_scr[...] / jnp.where(l == 0.0, 1.0, l)
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "causal", "block_q", "block_k", "interpret"),
+)
+def swa_attention_pallas(
+    q, k, v, *, window: int | None = None, causal: bool = True,
+    block_q: int = 128, block_k: int = 128, interpret: bool = False,
+):
+    """See ``ref.swa_attention``. q: [B, Hq, S, D]; k, v: [B, Hkv, S, D]."""
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    assert hq % hkv == 0
+    group = hq // hkv
+    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
+
+    qr = q.reshape(b * hq, s, d)
+    kr = k.reshape(b * hkv, s, d)
+    vr = v.reshape(b * hkv, s, d)
+    kv_steps = s // block_k
+
+    kernel = functools.partial(
+        _swa_kernel,
+        scale=float(1.0 / (d ** 0.5)),
+        window=window,
+        causal=causal,
+        block_q=block_q,
+        block_k=block_k,
+        kv_steps=kv_steps,
+    )
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * hq, s // block_q, kv_steps),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec(
+                (1, block_k, d),
+                lambda bh, qi, ki, _g=group: (bh // _g, ki, 0),
+            ),
+            pl.BlockSpec(
+                (1, block_k, d),
+                lambda bh, qi, ki, _g=group: (bh // _g, ki, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(b, hq, s, d)

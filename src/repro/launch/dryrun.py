@@ -1,0 +1,467 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, plus the paper's own DISGD/DICS grid step.
+
+For every runnable combination this:
+  1. builds ShapeDtypeStruct stand-ins (params / optimizer / batch / caches
+     — zero allocation),
+  2. resolves PartitionSpecs through the logical-axis rules,
+  3. ``jax.jit(step).lower(...).compile()`` on the requested mesh,
+  4. records ``memory_analysis`` / ``cost_analysis`` / HLO-collective bytes
+     and the three roofline terms into a JSON report.
+
+Usage:
+  python -m repro.launch.dryrun --arch stablelm_3b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out reports/...json]
+  python -m repro.launch.dryrun --recsys [--multi-pod]
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.configs.shapes import microbatches_for, plan_for
+from repro.core import routing
+from repro.core.disgd import DisgdHyper
+from repro.core.pipeline import StreamConfig
+from repro.launch.mesh import make_production_mesh
+from repro.models import flags
+from repro.models import module as mod
+from repro.models.factory import build
+from repro.optim.adamw import AdamWState
+from repro.roofline import analyze_compiled
+from repro.roofline.analysis import HW
+from repro.sharding import specs as specs_lib
+from repro.sharding.ctx import use_mesh
+
+
+def _cast_tree(shapes, to=jnp.bfloat16):
+    """Serve-time params: float32 decls -> bf16 ShapeDtypeStructs."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, to if s.dtype == jnp.float32 else s.dtype
+        ),
+        shapes,
+    )
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _batch_specs(bundle, shape, mesh, overrides=None):
+    specs = bundle.input_specs(shape)
+    axes = bundle.input_axes(shape)
+    sh = {
+        k: NamedSharding(
+            mesh,
+            specs_lib.resolve_spec(axes[k], specs[k].shape, mesh,
+                                   specs_lib.ACT_RULES, overrides),
+        )
+        for k in specs
+    }
+    return specs, sh
+
+
+def _needs_seq_shard(cfg, mesh) -> bool:
+    return cfg.n_kv_heads % mesh.shape["model"] != 0
+
+
+def _cache_structs(bundle, cfg, shape, mesh, overrides=None):
+    seq_shard = _needs_seq_shard(cfg, mesh)
+    decls = bundle.cache_decls(shape.global_batch, shape.seq_len,
+                               seq_shard=seq_shard)
+    shapes = mod.param_shapes(decls)
+    specs = mod.map_decls(
+        lambda d: specs_lib.resolve_spec(d.axes, d.shape, mesh,
+                                         specs_lib.ACT_RULES, overrides),
+        decls,
+    )
+    return shapes, _ns(mesh, specs)
+
+
+def _mem_report(compiled) -> dict:
+    try:
+        m = compiled.memory_analysis()
+        return {
+            "argument_bytes": int(getattr(m, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(m, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(m, "temp_size_in_bytes", 0)),
+            "peak_bytes": int(getattr(m, "peak_memory_in_bytes", 0) or
+                              getattr(m, "temp_size_in_bytes", 0)),
+        }
+    except Exception as e:  # pragma: no cover - backend-specific
+        return {"error": str(e)}
+
+
+def _lower_one(bundle, cfg, shape, mesh, *, microbatches: int):
+    """Lower the right step for this shape; returns (lowered, model_flops)."""
+    decls = bundle.decls
+    ov = dict(cfg.sharding_overrides) or None
+    pspecs = specs_lib.param_specs(decls, mesh, overrides=ov)
+    pshard = _ns(mesh, pspecs)
+    pshapes = mod.param_shapes(decls)
+    batch_shapes, batch_shard = _batch_specs(bundle, shape, mesh, ov)
+    tokens = shape.global_batch * (
+        shape.seq_len if shape.kind != "decode" else 1
+    )
+    n_active = cfg.active_param_count()
+
+    if shape.kind == "train":
+        f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
+        opt_shapes = AdamWState(
+            m=jax.tree.map(f32, pshapes),
+            v=jax.tree.map(f32, pshapes),
+            count=jax.ShapeDtypeStruct((), jnp.int32),
+        )
+        opt_shard = AdamWState(m=pshard, v=pshard,
+                               count=NamedSharding(mesh, P()))
+        step_fn = partial(bundle.train_step, microbatches=microbatches)
+        jitted = jax.jit(
+            step_fn,
+            in_shardings=(pshard, opt_shard, batch_shard,
+                          NamedSharding(mesh, P())),
+            out_shardings=(pshard, opt_shard, None),
+        )
+        lowered = jitted.lower(pshapes, opt_shapes, batch_shapes,
+                               jax.ShapeDtypeStruct((), jnp.int32))
+        return lowered, 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        serve_shapes = _cast_tree(pshapes)
+        # Fresh closure per call: pjit caches on callable identity, which
+        # would silently return the unprobed executable for probe passes.
+        prefill_fn = lambda p, b: bundle.prefill(p, b)  # noqa: E731
+        jitted = jax.jit(prefill_fn, in_shardings=(pshard, batch_shard))
+        return jitted.lower(serve_shapes, batch_shapes), 2.0 * n_active * tokens
+    serve_shapes = _cast_tree(pshapes)
+    cache_shapes, cache_shard = _cache_structs(bundle, cfg, shape, mesh, ov)
+    decode_fn = lambda p, c, t: bundle.decode(p, c, t)  # noqa: E731
+    jitted = jax.jit(
+        decode_fn,
+        in_shardings=(pshard, cache_shard, batch_shard["tokens"]),
+        out_shardings=(None, cache_shard),
+    )
+    lowered = jitted.lower(serve_shapes, cache_shapes,
+                           batch_shapes["tokens"])
+    return lowered, 2.0 * n_active * tokens
+
+
+def _loop_structure(cfg, shape):
+    """Static loop nesting: [(kind, trip_count, ancestor_multiplier)].
+
+    ``ancestor_multiplier`` = product of enclosing loops' trip counts, used
+    to compose per-body costs into whole-step totals (see _probe_roofline).
+    """
+    entries = []
+    s = shape.seq_len
+    decode = shape.kind == "decode"
+    if cfg.family == "ssm":
+        p = cfg.xlstm.slstm_period
+        g = cfg.n_layers // p
+        entries.append(("groups", g, 1))
+        entries.append(("mlstm_inner", p - 1, g))
+        if not decode:
+            nc = s // min(cfg.xlstm.chunk, s)
+            entries.append(("mlstm_chunk", nc, g * (p - 1)))
+        return [(k, n, a) for k, n, a in entries if n > 1]
+    n_scan = cfg.n_layers - (
+        1 if (cfg.moe and cfg.moe.first_dense) else 0
+    )
+    entries.append(("layers", n_scan, 1))
+    if not decode:
+        n_chunks = s // min(cfg.q_chunk, s)
+        entries.append(("qchunk", n_chunks, n_scan))
+        if cfg.family == "hybrid":
+            nm = s // min(cfg.ssm.chunk, s)
+            entries.append(("mamba", nm, n_scan))
+    return [(k, n, a) for k, n, a in entries if n > 1]
+
+
+_METRIC_KEYS = ("flops", "hbm", "all-gather", "all-reduce", "reduce-scatter",
+                "all-to-all", "collective-permute")
+
+
+def _metrics_vector(compiled) -> np.ndarray:
+    from repro.roofline.analysis import collective_bytes
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    coll = collective_bytes(compiled.as_text())
+    return np.array([
+        float(cost.get("flops", 0.0)),
+        float(cost.get("bytes accessed", 0.0)),
+        *[float(coll[k]) for k in _METRIC_KEYS[2:]],
+    ])
+
+
+def _probe_roofline(bundle, cfg, shape, mesh, *, model_flops_chip: float,
+                    n_data: int, timing: dict):
+    """True whole-step roofline terms via unroll-probe algebra.
+
+    A = cost(all loops unroll=1); for each loop kind k with trip L_k and
+    ancestor multiplier M_k, a probe with unroll=2 emits
+    ``c_k = probe_copies(L_k)`` body copies, so
+
+        body_k = (P_k - A) / (c_k - 1)
+        True   = A + sum_k M_k * (L_k - 1) * body_k
+
+    (linear in every metric: FLOPs, bytes, per-collective bytes).
+    """
+    from repro.roofline.analysis import RooflineReport, HW
+
+    struct = _loop_structure(cfg, shape)
+
+    def compile_with(probes: dict):
+        t0 = time.perf_counter()
+        with use_mesh(mesh, dict(cfg.sharding_overrides) or None), \
+                flags.probe(probes):
+            lowered, _ = _lower_one(bundle, cfg, shape, mesh, microbatches=1)
+            compiled = lowered.compile()
+        timing[f"probe_{'base' if not probes else next(iter(probes))}_s"] = \
+            round(time.perf_counter() - t0, 2)
+        return _metrics_vector(compiled)
+
+    a = compile_with({})
+    total = a.copy()
+    for kind, trip, anc in struct:
+        copies = flags.probe_copies(trip, 2)
+        if copies <= 1:
+            continue
+        p = compile_with({kind: 2})
+        body = (p - a) / (copies - 1)
+        body = np.maximum(body, 0.0)  # guard compile noise
+        total += anc * (trip - 1) * body
+
+    flops, hbm = float(total[0]), float(total[1])
+    coll_detail = {k: float(v) for k, v in zip(_METRIC_KEYS[2:], total[2:])}
+    coll_detail["total"] = float(total[2:].sum())
+    extra = _slstm_flop_correction(cfg, shape, n_data)
+    flops += extra
+    hw = HW()
+    return RooflineReport(
+        flops=flops,
+        hbm_bytes=hbm,
+        coll_bytes=coll_detail["total"],
+        coll_detail=coll_detail,
+        compute_s=flops / hw.peak_flops,
+        memory_s=hbm / hw.hbm_bw,
+        collective_s=coll_detail["total"] / hw.link_bw,
+        model_flops=model_flops_chip,
+    ), extra
+
+
+def _slstm_flop_correction(cfg, shape, n_data: int) -> float:
+    """Closed-form FLOPs for the un-unrollable sLSTM time scan (per chip).
+
+    4 gates x (x W + h R) = 16 d^2 MAC-ish per token per sLSTM layer;
+    ~3x for fwd+bwd in training. HloCostAnalysis counts the scan body once,
+    so this is added to the analysis-mode total.
+    """
+    if cfg.family != "ssm":
+        return 0.0
+    n_slstm = cfg.n_layers // cfg.xlstm.slstm_period
+    tokens = shape.global_batch * (
+        shape.seq_len if shape.kind != "decode" else 1
+    )
+    shard = n_data if shape.global_batch % n_data == 0 else 1
+    mult = 3.0 if shape.kind == "train" else 1.0
+    return 16.0 * cfg.d_model ** 2 * (tokens / shard) * n_slstm * mult
+
+
+def lower_combo(arch_id: str, shape_name: str, *, multi_pod: bool = False,
+                overrides: dict | None = None, analysis: bool = True,
+                optimized: bool = False) -> dict:
+    """Lower+compile one (arch, shape) on the production mesh.
+
+    Two passes:
+      1. *production* — scans/loops intact: proves (e) lowering+compile,
+         reports memory_analysis (true buffer plan) and compile time.
+      2. *analysis*  — loops unrolled (flags.analysis), microbatches=1:
+         true whole-step FLOPs/bytes/collectives for the roofline.
+    """
+    cfg = get_config(arch_id)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    if optimized:
+        from repro.configs.optimized import apply_optimized
+        cfg = apply_optimized(cfg)
+    shape = SHAPES[shape_name]
+    plan = plan_for(cfg, shape)
+    report = {
+        "arch": arch_id, "shape": shape_name,
+        "mesh": "pod2x16x16" if multi_pod else "16x16",
+        "plan": plan,
+        "variant": "optimized" if optimized else "baseline",
+    }
+    if plan != "run":
+        return report
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    n_data = int(np.prod([mesh.shape[a] for a in specs_lib.data_axes(mesh)]))
+    bundle = build(cfg)
+    tokens = shape.global_batch * (
+        shape.seq_len if shape.kind != "decode" else 1
+    )
+    micro = (microbatches_for(cfg, shape, n_data)
+             if shape.kind == "train" else 1)
+    report["microbatches"] = micro
+
+    # Pass 1: production program (deliverable e).
+    t0 = time.perf_counter()
+    with use_mesh(mesh, dict(cfg.sharding_overrides) or None):
+        lowered, model_flops = _lower_one(bundle, cfg, shape, mesh,
+                                          microbatches=micro)
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+    report.update(
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        n_devices=n_dev,
+        params=cfg.param_count(),
+        active_params=cfg.active_param_count(),
+        tokens_per_step=tokens,
+        memory=_mem_report(compiled),
+    )
+
+    # Pass 2: unroll-probe analysis (true whole-step roofline terms).
+    mf_chip = model_flops / n_dev
+    if analysis:
+        try:
+            timing: dict = {}
+            roof, extra = _probe_roofline(
+                bundle, cfg, shape, mesh,
+                model_flops_chip=mf_chip, n_data=n_data, timing=timing,
+            )
+            if extra:
+                report["slstm_flop_correction"] = extra
+            report.update(timing)
+            report["analysis_mode"] = "unroll-probe"
+            report["loop_structure"] = _loop_structure(cfg, shape)
+        except Exception as e:
+            roof = analyze_compiled(compiled, model_flops_per_chip=mf_chip)
+            report["analysis_mode"] = (
+                f"FALLBACK loop-undercounted ({type(e).__name__}: {e})"
+            )
+    else:
+        roof = analyze_compiled(compiled, model_flops_per_chip=mf_chip)
+        report["analysis_mode"] = "loop-undercounted (analysis disabled)"
+
+    report["roofline"] = roof.row()
+    report["collectives"] = roof.coll_detail
+    return report
+
+
+def lower_recsys(*, multi_pod: bool = False, algorithm: str = "disgd") -> dict:
+    """Lower+compile the paper's S&R grid step under shard_map."""
+    from repro.core import distributed as dist
+    from repro.core.dics import DicsHyper
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_i = mesh.shape["model"]
+    g = int(np.prod([mesh.shape[a] for a in ("pod", "data")
+                     if a in mesh.shape]))
+    grid = routing.GridSpec(n_i, g - n_i)
+    if algorithm == "disgd":
+        hyper = DisgdHyper(k=32, u_cap=4096, i_cap=2048)
+    else:
+        hyper = DicsHyper(u_cap=1024, i_cap=512)
+    cfg = StreamConfig(algorithm=algorithm, grid=grid, micro_batch=65536,
+                       hyper=hyper)
+    cap = cfg.bucket_capacity
+
+    step = dist.make_grid_step(cfg, mesh)
+    states = jax.eval_shape(lambda: dist.init_grid_states(cfg, mesh))
+    ev = jax.ShapeDtypeStruct((n_i, g, cap), jnp.int32)
+    t0 = time.perf_counter()
+    lowered = step.lower(states, ev, ev)
+    compiled = lowered.compile()
+    roof = analyze_compiled(compiled)
+    return {
+        "arch": f"recsys_{algorithm}", "shape": f"stream_mb{cfg.micro_batch}",
+        "mesh": "pod2x16x16" if multi_pod else "16x16",
+        "plan": "run",
+        "grid": {"n_i": n_i, "g": g, "n_c": grid.n_c, "capacity": cap},
+        "compile_s": round(time.perf_counter() - t0, 2),
+        "memory": _mem_report(compiled),
+        "roofline": roof.row(),
+        "collectives": roof.coll_detail,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--recsys", action="store_true")
+    ap.add_argument("--recsys-algorithm", default="disgd")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--no-analysis", action="store_true",
+                    help="production compile only (no roofline probes)")
+    ap.add_argument("--optimized", action="store_true",
+                    help="apply the beyond-paper optimized presets")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    analysis = not args.no_analysis
+
+    assert len(jax.devices()) >= (512 if args.multi_pod else 256), (
+        "dryrun needs the forced host device count; do not strip XLA_FLAGS"
+    )
+
+    reports = []
+    if args.recsys:
+        r = lower_recsys(multi_pod=args.multi_pod,
+                         algorithm=args.recsys_algorithm)
+        print(json.dumps(r, indent=2))
+        reports.append(r)
+    elif args.all:
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                try:
+                    r = lower_combo(arch, shape, multi_pod=args.multi_pod,
+                                    analysis=analysis,
+                                    optimized=args.optimized)
+                except Exception as e:
+                    r = {"arch": arch, "shape": shape, "plan": "ERROR",
+                         "error": f"{type(e).__name__}: {e}",
+                         "traceback": traceback.format_exc()[-2000:]}
+                print(json.dumps({k: v for k, v in r.items()
+                                  if k != "traceback"}))
+                reports.append(r)
+                if args.out:
+                    with open(args.out, "w") as f:
+                        json.dump(reports, f, indent=2)
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all or --recsys"
+        r = lower_combo(args.arch, args.shape,
+                        multi_pod=args.multi_pod, analysis=analysis,
+                        optimized=args.optimized)
+        print(json.dumps(r, indent=2))
+        reports.append(r)
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(reports, f, indent=2)
+    failed = [r for r in reports if r.get("plan") == "ERROR"]
+    print(f"\n{len(reports)} combos, {len(failed)} errors")
+    raise SystemExit(1 if failed else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Production meshes.
+
+A function (not a module constant) so importing never touches jax device
+state — the dry-run sets XLA_FLAGS before any jax initialization.
+
+Single pod: (data=16, model=16) = 256 chips (TPU v5e-256).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the ``pod`` axis joins
+``data`` for batch/FSDP sharding — for the recommender this widens the
+paper's user-group axis (``w = 16`` in its ``n_c = n_i^2 + w*n_i`` knob).
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_cpu_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_cpu_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (host) devices exist — used in tests."""
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,283 @@
+"""Model factory: ``build(cfg)`` -> a ``ModelBundle`` with everything the
+launcher, dry-run, tests and examples need:
+
+  * parameter declarations / init / ShapeDtypeStructs,
+  * ``loss_fn`` (family-aware: LM CE, VLM text-CE, audio masked-prediction),
+  * ``train_step`` (grad-accumulation microbatching + AdamW),
+  * ``prefill`` (full-sequence forward -> last logits + decode caches),
+  * ``decode`` (one-token step -> greedy next token + caches),
+  * ``input_specs`` / ``cache_specs`` for the compile-only dry-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import InputShape
+from repro.models import module as mod
+from repro.models import transformer as tfm
+from repro.models.layers import attention as attn_lib
+from repro.optim import adamw_update, adamw_init
+from repro.sharding.ctx import shard_act
+
+__all__ = ["ModelBundle", "build"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelBundle:
+    cfg: ArchConfig
+    decls: dict
+    init: Callable            # key -> params
+    loss_fn: Callable         # (params, batch) -> (loss, metrics)
+    train_step: Callable      # (params, opt, batch, step, micro) -> ...
+    prefill: Callable         # (params, batch) -> (logits_last, caches)
+    decode: Callable          # (params, caches, tokens) -> (next, caches)
+    input_specs: Callable     # (shape) -> batch of ShapeDtypeStruct
+    input_axes: Callable      # (shape) -> batch of logical-axes tuples
+    cache_decls: Callable     # (batch, context_len, seq_shard) -> decl tree
+
+
+# ---------------------------------------------------------------------------
+# Family-specific input embedding + loss
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(params, batch, cfg):
+    """Returns (x, positions, label_info) for a full-sequence pass."""
+    if cfg.audio_frontend:
+        frames = batch["frames"]
+        x = frames.astype(jnp.bfloat16) @ params["frame_proj"].astype(jnp.bfloat16)
+        mask = batch["mask"]
+        x = jnp.where(
+            mask[..., None], params["mask_embed"].astype(x.dtype), x
+        )
+        positions = jnp.arange(frames.shape[1])
+        return x, positions, {"targets": batch["targets"], "mask": mask}
+
+    if cfg.vlm_patches:
+        tok_emb = tfm.embed_tokens(params, batch["tokens"], cfg)
+        p = batch["patches"].astype(jnp.bfloat16)
+        p = jax.nn.gelu(p @ params["projector"]["w1"].astype(jnp.bfloat16))
+        p = p @ params["projector"]["w2"].astype(jnp.bfloat16)
+        x = jnp.concatenate([p, tok_emb], axis=1)
+        positions = jnp.arange(x.shape[1])
+        # Labels: next-token over the text region only.
+        return x, positions, {"tokens": batch["tokens"],
+                              "n_patches": cfg.vlm_patches}
+
+    tokens = batch["tokens"]
+    x = tfm.embed_tokens(params, tokens, cfg)
+    positions = jnp.arange(tokens.shape[1])
+    return x, positions, {"tokens": tokens}
+
+
+def _ce(logits, targets, mask, vocab: int):
+    """Masked CE over a padded-vocab logit tensor (f32, stable)."""
+    logits = logits.astype(jnp.float32)
+    pad = logits.shape[-1] - vocab
+    if pad:
+        neg = jnp.full((pad,), -1e30, jnp.float32)
+        logits = logits.at[..., vocab:].set(neg)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    return nll.sum() / denom
+
+
+def _loss(params, batch, cfg):
+    x, positions, info = _embed_inputs(params, batch, cfg)
+    h, _, aux = tfm.forward_full(params, x, positions, cfg)
+    logits = tfm.logits_from_hidden(params, h, cfg)
+
+    if cfg.audio_frontend:
+        mask = info["mask"].astype(jnp.float32)
+        loss = _ce(logits, info["targets"], mask, cfg.vocab)
+    elif cfg.vlm_patches:
+        np_ = info["n_patches"]
+        text_logits = logits[:, np_:-1]
+        targets = info["tokens"][:, 1:]
+        mask = jnp.ones(targets.shape, jnp.float32)
+        loss = _ce(text_logits, targets, mask, cfg.vocab)
+    else:
+        toks = info["tokens"]
+        loss = _ce(logits[:, :-1], toks[:, 1:],
+                   jnp.ones((toks.shape[0], toks.shape[1] - 1), jnp.float32),
+                   cfg.vocab)
+
+    total = loss + 0.01 * aux
+    return total, {"ce": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Train / serve steps
+# ---------------------------------------------------------------------------
+
+
+def _train_step(params, opt, batch, step, cfg, *, microbatches: int = 1,
+                peak_lr: float = 3e-4):
+    loss_grad = jax.value_and_grad(partial(_loss, cfg=cfg), has_aux=True)
+
+    if microbatches == 1:
+        (loss, metrics), grads = loss_grad(params, batch)
+    else:
+        def split(x):
+            b = x.shape[0]
+            assert b % microbatches == 0, (b, microbatches)
+            return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+        mbs = jax.tree.map(split, batch)
+
+        def acc_body(carry, mb):
+            g_acc, l_acc = carry
+            (l, _), g = loss_grad(params, mb)
+            return (jax.tree.map(jnp.add, g_acc, g), l_acc + l), None
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+        (grads, loss), _ = jax.lax.scan(
+            acc_body, (zeros, jnp.float32(0.0)), mbs
+        )
+        grads = jax.tree.map(lambda g: g / microbatches, grads)
+        loss = loss / microbatches
+        metrics = {"ce": loss, "aux": jnp.float32(0.0)}
+
+    lr = peak_lr  # schedules applied by the trainer loop via `step`
+    new_params, new_opt, gnorm = adamw_update(grads, opt, params, lr=lr)
+    metrics = dict(metrics, loss=loss, gnorm=gnorm)
+    return new_params, new_opt, metrics
+
+
+def _prefill(params, batch, cfg):
+    """Full-context forward; returns (last-position logits, decode caches)."""
+    x, positions, _ = _embed_inputs(params, batch, cfg)
+    h, caches, _ = tfm.forward_full(params, x, positions, cfg,
+                                    collect_cache=True)
+    logits = tfm.logits_from_hidden(params, h[:, -1:], cfg)
+
+    if cfg.family == "ssm":
+        return logits, caches
+    s = x.shape[1]
+    caches0, stacked = caches
+    convert0 = None
+    if caches0 is not None:
+        convert0 = _to_decode_cache(caches0, cfg, s, stacked_layers=False)
+    return logits, (convert0, _to_decode_cache(stacked, cfg, s,
+                                               stacked_layers=True))
+
+
+def _to_decode_cache(entries, cfg, s: int, *, stacked_layers: bool):
+    """Prefill K/V (full sequence) -> decode cache (maybe rolling buffer)."""
+    clen = tfm._attn_cache_len(cfg, s)
+    k, v = entries["k"], entries["v"]
+    seq_ax = 3 if stacked_layers else 2  # [L?, B, Hkv, S, Dh]
+
+    if clen < s:
+        # Rolling buffer: keep the last `window` positions; slot layout must
+        # match decode's  slot = pos % window.
+        start = s - clen
+        k = jax.lax.slice_in_dim(k, start, s, axis=seq_ax)
+        v = jax.lax.slice_in_dim(v, start, s, axis=seq_ax)
+        pos_lin = jnp.arange(start, s, dtype=jnp.int32)
+        roll = (-(start % clen)) % clen
+        k = jnp.roll(k, roll, axis=seq_ax)
+        v = jnp.roll(v, roll, axis=seq_ax)
+        pos_lin = jnp.roll(pos_lin, roll)
+    else:
+        pos_lin = jnp.arange(s, dtype=jnp.int32)
+
+    b = k.shape[1] if stacked_layers else k.shape[0]
+    pos = jnp.broadcast_to(pos_lin, (b, clen))
+    length = jnp.full((b,), s, jnp.int32)
+    out = {"k": k.astype(jnp.bfloat16), "v": v.astype(jnp.bfloat16)}
+    if stacked_layers:
+        nl = k.shape[0]
+        out["pos"] = jnp.broadcast_to(pos, (nl, b, clen))
+        out["length"] = jnp.broadcast_to(length, (nl, b))
+    else:
+        out["pos"], out["length"] = pos, length
+    if "mamba" in entries:
+        out["mamba"] = entries["mamba"]
+    return out
+
+
+def _decode(params, caches, tokens, cfg):
+    """tokens: [B, 1] -> (next_token [B, 1], new caches)."""
+    x = tfm.embed_tokens(params, tokens, cfg)
+    h, caches = tfm.decode_step(params, x, cfg, caches)
+    logits = tfm.logits_from_hidden(params, h, cfg)
+    logits = logits[..., : cfg.vocab]
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32), caches
+
+
+# ---------------------------------------------------------------------------
+# Input specs (dry-run stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+
+def _input_arrays(cfg, shape: InputShape):
+    """(specs, axes) for one micro/global batch of this input shape."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        return (
+            {"tokens": ((b, 1), jnp.int32)},
+            {"tokens": ("batch", "seq")},
+        )
+    if cfg.audio_frontend:
+        return (
+            {
+                "frames": ((b, s, cfg.d_frame), jnp.float32),
+                "mask": ((b, s), jnp.bool_),
+                "targets": ((b, s), jnp.int32),
+            },
+            {
+                "frames": ("batch", "seq", None),
+                "mask": ("batch", "seq"),
+                "targets": ("batch", "seq"),
+            },
+        )
+    if cfg.vlm_patches:
+        return (
+            {
+                "tokens": ((b, s - cfg.vlm_patches), jnp.int32),
+                "patches": ((b, cfg.vlm_patches, cfg.vlm_d_vision),
+                            jnp.float32),
+            },
+            {
+                "tokens": ("batch", "seq"),
+                "patches": ("batch", "seq", None),
+            },
+        )
+    return {"tokens": ((b, s), jnp.int32)}, {"tokens": ("batch", "seq")}
+
+
+def build(cfg: ArchConfig) -> ModelBundle:
+    decls = tfm.model_decl(cfg)
+
+    def input_specs(shape: InputShape):
+        arrs, _ = _input_arrays(cfg, shape)
+        return {k: jax.ShapeDtypeStruct(sh, dt) for k, (sh, dt) in arrs.items()}
+
+    def input_axes(shape: InputShape):
+        _, axes = _input_arrays(cfg, shape)
+        return axes
+
+    return ModelBundle(
+        cfg=cfg,
+        decls=decls,
+        init=partial(mod.init_params, decls),
+        loss_fn=partial(_loss, cfg=cfg),
+        train_step=partial(_train_step, cfg=cfg),
+        prefill=partial(_prefill, cfg=cfg),
+        decode=partial(_decode, cfg=cfg),
+        input_specs=input_specs,
+        input_axes=input_axes,
+        cache_decls=partial(tfm.cache_decls, cfg),
+    )

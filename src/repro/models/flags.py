@@ -1,0 +1,54 @@
+"""Trace-time loop-unroll controls for cost analysis.
+
+XLA's HloCostAnalysis counts a ``while``-loop body exactly once, so a
+production lowering (loops intact) under-reports FLOPs/bytes/collectives.
+Full unrolling is exact but compiles for minutes-to-hours per combo on one
+CPU core. Instead the dry-run uses *probe* lowerings: each structural loop
+kind can be unrolled by a small factor; ``lax.scan(unroll=u)`` emits
+``u + (L mod u)`` copies of the body in the HLO, so two compiles solve for
+the per-body cost exactly, and known static trip counts reconstruct the
+true totals (see launch/dryrun.py `_probe_roofline`).
+
+Loop kinds: "layers" (decoder stack scan), "qchunk" (chunked attention),
+"mamba" (SSM chunk scan), "groups"/"mlstm_inner"/"mlstm_chunk" (xLSTM).
+The sLSTM time scan is sequential math (not structural) and is corrected
+in closed form.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+_UNROLL: list[dict] = [{}]
+_FULL = [False]
+
+
+def unroll_factor(kind: str, length: int) -> int:
+    if _FULL[0]:
+        return max(1, length)
+    return min(max(1, _UNROLL[0].get(kind, 1)), max(1, length))
+
+
+def analysis_mode() -> bool:
+    """True while any probe/full unrolling is active."""
+    return _FULL[0] or bool(_UNROLL[0])
+
+
+@contextlib.contextmanager
+def probe(factors: dict | None = None, *, full: bool = False):
+    prev, prev_full = _UNROLL[0], _FULL[0]
+    _UNROLL[0] = dict(factors or {})
+    _FULL[0] = full
+    try:
+        yield
+    finally:
+        _UNROLL[0], _FULL[0] = prev, prev_full
+
+
+def probe_copies(length: int, factor: int = 2) -> int:
+    """Number of body copies emitted for scan(unroll=factor) (measured
+    JAX behavior: ``factor + (length % factor)`` when length > factor,
+    else ``length``)."""
+    if length <= factor:
+        return length
+    return factor + (length % factor)

@@ -1,0 +1,200 @@
+"""Attention: GQA/MQA/MHA with chunked (flash-style) execution in pure JAX.
+
+Memory discipline comes from *q-chunking*: a ``lax.scan`` over query blocks
+materializes at most ``(B, H, q_chunk, slab)`` logits at a time, where the
+KV ``slab`` is the full sequence for global attention or a
+``window + q_chunk`` slice for sliding-window attention — making SWA
+prefill O(S * window) compute AND memory (this is what lets 32k prefill
+and 500k-context decode lower within HBM). The Pallas flash kernel
+(`repro.kernels.swa_attention`) is the TPU-optimized form of the same
+schedule; this XLA version is used under jit/GSPMD where interpret-mode
+Pallas cannot lower.
+
+Decode uses either a full cache (one new token attends the whole prefix)
+or a rolling buffer of ``window`` slots for SWA architectures.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import flags
+from repro.models.module import ParamDecl
+from repro.models.layers.rope import apply_rope
+from repro.sharding.ctx import shard_act
+
+__all__ = ["attn_decl", "attention", "decode_attention", "KVCache",
+           "init_cache", "cache_decl"]
+
+NEG_INF = -1e30
+
+
+def attn_decl(cfg) -> dict:
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "wq": ParamDecl((d, h, dh), ("embed", "heads", "head_dim")),
+        "wk": ParamDecl((d, kv, dh), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamDecl((d, kv, dh), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamDecl((h, dh, d), ("heads", "head_dim", "embed")),
+    }
+
+
+class KVCache(NamedTuple):
+    k: jax.Array          # [B, Hkv, C, Dh] (roped)
+    v: jax.Array          # [B, Hkv, C, Dh]
+    pos: jax.Array        # [B, C] absolute position per slot, -1 = empty
+    length: jax.Array     # [B] next absolute position
+
+
+def cache_decl(cfg, batch: int, cache_len: int, *, seq_shard: bool, dtype="bfloat16"):
+    """Cache ShapeDtypeStruct + logical axes for sharding/dry-run."""
+    kv, dh = cfg.n_kv_heads, cfg.head_dim
+    seq_axis = "cache_seq" if seq_shard else "seq"
+    return {
+        "k": ParamDecl((batch, kv, cache_len, dh),
+                       ("batch", "kv_heads", seq_axis, "head_dim"),
+                       init="zeros", dtype=dtype),
+        "v": ParamDecl((batch, kv, cache_len, dh),
+                       ("batch", "kv_heads", seq_axis, "head_dim"),
+                       init="zeros", dtype=dtype),
+        "pos": ParamDecl((batch, cache_len), ("batch", seq_axis),
+                         init="zeros", dtype="int32"),
+        "length": ParamDecl((batch,), ("batch",), init="zeros", dtype="int32"),
+    }
+
+
+def init_cache(cfg, batch: int, cache_len: int, dtype=jnp.bfloat16) -> KVCache:
+    kv, dh = cfg.n_kv_heads, cfg.head_dim
+    return KVCache(
+        k=jnp.zeros((batch, kv, cache_len, dh), dtype),
+        v=jnp.zeros((batch, kv, cache_len, dh), dtype),
+        pos=jnp.full((batch, cache_len), -1, jnp.int32),
+        length=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def _qkv(params, x, positions, cfg):
+    q = jnp.einsum("bsd,dhk->bhsk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bhsk", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bhsk", x, params["wv"].astype(x.dtype))
+    q = apply_rope(q, positions, theta=cfg.rope_theta, rope_pct=cfg.rope_pct)
+    k = apply_rope(k, positions, theta=cfg.rope_theta, rope_pct=cfg.rope_pct)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, scale):
+    """q: [B,G,Hkv,qc,Dh]; k/v: [B,Hkv,slab,Dh]; mask: [B,1,1,qc,slab]."""
+    logits = jnp.einsum(
+        "bghsk,bhtk->bghst", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    logits = jnp.where(mask, logits, NEG_INF)
+    # Guard fully-masked rows (can occur on padded chunks).
+    p = jax.nn.softmax(logits, axis=-1)
+    p = jnp.where(jnp.any(mask, axis=-1, keepdims=True), p, 0.0)
+    return jnp.einsum("bghst,bhtk->bghsk", p, v.astype(jnp.float32))
+
+
+def attention(params, x, positions, cfg, *, window=None, causal=None):
+    """Full-sequence attention (train / prefill). x: [B, S, D].
+
+    Returns (y, (k, v)) — k/v returned for prefill cache population.
+    """
+    window = cfg.window if window is None else window
+    causal = cfg.causal if causal is None else causal
+    b, s, d = x.shape
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = h // hkv
+    scale = dh ** -0.5
+
+    q, k, v = _qkv(params, x, positions, cfg)
+    # Logical constraints: heads shard over `model` where the head count
+    # divides it; otherwise an arch can seq-shard attention instead
+    # (context parallelism) via sharding_overrides {"seq": ("model",)} —
+    # how hymba's 25-head attention avoids 16x replication.
+    q = shard_act(q, ("batch", "heads", "seq", "head_dim"))
+    k = shard_act(k, ("batch", "kv_heads", "seq", "head_dim"))
+    v = shard_act(v, ("batch", "kv_heads", "seq", "head_dim"))
+    qg = q.reshape(b, hkv, g, s, dh).transpose(0, 2, 1, 3, 4)  # [B,G,Hkv,S,Dh]
+
+    qc = min(cfg.q_chunk, s)
+    while s % qc:  # largest divisor of s not exceeding q_chunk
+        qc -= 1
+    n_chunks = s // qc
+    slab = s if window is None else min(s, window + qc)
+
+    def chunk_fn(ci):
+        q_start = ci * qc
+        qch = jax.lax.dynamic_slice_in_dim(qg, q_start, qc, axis=3)
+        if window is None:
+            kslab, vslab = k, v
+            k_start = 0
+        else:
+            k_start = jnp.clip(q_start + qc - slab, 0, s - slab)
+            kslab = jax.lax.dynamic_slice_in_dim(k, k_start, slab, axis=2)
+            vslab = jax.lax.dynamic_slice_in_dim(v, k_start, slab, axis=2)
+        qpos = q_start + jnp.arange(qc)
+        kpos = k_start + jnp.arange(slab)
+        m = jnp.ones((qc, slab), bool)
+        if causal:
+            m &= kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            m &= kpos[None, :] > qpos[:, None] - window
+        mask = m[None, None, None]
+        return _sdpa(qch, kslab, vslab, mask, scale)  # [B,G,Hkv,qc,Dh]
+
+    if n_chunks == 1:
+        out = chunk_fn(jnp.int32(0))
+    else:
+        chunk = jax.checkpoint(chunk_fn) if cfg.remat else chunk_fn
+        _, out = jax.lax.scan(
+            lambda carry, ci: (carry, chunk(ci)),
+            None,
+            jnp.arange(n_chunks, dtype=jnp.int32),
+            unroll=flags.unroll_factor("qchunk", n_chunks),
+        )
+        # [n_chunks, B, G, Hkv, qc, Dh] -> [B, G, Hkv, S, Dh]
+        out = jnp.moveaxis(out, 0, 3).reshape(b, g, hkv, s, dh)
+
+    out = out.transpose(0, 2, 1, 3, 4).reshape(b, h, s, dh)
+    y = jnp.einsum("bhsk,hkd->bsd", out.astype(x.dtype), params["wo"].astype(x.dtype))
+    return y, (k, v)
+
+
+def decode_attention(params, x, cache: KVCache, cfg):
+    """Single-token decode step. x: [B, 1, D]. Returns (y, new_cache).
+
+    The cache stores *roped* keys. For SWA the cache is a rolling buffer of
+    ``window`` slots (slot = pos % window); otherwise it is the full
+    context. Slot positions are tracked explicitly so masking is exact
+    regardless of buffer wraparound.
+    """
+    b, _, d = x.shape
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = h // hkv
+    scale = dh ** -0.5
+    cache_len = cache.k.shape[2]
+
+    positions = cache.length[:, None]  # [B, 1]
+    q, k_new, v_new = _qkv(params, x, positions, cfg)
+
+    slot = (cache.length % cache_len)  # [B]
+    bidx = jnp.arange(b)
+    k = cache.k.at[bidx, :, slot].set(k_new[:, :, 0].astype(cache.k.dtype))
+    v = cache.v.at[bidx, :, slot].set(v_new[:, :, 0].astype(cache.v.dtype))
+    pos = cache.pos.at[bidx, slot].set(cache.length)
+
+    valid = pos >= 0  # [B, C]
+    if cfg.window is not None:
+        valid &= pos > (cache.length[:, None] - cfg.window)
+    valid &= pos <= cache.length[:, None]
+
+    qg = q.reshape(b, hkv, g, 1, dh).transpose(0, 2, 1, 3, 4)
+    mask = valid[:, None, None, None, :]  # [B,1,1,1,C]
+    out = _sdpa(qg, k, v, mask, scale)    # [B,G,Hkv,1,Dh]
+    out = out.transpose(0, 2, 1, 3, 4).reshape(b, h, 1, dh)
+    y = jnp.einsum("bhsk,hkd->bsd", out.astype(x.dtype), params["wo"].astype(x.dtype))
+    new_cache = KVCache(k=k, v=v, pos=pos, length=cache.length + 1)
+    return y, new_cache

@@ -1,0 +1,171 @@
+"""Mamba-style selective SSM (hymba's parallel-head SSM branch).
+
+TPU adaptation of the CUDA selective-scan: the recurrence
+``s_t = a_t * s_{t-1} + b_t`` (with input-dependent ``a = exp(dt*A)``,
+``b = dt * B * x``) is a first-order linear recurrence, so it runs as a
+*chunked associative scan*: ``lax.scan`` over sequence chunks (bounding
+the materialized state history to ``chunk * d_inner * N`` in VMEM-scale
+blocks) with ``lax.associative_scan`` inside each chunk (log-depth, maps
+onto the VPU rather than emulating warp shuffles). Decode is the exact
+single-step recurrence on a carried ``[B, d_inner, N]`` state.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import flags
+from repro.models.module import ParamDecl
+
+__all__ = ["mamba_decl", "mamba_scan", "mamba_decode_step", "MambaState",
+           "init_mamba_state", "mamba_state_decl"]
+
+
+class MambaState(NamedTuple):
+    ssm: jax.Array   # [B, d_inner, N]
+    conv: jax.Array  # [B, conv_width - 1, d_inner]
+
+
+def _dims(cfg):
+    d_inner = cfg.ssm.expand * cfg.d_model
+    dt_rank = math.ceil(cfg.d_model / 16)
+    return d_inner, dt_rank, cfg.ssm.state_dim, cfg.ssm.conv_width
+
+
+def mamba_decl(cfg) -> dict:
+    d = cfg.d_model
+    d_inner, dt_rank, n, cw = _dims(cfg)
+    return {
+        "w_in": ParamDecl((d, 2 * d_inner), ("embed", "inner")),
+        "conv_w": ParamDecl((cw, d_inner), ("conv", "inner"), scale=0.5),
+        "conv_b": ParamDecl((d_inner,), ("inner",), init="zeros"),
+        "w_x": ParamDecl((d_inner, dt_rank + 2 * n), ("inner", None)),
+        "w_dt": ParamDecl((dt_rank, d_inner), (None, "inner")),
+        "b_dt": ParamDecl((d_inner,), ("inner",), init="zeros"),
+        "log_a": ParamDecl((d_inner, n), ("inner", "state"), init="normal",
+                           scale=0.5),
+        "d_skip": ParamDecl((d_inner,), ("inner",), init="ones"),
+        "w_out": ParamDecl((d_inner, d), ("inner", "embed")),
+    }
+
+
+def mamba_state_decl(cfg, batch: int, dtype="float32") -> dict:
+    d_inner, _, n, cw = _dims(cfg)
+    return {
+        "ssm": ParamDecl((batch, d_inner, n), ("batch", "inner", "state"),
+                         init="zeros", dtype=dtype),
+        "conv": ParamDecl((batch, cw - 1, d_inner), ("batch", None, "inner"),
+                          init="zeros", dtype=dtype),
+    }
+
+
+def init_mamba_state(cfg, batch: int, dtype=jnp.float32) -> MambaState:
+    d_inner, _, n, cw = _dims(cfg)
+    return MambaState(
+        ssm=jnp.zeros((batch, d_inner, n), dtype),
+        conv=jnp.zeros((batch, cw - 1, d_inner), dtype),
+    )
+
+
+def _split_proj(params, x, cfg):
+    """Common input path: in-proj -> (xi, z); returns pre-conv xi and gate z."""
+    d_inner, _, _, _ = _dims(cfg)
+    xz = x @ params["w_in"].astype(x.dtype)
+    return xz[..., :d_inner], xz[..., d_inner:]
+
+
+def _ssm_coeffs(params, xc, cfg):
+    """Input-dependent (a, b, c) from the conv output. xc: [B, S, d_inner]."""
+    d_inner, dt_rank, n, _ = _dims(cfg)
+    proj = xc @ params["w_x"].astype(xc.dtype)
+    dt_in = proj[..., :dt_rank]
+    b_in = proj[..., dt_rank:dt_rank + n].astype(jnp.float32)      # [B,S,N]
+    c_in = proj[..., dt_rank + n:].astype(jnp.float32)             # [B,S,N]
+    dt = jax.nn.softplus(
+        dt_in.astype(jnp.float32) @ params["w_dt"].astype(jnp.float32)
+        + params["b_dt"].astype(jnp.float32)
+    )                                                               # [B,S,d_inner]
+    a = -jnp.exp(params["log_a"].astype(jnp.float32))               # [d_inner,N]
+    da = jnp.exp(dt[..., None] * a)                                 # [B,S,d_inner,N]
+    db = dt[..., None] * b_in[..., None, :] * xc.astype(jnp.float32)[..., None]
+    return da, db, c_in
+
+
+def _causal_conv(params, xi, cfg, history=None):
+    """Depthwise causal conv1d. xi: [B, S, d_inner]."""
+    _, _, _, cw = _dims(cfg)
+    if history is None:
+        pad = jnp.zeros((xi.shape[0], cw - 1, xi.shape[2]), xi.dtype)
+    else:
+        pad = history.astype(xi.dtype)
+    xp = jnp.concatenate([pad, xi], axis=1)  # [B, S+cw-1, d_inner]
+    w = params["conv_w"].astype(xi.dtype)    # [cw, d_inner]
+    out = sum(
+        xp[:, i : i + xi.shape[1], :] * w[i][None, None, :] for i in range(cw)
+    )
+    out = out + params["conv_b"].astype(xi.dtype)
+    new_hist = xp[:, -(cw - 1):, :] if cw > 1 else pad
+    return jax.nn.silu(out), new_hist
+
+
+def mamba_scan(params, x, cfg, state: MambaState | None = None):
+    """Full-sequence selective scan. x: [B, S, D] -> (y, final MambaState)."""
+    b, s, _ = x.shape
+    d_inner, _, n, cw = _dims(cfg)
+    chunk = min(cfg.ssm.chunk, s)
+    while s % chunk:  # largest divisor of s not exceeding the chunk size
+        chunk -= 1
+
+    if state is None:
+        state = init_mamba_state(cfg, b)
+
+    xi, z = _split_proj(params, x, cfg)
+    xc, conv_hist = _causal_conv(params, xi, cfg, state.conv)
+
+    scan_dtype = jnp.dtype(cfg.ssm.scan_dtype)
+
+    def chunk_body(carry, xc_c):
+        # Coefficients are computed per chunk: materializing the full-seq
+        # [B, S, d_inner, N] (da, db) tensors dominated HBM traffic and
+        # confused GSPMD through the reshape (see EXPERIMENTS.md §Perf).
+        da_c, db_c, c_c = _ssm_coeffs(params, xc_c, cfg)
+        da_c = da_c.astype(scan_dtype)
+        db_c = db_c.astype(scan_dtype)
+
+        def op(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, bl * ar + br
+
+        a_cum, s_cum = jax.lax.associative_scan(op, (da_c, db_c), axis=1)
+        states = (a_cum.astype(jnp.float32) * carry[:, None]
+                  + s_cum.astype(jnp.float32))         # [B,chunk,d_inner,N]
+        y = jnp.einsum("bsdn,bsn->bsd", states, c_c)   # [B,chunk,d_inner]
+        return states[:, -1], y
+
+    blocks = xc.reshape(b, s // chunk, chunk, d_inner).swapaxes(0, 1)
+    final, ys = jax.lax.scan(chunk_body, state.ssm.astype(jnp.float32), blocks,
+                             unroll=flags.unroll_factor("mamba", s // chunk))
+    y = ys.swapaxes(0, 1).reshape(b, s, d_inner)
+
+    y = y + params["d_skip"].astype(jnp.float32) * xc.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = y @ params["w_out"].astype(x.dtype)
+    return out, MambaState(ssm=final, conv=conv_hist)
+
+
+def mamba_decode_step(params, x, cfg, state: MambaState):
+    """Single-token step. x: [B, 1, D] -> (y, new state)."""
+    xi, z = _split_proj(params, x, cfg)
+    xc, conv_hist = _causal_conv(params, xi, cfg, state.conv)
+    da, db, c_in = _ssm_coeffs(params, xc, cfg)
+    new_ssm = da[:, 0] * state.ssm.astype(jnp.float32) + db[:, 0]
+    y = jnp.einsum("bdn,bn->bd", new_ssm, c_in[:, 0])[:, None, :]
+    y = y + params["d_skip"].astype(jnp.float32) * xc.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = y @ params["w_out"].astype(x.dtype)
+    return out, MambaState(ssm=new_ssm, conv=conv_hist)

@@ -1,0 +1,40 @@
+"""Feed-forward layers: SwiGLU (decoder zoo) and GeLU MLP (hubert)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.module import ParamDecl
+
+__all__ = ["swiglu_decl", "swiglu", "gelu_mlp_decl", "gelu_mlp"]
+
+
+def swiglu_decl(d: int, d_ff: int) -> dict:
+    return {
+        "w_gate": ParamDecl((d, d_ff), ("embed", "ff")),
+        "w_up": ParamDecl((d, d_ff), ("embed", "ff")),
+        "w_down": ParamDecl((d_ff, d), ("ff", "embed")),
+    }
+
+
+def swiglu(params, x):
+    h = jax.nn.silu(x @ params["w_gate"].astype(x.dtype))
+    h = h * (x @ params["w_up"].astype(x.dtype))
+    return h @ params["w_down"].astype(x.dtype)
+
+
+def gelu_mlp_decl(d: int, d_ff: int) -> dict:
+    return {
+        "w_in": ParamDecl((d, d_ff), ("embed", "ff")),
+        "b_in": ParamDecl((d_ff,), ("ff",), init="zeros"),
+        "w_out": ParamDecl((d_ff, d), ("ff", "embed")),
+        "b_out": ParamDecl((d,), ("embed",), init="zeros"),
+    }
+
+
+def gelu_mlp(params, x):
+    h = jax.nn.gelu(
+        x @ params["w_in"].astype(x.dtype) + params["b_in"].astype(x.dtype)
+    )
+    return h @ params["w_out"].astype(x.dtype) + params["b_out"].astype(x.dtype)

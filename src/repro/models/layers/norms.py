@@ -1,0 +1,39 @@
+"""Normalization layers (pure functions + ParamDecls)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.module import ParamDecl
+
+__all__ = ["rmsnorm_decl", "rmsnorm", "layernorm_decl", "layernorm"]
+
+
+def rmsnorm_decl(d: int) -> dict:
+    return {"scale": ParamDecl((d,), ("embed",), init="ones")}
+
+
+def rmsnorm(params, x, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps) * params["scale"].astype(jnp.float32)
+    return y.astype(dtype)
+
+
+def layernorm_decl(d: int) -> dict:
+    return {
+        "scale": ParamDecl((d,), ("embed",), init="ones"),
+        "bias": ParamDecl((d,), ("embed",), init="zeros"),
+    }
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(dtype)

@@ -1,0 +1,40 @@
+"""Rotary position embeddings (with partial-rotary support)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["apply_rope"]
+
+
+def apply_rope(x, positions, *, theta: float = 10_000.0, rope_pct: float = 1.0):
+    """Apply RoPE to ``x``: [..., S, D] with ``positions``: [..., S] or [S].
+
+    ``rope_pct`` < 1 rotates only the leading fraction of the head dim
+    (stablelm-2 style); the remainder passes through.
+    """
+    d = x.shape[-1]
+    d_rot = int(d * rope_pct)
+    d_rot -= d_rot % 2
+    if d_rot == 0:
+        return x
+    rot, rest = x[..., :d_rot], x[..., d_rot:]
+
+    half = d_rot // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    if cos.ndim == 2:
+        # positions [S]: broadcast over batch/heads from the left.
+        while cos.ndim < rot.ndim:
+            cos, sin = cos[None], sin[None]
+    else:
+        # positions [B, S]: keep batch leading, add head dims after it.
+        while cos.ndim < rot.ndim:
+            cos, sin = cos[:, None], sin[:, None]
+
+    x1, x2 = rot[..., :half], rot[..., half:]
+    rotated = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+    return jnp.concatenate([rotated, rest], axis=-1)

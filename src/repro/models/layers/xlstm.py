@@ -1,0 +1,261 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+TPU adaptation (arXiv:2405.04517):
+
+  * **mLSTM** is a linear recurrence over a matrix state
+    ``C_t = f_t C_{t-1} + i_t v_t k_t^T`` — materializing per-position
+    matrix states is hopeless, so we use the *chunkwise-parallel* form
+    (linear-attention style): ``lax.scan`` over chunks carrying
+    ``(C, n)`` per head, intra-chunk contributions via masked decay
+    matmuls on the MXU. Exponential-gate stabilization is simplified to
+    sigmoid input gates (noted in DESIGN.md — the recurrence structure,
+    state layout and normalizer semantics are preserved).
+  * **sLSTM** has elementwise-nonlinear recurrence (no parallel form
+    exists — the paper says as much), so it is a strict ``lax.scan`` over
+    time with recurrent weights, exactly as published.
+
+Per the assignment, d_ff=0: the blocks' internal up/down projections are
+the only FFN.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import flags
+from repro.models.module import ParamDecl
+
+__all__ = [
+    "mlstm_decl", "mlstm_apply", "mlstm_decode", "MlstmState",
+    "slstm_decl", "slstm_apply", "slstm_decode", "SlstmState",
+    "init_mlstm_state", "init_slstm_state",
+    "mlstm_state_decl", "slstm_state_decl",
+]
+
+
+class MlstmState(NamedTuple):
+    c: jax.Array  # [B, H, Dh, Dh]
+    n: jax.Array  # [B, H, Dh]
+
+
+class SlstmState(NamedTuple):
+    c: jax.Array  # [B, D]
+    n: jax.Array  # [B, D]
+    h: jax.Array  # [B, D]
+
+
+def _mlstm_dims(cfg):
+    d_inner = int(cfg.xlstm.proj_factor * cfg.d_model)
+    h = cfg.n_heads
+    assert d_inner % h == 0
+    return d_inner, h, d_inner // h
+
+
+def mlstm_decl(cfg) -> dict:
+    d = cfg.d_model
+    d_inner, h, _ = _mlstm_dims(cfg)
+    return {
+        "w_up": ParamDecl((d, 2 * d_inner), ("embed", "inner")),
+        "w_q": ParamDecl((d_inner, d_inner), ("inner", None)),
+        "w_k": ParamDecl((d_inner, d_inner), ("inner", None)),
+        "w_v": ParamDecl((d_inner, d_inner), ("inner", None)),
+        "w_i": ParamDecl((d_inner, h), ("inner", "heads"), scale=0.1),
+        "w_f": ParamDecl((d_inner, h), ("inner", "heads"), scale=0.1),
+        "b_f": ParamDecl((h,), ("heads",), init="ones", scale=2.0),
+        "w_down": ParamDecl((d_inner, d), ("inner", "embed")),
+    }
+
+
+def mlstm_state_decl(cfg, batch: int) -> dict:
+    _, h, dh = _mlstm_dims(cfg)
+    return {
+        "c": ParamDecl((batch, h, dh, dh), ("batch", "heads", None, None),
+                       init="zeros"),
+        "n": ParamDecl((batch, h, dh), ("batch", "heads", None), init="zeros"),
+    }
+
+
+def init_mlstm_state(cfg, batch: int) -> MlstmState:
+    _, h, dh = _mlstm_dims(cfg)
+    return MlstmState(
+        c=jnp.zeros((batch, h, dh, dh), jnp.float32),
+        n=jnp.zeros((batch, h, dh), jnp.float32),
+    )
+
+
+def _mlstm_qkvif(params, x, cfg):
+    d_inner, h, dh = _mlstm_dims(cfg)
+    b, s, _ = x.shape
+    xz = x @ params["w_up"].astype(x.dtype)
+    xi, z = xz[..., :d_inner], xz[..., d_inner:]
+
+    def heads(w):
+        y = xi @ w.astype(x.dtype)
+        return y.reshape(b, s, h, dh).transpose(0, 2, 1, 3).astype(jnp.float32)
+
+    q = heads(params["w_q"]) * (dh ** -0.5)
+    k = heads(params["w_k"]) * (dh ** -0.5)
+    v = heads(params["w_v"])
+    i_gate = jax.nn.sigmoid(
+        (xi @ params["w_i"].astype(x.dtype)).astype(jnp.float32)
+    ).transpose(0, 2, 1)                          # [B,H,S]
+    logf = jax.nn.log_sigmoid(
+        (xi @ params["w_f"].astype(x.dtype)).astype(jnp.float32)
+        + params["b_f"].astype(jnp.float32)
+    ).transpose(0, 2, 1)                          # [B,H,S]
+    return q, k, v, i_gate, logf, z
+
+
+def mlstm_apply(params, x, cfg, state: MlstmState | None = None):
+    """Chunkwise-parallel mLSTM. x: [B,S,D] -> (y, final state)."""
+    b, s, d = x.shape
+    d_inner, h, dh = _mlstm_dims(cfg)
+    chunk = min(cfg.xlstm.chunk, s)
+    while s % chunk:  # largest divisor of s not exceeding the chunk size
+        chunk -= 1
+    if state is None:
+        state = init_mlstm_state(cfg, b)
+
+    q, k, v, i_gate, logf, z = _mlstm_qkvif(params, x, cfg)
+
+    def to_chunks(t, tail_dims):
+        return t.reshape(b, h, s // chunk, chunk, *tail_dims).transpose(
+            2, 0, 1, 3, *range(4, 4 + len(tail_dims))
+        )
+
+    qc = to_chunks(q, (dh,))
+    kc = to_chunks(k, (dh,))
+    vc = to_chunks(v, (dh,))
+    ic = to_chunks(i_gate, ())
+    fc = to_chunks(logf, ())
+
+    def body(carry, blk):
+        c_in, n_in = carry
+        qb, kb, vb, ib, fb = blk               # [B,H,L,(dh)]
+        cum = jnp.cumsum(fb, axis=-1)          # [B,H,L]
+        total = cum[..., -1:]
+
+        # Inter-chunk: contribution of the carried state.
+        dec_q = jnp.exp(cum)[..., None]        # [B,H,L,1]
+        h_inter = jnp.einsum("bhld,bhde->bhle", qb, c_in) * dec_q
+        dn_inter = jnp.einsum("bhld,bhd->bhl", qb, n_in) * dec_q[..., 0]
+
+        # Intra-chunk: masked decay kernel.
+        ratio = cum[..., :, None] - cum[..., None, :]      # [B,H,L,L]
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        kern = jnp.where(mask, jnp.exp(ratio), 0.0) * ib[..., None, :]
+        qk = jnp.einsum("bhld,bhsd->bhls", qb, kb)
+        h_intra = jnp.einsum("bhls,bhsd->bhld", kern * qk, vb)
+        dn_intra = jnp.sum(kern * qk, axis=-1)
+
+        denom = jnp.maximum(jnp.abs(dn_inter + dn_intra), 1.0)[..., None]
+        y = (h_inter + h_intra) / denom
+
+        # State/normalizer update to end of chunk.
+        dec_k = jnp.exp(total - cum) * ib                  # [B,H,L]
+        c_out = jnp.exp(total)[..., None] * c_in + jnp.einsum(
+            "bhl,bhld,bhle->bhde", dec_k, kb, vb
+        )
+        n_out = jnp.exp(total) * n_in + jnp.einsum("bhl,bhld->bhd", dec_k, kb)
+        return (c_out, n_out), y
+
+    (c_fin, n_fin), ys = jax.lax.scan(
+        body, (state.c, state.n), (qc, kc, vc, ic, fc),
+        unroll=flags.unroll_factor("mlstm_chunk", s // chunk),
+    )
+    y = ys.transpose(1, 2, 0, 3, 4).reshape(b, h, s, dh)
+    y = y.transpose(0, 2, 1, 3).reshape(b, s, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return y @ params["w_down"].astype(x.dtype), MlstmState(c_fin, n_fin)
+
+
+def mlstm_decode(params, x, cfg, state: MlstmState):
+    """Single-step mLSTM. x: [B,1,D]."""
+    b = x.shape[0]
+    d_inner, h, dh = _mlstm_dims(cfg)
+    q, k, v, i_gate, logf, z = _mlstm_qkvif(params, x, cfg)
+    q, k, v = q[:, :, 0], k[:, :, 0], v[:, :, 0]          # [B,H,dh]
+    i_t, f_t = i_gate[:, :, 0], jnp.exp(logf[:, :, 0])    # [B,H]
+    c_new = f_t[..., None, None] * state.c + i_t[..., None, None] * (
+        k[..., :, None] * v[..., None, :]
+    )
+    n_new = f_t[..., None] * state.n + i_t[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, c_new)
+    dn = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n_new)), 1.0)
+    y = (num / dn[..., None]).reshape(b, 1, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return y @ params["w_down"].astype(x.dtype), MlstmState(c_new, n_new)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_decl(cfg) -> dict:
+    d = cfg.d_model
+    decl = {}
+    for gate in ("i", "f", "z", "o"):
+        decl[f"w_{gate}"] = ParamDecl((d, d), ("embed", "inner"))
+        decl[f"r_{gate}"] = ParamDecl((d, d), (None, "inner"), scale=0.5)
+        decl[f"b_{gate}"] = ParamDecl((d,), ("inner",), init="zeros")
+    decl["w_out"] = ParamDecl((d, d), ("inner", "embed"))
+    return decl
+
+
+def slstm_state_decl(cfg, batch: int) -> dict:
+    d = cfg.d_model
+    return {
+        k: ParamDecl((batch, d), ("batch", None), init="zeros")
+        for k in ("c", "n", "h")
+    }
+
+
+def init_slstm_state(cfg, batch: int) -> SlstmState:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return SlstmState(c=z, n=z, h=z)
+
+
+def _slstm_cell(params, x_t, st: SlstmState, dtype):
+    """One sLSTM step. x_t: [B, D] (f32)."""
+
+    def gate(name, act):
+        pre = (
+            x_t @ params[f"w_{name}"].astype(jnp.float32)
+            + st.h @ params[f"r_{name}"].astype(jnp.float32)
+            + params[f"b_{name}"].astype(jnp.float32)
+        )
+        return act(pre)
+
+    i = gate("i", jax.nn.sigmoid)
+    f = gate("f", jax.nn.sigmoid)
+    zc = gate("z", jnp.tanh)
+    o = gate("o", jax.nn.sigmoid)
+    c = f * st.c + i * zc
+    n = f * st.n + i
+    h = o * c / jnp.maximum(n, 1.0)
+    return h, SlstmState(c=c, n=n, h=h)
+
+
+def slstm_apply(params, x, cfg, state: SlstmState | None = None):
+    """Sequential sLSTM. x: [B,S,D] -> (y, final state)."""
+    b, s, d = x.shape
+    if state is None:
+        state = init_slstm_state(cfg, b)
+
+    def body(st, x_t):
+        h, st = _slstm_cell(params, x_t, st, x.dtype)
+        return st, h
+
+    state, hs = jax.lax.scan(body, state, x.astype(jnp.float32).swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).astype(x.dtype)
+    return y @ params["w_out"].astype(x.dtype), state
+
+
+def slstm_decode(params, x, cfg, state: SlstmState):
+    h, st = _slstm_cell(params, x[:, 0].astype(jnp.float32), state, x.dtype)
+    return (h[:, None].astype(x.dtype)) @ params["w_out"].astype(x.dtype), st

@@ -1,0 +1,85 @@
+"""Minimal parameter-declaration system.
+
+Models declare their parameters once as a pytree of ``ParamDecl``s — shape,
+init, and *logical axis names* (``"embed"``, ``"ff"``, ``"heads"``,
+``"experts"``, ``"vocab"``, ...). From one declaration tree we derive:
+
+  * ``init_params``  — materialized arrays (fold_in'd keys, fan-in scaling);
+  * ``param_shapes`` — ShapeDtypeStructs for the compile-only dry-run;
+  * ``param_specs``  — ``PartitionSpec``s via the logical-to-mesh rules in
+    ``repro.sharding.specs`` (divisibility-checked per mesh).
+
+This keeps the model code, its initialization, and its distribution strategy
+in one place without pulling in a framework dependency.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["ParamDecl", "init_params", "param_shapes", "map_decls", "stacked"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDecl:
+    shape: tuple
+    axes: tuple            # logical axis name (or None) per dim
+    init: str = "fan_in"   # "fan_in" | "zeros" | "ones" | "normal"
+    scale: float = 1.0
+    dtype: str = "float32"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_decl(x) -> bool:
+    return isinstance(x, ParamDecl)
+
+
+def map_decls(fn: Callable, tree):
+    return jax.tree.map(fn, tree, is_leaf=_is_decl)
+
+
+def stacked(decl_tree, n: int, axis_name: str = "layers"):
+    """Prepend a stacking dim (for scan-over-layers parameter stacking)."""
+    return map_decls(
+        lambda d: dataclasses.replace(
+            d, shape=(n,) + tuple(d.shape), axes=(axis_name,) + tuple(d.axes)
+        ),
+        decl_tree,
+    )
+
+
+def _materialize(d: ParamDecl, key) -> jax.Array:
+    dtype = jnp.dtype(d.dtype)
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dtype)
+    if d.init == "normal":
+        return (d.scale * jax.random.normal(key, d.shape)).astype(dtype)
+    if d.init == "fan_in":
+        # Contract dim = first non-stacking axis by convention.
+        fan_in = int(np.prod(d.shape[:-1])) if len(d.shape) > 1 else d.shape[0]
+        std = d.scale / np.sqrt(max(fan_in, 1))
+        return (std * jax.random.normal(key, d.shape)).astype(dtype)
+    raise ValueError(d.init)
+
+
+def init_params(decl_tree, key):
+    leaves, treedef = jax.tree.flatten(decl_tree, is_leaf=_is_decl)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(
+        treedef, [_materialize(d, k) for d, k in zip(leaves, keys)]
+    )
+
+
+def param_shapes(decl_tree):
+    return map_decls(
+        lambda d: jax.ShapeDtypeStruct(d.shape, jnp.dtype(d.dtype)), decl_tree
+    )

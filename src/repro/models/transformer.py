@@ -1,0 +1,352 @@
+"""Composable decoder/encoder stacks for the assigned architecture zoo.
+
+One block grammar covers all six families:
+
+  dense / vlm / audio : ln -> attention -> ln -> (swiglu | gelu) FFN
+  moe                 : ln -> attention -> ln -> MoE (+ shared/first-dense)
+  hybrid (hymba)      : ln -> [attention ∥ mamba] (learned per-channel mix)
+                        -> ln -> swiglu FFN
+  ssm (xlstm)         : groups of (p-1) mLSTM blocks + 1 sLSTM block
+
+Layers execute under ``lax.scan`` with stacked parameters (+ optional
+remat), keeping the HLO size O(1) in depth — required for the 88-layer
+granite dry-run to compile in reasonable time.
+
+Each family provides three entry points used by the factory:
+  * full-sequence forward (train / prefill) -> hidden states (+ caches)
+  * decode step -> hidden states (+ updated caches)
+  * cache declarations for the dry-run's ShapeDtypeStructs
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import flags
+from repro.models import module as mod
+from repro.models.layers import attention as attn_lib
+from repro.models.layers import mamba as mamba_lib
+from repro.models.layers import moe as moe_lib
+from repro.models.layers import xlstm as xlstm_lib
+from repro.models.layers.mlp import gelu_mlp, gelu_mlp_decl, swiglu, swiglu_decl
+from repro.models.layers.norms import layernorm, layernorm_decl, rmsnorm, rmsnorm_decl
+from repro.models.module import ParamDecl
+from repro.sharding.ctx import shard_act
+
+__all__ = ["model_decl", "forward_full", "decode_step", "cache_decls",
+           "embed_tokens", "logits_from_hidden"]
+
+
+# ---------------------------------------------------------------------------
+# Declarations
+# ---------------------------------------------------------------------------
+
+
+def _norm_decl(cfg):
+    return layernorm_decl(cfg.d_model) if cfg.family == "audio" \
+        else rmsnorm_decl(cfg.d_model)
+
+
+def _block_decl(cfg) -> dict:
+    fam = cfg.family
+    if fam == "ssm":
+        raise AssertionError("xlstm handled separately")
+    d = {"ln1": _norm_decl(cfg), "attn": attn_lib.attn_decl(cfg),
+         "ln2": _norm_decl(cfg)}
+    if fam == "moe":
+        d["moe"] = moe_lib.moe_decl(cfg)
+    elif fam == "audio":
+        d["mlp"] = gelu_mlp_decl(cfg.d_model, cfg.d_ff)
+    else:
+        d["mlp"] = swiglu_decl(cfg.d_model, cfg.d_ff)
+    if fam == "hybrid":
+        d["mamba"] = mamba_lib.mamba_decl(cfg)
+        d["beta_attn"] = ParamDecl((cfg.d_model,), ("embed",), init="ones")
+        d["beta_mamba"] = ParamDecl((cfg.d_model,), ("embed",), init="ones")
+    return d
+
+
+def _xlstm_group_decl(cfg) -> dict:
+    p = cfg.xlstm.slstm_period
+    one_m = {"ln": rmsnorm_decl(cfg.d_model), "cell": xlstm_lib.mlstm_decl(cfg)}
+    one_s = {"ln": rmsnorm_decl(cfg.d_model), "cell": xlstm_lib.slstm_decl(cfg)}
+    return {
+        "mlstm": mod.stacked(one_m, p - 1, "layers"),
+        "slstm": one_s,
+    }
+
+
+def model_decl(cfg) -> dict:
+    v, d = cfg.padded_vocab, cfg.d_model
+    decl: dict = {
+        "embed": ParamDecl((v, d), ("vocab", "embed"), scale=1.0),
+        "final_norm": _norm_decl(cfg),
+        "head": ParamDecl((d, v), ("embed", "vocab")),
+    }
+    if cfg.family == "ssm":
+        p = cfg.xlstm.slstm_period
+        assert cfg.n_layers % p == 0, (cfg.n_layers, p)
+        decl["groups"] = mod.stacked(
+            _xlstm_group_decl(cfg), cfg.n_layers // p, "layers"
+        )
+        return decl
+
+    n_scan = cfg.n_layers
+    if cfg.moe is not None and cfg.moe.first_dense:
+        dense_cfg = {"ln1": _norm_decl(cfg), "attn": attn_lib.attn_decl(cfg),
+                     "ln2": _norm_decl(cfg),
+                     "mlp": swiglu_decl(d, cfg.moe.d_expert * 4)}
+        decl["layer0"] = dense_cfg
+        n_scan -= 1
+    decl["layers"] = mod.stacked(_block_decl(cfg), n_scan, "layers")
+
+    if cfg.vlm_patches:
+        decl["projector"] = {
+            "w1": ParamDecl((cfg.vlm_d_vision, d), (None, "embed")),
+            "w2": ParamDecl((d, d), ("embed", None)),
+        }
+    if cfg.audio_frontend:
+        decl["frame_proj"] = ParamDecl((cfg.d_frame, d), (None, "embed"))
+        decl["mask_embed"] = ParamDecl((d,), ("embed",), init="normal",
+                                       scale=0.02)
+    return decl
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+
+def embed_tokens(params, tokens, cfg):
+    x = params["embed"].astype(jnp.bfloat16)[tokens]
+    return shard_act(x, ("batch", "seq", "embed"))
+
+
+def logits_from_hidden(params, x, cfg):
+    norm = layernorm if cfg.family == "audio" else rmsnorm
+    x = norm(params["final_norm"], x, cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["head"].astype(x.dtype))
+    return shard_act(logits, ("batch", "seq", "vocab"))
+
+
+# ---------------------------------------------------------------------------
+# Blocks — full sequence
+# ---------------------------------------------------------------------------
+
+
+def _block_full(lp, x, positions, cfg):
+    """Uniform block, full-sequence. Returns (x, cache_entries)."""
+    fam = cfg.family
+    norm = layernorm if fam == "audio" else rmsnorm
+    xn = norm(lp["ln1"], x, cfg.norm_eps)
+    attn_out, (k, v) = attn_lib.attention(lp["attn"], xn, positions, cfg)
+    aux = jnp.float32(0.0)
+    entries = {"k": k, "v": v}
+    if fam == "hybrid":
+        mamba_out, mstate = mamba_lib.mamba_scan(lp["mamba"], xn, cfg)
+        mixed = 0.5 * (
+            attn_out * lp["beta_attn"].astype(x.dtype)
+            + mamba_out * lp["beta_mamba"].astype(x.dtype)
+        )
+        x = x + mixed
+        entries["mamba"] = mstate._asdict()
+    else:
+        x = x + attn_out
+    x = shard_act(x, ("batch", "seq", "embed"))
+    xn = norm(lp["ln2"], x, cfg.norm_eps)
+    if fam == "moe":
+        ff, aux = moe_lib.moe_apply(lp["moe"], xn, cfg)
+    elif fam == "audio":
+        ff = gelu_mlp(lp["mlp"], xn)
+    else:
+        ff = swiglu(lp["mlp"], xn)
+    x = shard_act(x + ff, ("batch", "seq", "embed"))
+    return x, entries, aux
+
+
+def _dense_block_full(lp, x, positions, cfg):
+    """first_dense MoE layer-0 (dense FFN, same attention)."""
+    xn = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+    attn_out, (k, v) = attn_lib.attention(lp["attn"], xn, positions, cfg)
+    x = x + attn_out
+    xn = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+    return x + swiglu(lp["mlp"], xn), {"k": k, "v": v}
+
+
+def _xlstm_group_full(gp, x, cfg):
+    """One xLSTM group: (p-1) mLSTM blocks then 1 sLSTM block."""
+
+    def m_body_state(xc, mp):
+        xn = rmsnorm(mp["ln"], xc, cfg.norm_eps)
+        y, st = xlstm_lib.mlstm_apply(mp["cell"], xn, cfg)
+        return xc + y, st._asdict()
+
+    p_minus1 = jax.tree.leaves(gp["mlstm"])[0].shape[0]
+    x, mstates = jax.lax.scan(m_body_state, x, gp["mlstm"],
+                              unroll=flags.unroll_factor("mlstm_inner", p_minus1))
+    xn = rmsnorm(gp["slstm"]["ln"], x, cfg.norm_eps)
+    y, sstate = xlstm_lib.slstm_apply(gp["slstm"]["cell"], xn, cfg)
+    return x + y, {"mlstm": mstates, "slstm": sstate._asdict()}
+
+
+def forward_full(params, x, positions, cfg, *, collect_cache: bool = False):
+    """Run the stack over a full sequence.
+
+    Returns (hidden, caches, aux_sum). ``caches`` is a stacked-over-layers
+    pytree when ``collect_cache`` (prefill), else None.
+    """
+    if cfg.family == "ssm":
+        def g_body(xc, gp):
+            xo, states = _xlstm_group_full(gp, xc, cfg)
+            return xo, states
+        body = jax.checkpoint(g_body) if cfg.remat else g_body
+        n_groups = cfg.n_layers // cfg.xlstm.slstm_period
+        x, states = jax.lax.scan(body, x, params["groups"],
+                                 unroll=flags.unroll_factor("groups", n_groups))
+        return x, (states if collect_cache else None), jnp.float32(0.0)
+
+    caches0 = None
+    if cfg.moe is not None and cfg.moe.first_dense:
+        x, caches0 = _dense_block_full(params["layer0"], x, positions, cfg)
+
+    def body(carry, lp):
+        xc, aux = carry
+        xo, entries, a = _block_full(lp, xc, positions, cfg)
+        return (xo, aux + a), (entries if collect_cache else 0)
+
+    body = jax.checkpoint(body) if cfg.remat else body
+    n_scan = jax.tree.leaves(params["layers"])[0].shape[0]
+    (x, aux), caches = jax.lax.scan(
+        body, (x, jnp.float32(0.0)), params["layers"],
+        unroll=flags.unroll_factor("layers", n_scan),
+    )
+    if not collect_cache:
+        caches = None
+    return x, (caches0, caches) if collect_cache else None, aux
+
+
+# ---------------------------------------------------------------------------
+# Blocks — decode step
+# ---------------------------------------------------------------------------
+
+
+def _block_decode(lp, x, cfg, cache, dense_ffn: bool = False):
+    norm = rmsnorm  # decode never runs for the audio encoder
+    xn = norm(lp["ln1"], x, cfg.norm_eps)
+    kv = attn_lib.KVCache(**{f: cache[f] for f in ("k", "v", "pos", "length")})
+    attn_out, kv_new = attn_lib.decode_attention(lp["attn"], xn, kv, cfg)
+    new_cache = dict(cache)
+    new_cache.update(k=kv_new.k, v=kv_new.v, pos=kv_new.pos,
+                     length=kv_new.length)
+    if cfg.family == "hybrid":
+        mstate = mamba_lib.MambaState(**cache["mamba"])
+        mamba_out, mstate = mamba_lib.mamba_decode_step(
+            lp["mamba"], xn, cfg, mstate
+        )
+        mixed = 0.5 * (
+            attn_out * lp["beta_attn"].astype(x.dtype)
+            + mamba_out * lp["beta_mamba"].astype(x.dtype)
+        )
+        x = x + mixed
+        new_cache["mamba"] = mstate._asdict()
+    else:
+        x = x + attn_out
+    xn = norm(lp["ln2"], x, cfg.norm_eps)
+    if cfg.family == "moe" and not dense_ffn:
+        ff, _ = moe_lib.moe_apply(lp["moe"], xn, cfg)
+    else:
+        ff = swiglu(lp["mlp"], xn)
+    return x + ff, new_cache
+
+
+def _xlstm_group_decode(gp, x, cfg, gcache):
+    def m_body(xc, scan_in):
+        mp, st = scan_in
+        xn = rmsnorm(mp["ln"], xc, cfg.norm_eps)
+        y, st_new = xlstm_lib.mlstm_decode(
+            mp["cell"], xn, cfg, xlstm_lib.MlstmState(**st)
+        )
+        return xc + y, st_new._asdict()
+
+    x, mstates = jax.lax.scan(m_body, x, (gp["mlstm"], gcache["mlstm"]))
+    xn = rmsnorm(gp["slstm"]["ln"], x, cfg.norm_eps)
+    y, sstate = xlstm_lib.slstm_decode(
+        gp["slstm"]["cell"], xn, cfg, xlstm_lib.SlstmState(**gcache["slstm"])
+    )
+    return x + y, {"mlstm": mstates, "slstm": sstate._asdict()}
+
+
+def decode_step(params, x, cfg, caches):
+    """One-token decode through the stack. x: [B, 1, D]."""
+    if cfg.family == "ssm":
+        def g_body(xc, scan_in):
+            gp, gc = scan_in
+            return _xlstm_group_decode(gp, xc, cfg, gc)
+        n_groups = cfg.n_layers // cfg.xlstm.slstm_period
+        x, new_caches = jax.lax.scan(g_body, x, (params["groups"], caches),
+                                     unroll=flags.unroll_factor("groups", n_groups))
+        return x, new_caches
+
+    caches0, stacked = caches
+    if caches0 is not None:
+        x, caches0 = _block_decode(params["layer0"], x, cfg, caches0,
+                                   dense_ffn=True)
+
+    def body(xc, scan_in):
+        lp, c = scan_in
+        return _block_decode(lp, xc, cfg, c)
+
+    n_scan = jax.tree.leaves(params["layers"])[0].shape[0]
+    x, stacked = jax.lax.scan(body, x, (params["layers"], stacked),
+                              unroll=flags.unroll_factor("layers", n_scan))
+    return x, (caches0, stacked)
+
+
+# ---------------------------------------------------------------------------
+# Cache declarations (dry-run ShapeDtypeStructs + sharding)
+# ---------------------------------------------------------------------------
+
+
+def _attn_cache_len(cfg, context_len: int) -> int:
+    if cfg.window is not None:
+        return min(cfg.window, context_len)
+    return context_len
+
+
+def cache_decls(cfg, batch: int, context_len: int, *, seq_shard: bool = False):
+    """Decl tree matching the decode-cache pytree structure."""
+    clen = _attn_cache_len(cfg, context_len)
+
+    if cfg.family == "ssm":
+        n_groups = cfg.n_layers // cfg.xlstm.slstm_period
+        p = cfg.xlstm.slstm_period
+        group = {
+            "mlstm": mod.stacked(
+                xlstm_lib.mlstm_state_decl(cfg, batch), p - 1, "layers"
+            ),
+            "slstm": xlstm_lib.slstm_state_decl(cfg, batch),
+        }
+        return mod.stacked(group, n_groups, "layers")
+
+    entry = {
+        f: d for f, d in attn_lib.cache_decl(
+            cfg, batch, clen, seq_shard=seq_shard
+        ).items()
+    }
+    if cfg.family == "hybrid":
+        entry["mamba"] = mamba_lib.mamba_state_decl(cfg, batch)
+
+    stacked_layers = cfg.n_layers
+    cache0 = None
+    if cfg.moe is not None and cfg.moe.first_dense:
+        cache0 = {
+            f: d for f, d in attn_lib.cache_decl(
+                cfg, batch, clen, seq_shard=seq_shard
+            ).items()
+        }
+        stacked_layers -= 1
+    return (cache0, mod.stacked(entry, stacked_layers, "layers"))

@@ -1,0 +1,4 @@
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.optim.schedule import cosine_schedule
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "cosine_schedule"]

@@ -1,0 +1,65 @@
+"""AdamW in pure JAX (pytree-structured, shardable like the params)."""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update"]
+
+
+class AdamWState(NamedTuple):
+    m: dict
+    v: dict
+    count: jax.Array
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return AdamWState(
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def adamw_update(
+    grads, state: AdamWState, params, *, lr, b1: float = 0.9,
+    b2: float = 0.95, eps: float = 1e-8, weight_decay: float = 0.1,
+    grad_clip: float | None = 1.0,
+):
+    """One AdamW step. ``lr`` may be a scalar or a schedule value."""
+    count = state.count + 1
+
+    if grad_clip is not None:
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree.leaves(grads))
+        )
+        scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+    else:
+        gnorm = jnp.float32(0.0)
+
+    b1c = 1.0 - b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        step = (m / b1c) / (jnp.sqrt(v / b2c) + eps)
+        step = step + weight_decay * p.astype(jnp.float32)
+        return m, v, (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_m = treedef.unflatten([o[0] for o in out])
+    new_v = treedef.unflatten([o[1] for o in out])
+    new_p = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(m=new_m, v=new_v, count=count), gnorm

@@ -1,0 +1,18 @@
+"""LR schedules."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["cosine_schedule"]
+
+
+def cosine_schedule(step, *, peak: float, warmup: int, total: int,
+                    floor_pct: float = 0.1):
+    """Linear warmup then cosine decay to ``floor_pct * peak``."""
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = peak * step / max(warmup, 1)
+    t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    floor = floor_pct * peak
+    cos = floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < warmup, warm, cos)

@@ -1,0 +1,157 @@
+"""Three-term roofline analysis from a compiled (dry-run) artifact.
+
+  compute    = HLO_FLOPs / peak_FLOPs          [s]
+  memory     = HLO_bytes / HBM_bw              [s]
+  collective = collective_bytes / link_bw      [s]
+
+``compiled.cost_analysis()`` under GSPMD reports the *per-device* SPMD
+program, so the terms below are per-chip seconds (equivalent to the
+chips-normalized global form). ``collective_bytes`` is not in
+cost_analysis: we parse the HLO text and sum the *result buffer* sizes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (result size equals bytes-on-wire for all-reduce and
+all-gather up to the (n-1)/n ring factor; for reduce-scatter it is the
+per-shard output so we scale by the group size parsed from
+``replica_groups``).
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+__all__ = ["HW", "RooflineReport", "collective_bytes", "analyze_compiled"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12    # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9         # bytes/s per chip
+    link_bw: float = 50e9         # bytes/s per ICI link
+
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0, "u4": 1, "s4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g. "bf16[256,4096]{1,0}" or "f32[]" — first typed shape on the line is
+# the op's result. Tuple results repeat the pattern; we sum all shapes that
+# appear before the "<op-name>(" token.
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d.strip():
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-collective-kind result-buffer bytes summed over the module."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        kind, call = None, None
+        for c in _COLLECTIVES:
+            # match "= <shapes> all-gather(" including -start forms; the op
+            # *call* (followed by "(") — not the %op-name at line start.
+            call = re.search(rf"\b{c}(-start)?\(", stripped)
+            if call:
+                kind = c
+                break
+        if kind is None:
+            continue
+        # Shapes between "=" and the op call = result type(s).
+        eq = stripped.find("=")
+        head = stripped[eq + 1 : call.start()]
+        nbytes = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(head))
+        if kind == "reduce-scatter":
+            nbytes *= _group_size(stripped)
+        out[kind] += nbytes
+        counts[kind] += 1
+    out["counts"] = counts
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    flops: float
+    hbm_bytes: float
+    coll_bytes: float
+    coll_detail: dict
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float = 0.0
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs (per-chip-normalized)."""
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    def row(self) -> dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": self.coll_bytes,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "useful_ratio": self.useful_ratio,
+        }
+
+
+def analyze_compiled(compiled, *, model_flops_per_chip: float = 0.0,
+                     hw: HW = HW()) -> RooflineReport:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(compiled.as_text())
+    return RooflineReport(
+        flops=flops,
+        hbm_bytes=hbm,
+        coll_bytes=float(coll["total"]),
+        coll_detail=coll,
+        compute_s=flops / hw.peak_flops,
+        memory_s=hbm / hw.hbm_bw,
+        collective_s=float(coll["total"]) / hw.link_bw,
+        model_flops=model_flops_per_chip,
+    )

@@ -1,0 +1,55 @@
+"""Ambient-mesh activation sharding constraints.
+
+Model code annotates activations with *logical* axes; when a mesh is
+active (set by the launcher / dry-run), the annotation resolves through
+``ACT_RULES`` into a ``with_sharding_constraint``; without a mesh (CPU
+smoke tests) it is a no-op. Keeps model code mesh-agnostic.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+import jax
+from jax.sharding import Mesh
+
+from repro.sharding import specs as specs_lib
+
+__all__ = ["active_mesh", "set_active_mesh", "use_mesh", "shard_act"]
+
+_ACTIVE: list = [None]
+_OVERRIDES: list = [None]
+
+
+def active_mesh() -> Mesh | None:
+    return _ACTIVE[0]
+
+
+def set_active_mesh(mesh: Mesh | None, overrides: dict | None = None):
+    _ACTIVE[0] = mesh
+    _OVERRIDES[0] = overrides
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, overrides: dict | None = None):
+    prev, prev_ov = _ACTIVE[0], _OVERRIDES[0]
+    _ACTIVE[0], _OVERRIDES[0] = mesh, overrides
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _ACTIVE[0], _OVERRIDES[0] = prev, prev_ov
+
+
+def shard_act(x, axes, overrides=None):
+    """Constrain activation ``x`` by logical ``axes`` under the active mesh."""
+    mesh = _ACTIVE[0]
+    if mesh is None:
+        return x
+    merged = dict(_OVERRIDES[0] or {})
+    if overrides:
+        merged.update(overrides)
+    spec = specs_lib.resolve_spec(
+        axes, x.shape, mesh, specs_lib.ACT_RULES, merged or None
+    )
+    return jax.lax.with_sharding_constraint(x, spec)

@@ -1,0 +1,129 @@
+"""Logical-axis -> mesh-axis resolution (GSPMD sharding rules).
+
+One rule table describes the whole zoo; per-array divisibility is checked
+against the actual mesh so e.g. hymba's 25 attention heads silently fall
+back to replicated heads while its 5504-wide FFN still tensor-shards, and
+dbrx's 8 KV heads stay replicated on a 16-wide model axis while its 16
+experts shard expert-parallel.
+
+Parameters are 2-D sharded (tensor-parallel over ``model`` + FSDP over
+``data``/``pod``+``data``); activations shard batch over the data axes and
+feature/expert dims over ``model``. The decode KV cache may shard its
+*sequence* dim over ``model`` when the KV-head count does not divide the
+axis (GSPMD turns softmax/contraction over that dim into the matching
+collectives) — see ``cache_rules``.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.module import ParamDecl, map_decls
+
+__all__ = [
+    "PARAM_RULES",
+    "ACT_RULES",
+    "data_axes",
+    "resolve_spec",
+    "param_specs",
+    "shardings",
+]
+
+# Logical axis -> candidate mesh axes, in priority order. First candidate
+# whose size divides the dim wins; otherwise the dim is replicated.
+PARAM_RULES: dict[str, tuple] = {
+    "vocab": ("model",),
+    "ff": ("model",),
+    "experts": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "inner": ("model",),      # SSM / xLSTM expanded inner dim
+    "embed": ("fsdp",),       # resolved to the data (+pod) axes
+    "layers": (),
+    "head_dim": (),
+    "state": (),
+    "conv": (),
+}
+
+ACT_RULES: dict[str, tuple] = {
+    "batch": ("dp",),         # resolved to (pod, data) / (data,)
+    "vocab": ("model",),
+    "ff": ("model",),
+    "experts": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "inner": ("model",),
+    "seq": (),
+    "cache_seq": ("model",),  # seq-sharded decode caches (kv-head fallback)
+    "embed": (),
+    "head_dim": (),
+    "state": (),
+    "groups": ("dp",),        # MoE dispatch groups
+}
+
+
+def data_axes(mesh: Mesh) -> tuple:
+    """The batch/FSDP axes: ("pod","data") on the multi-pod mesh."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _resolve_axis(logical, dim, mesh: Mesh, rules, overrides=None, used=()):
+    if logical is None:
+        return None
+    table = dict(rules)
+    if overrides:
+        table.update(overrides)
+    for cand in table.get(logical, ()):
+        if cand == "fsdp" or cand == "dp":
+            axes = data_axes(mesh)
+            size = 1
+            for a in axes:
+                size *= mesh.shape[a]
+            if axes and dim % size == 0 and not (set(axes) & set(used)):
+                return axes if len(axes) > 1 else axes[0]
+        elif isinstance(cand, tuple):
+            # Multi-axis candidate: shard this dim over all listed axes.
+            if all(a in mesh.shape for a in cand):
+                size = 1
+                for a in cand:
+                    size *= mesh.shape[a]
+                if dim % size == 0 and not (set(cand) & set(used)):
+                    return cand if len(cand) > 1 else cand[0]
+        elif cand in mesh.shape and dim % mesh.shape[cand] == 0 \
+                and cand not in used:
+            return cand
+    return None
+
+
+def resolve_spec(axes, shape, mesh: Mesh, rules=ACT_RULES, overrides=None) -> P:
+    """PartitionSpec for one array from its logical axes.
+
+    A mesh axis is assigned to at most one dim (first come, first served:
+    earlier dims win, later dims fall back to replication).
+    """
+    out, used = [], []
+    for a, d in zip(axes, shape):
+        r = _resolve_axis(a, d, mesh, rules, overrides, used=tuple(used))
+        out.append(r)
+        if isinstance(r, tuple):
+            used.extend(r)
+        elif r is not None:
+            used.append(r)
+    return P(*out)
+
+
+def param_specs(decl_tree, mesh: Mesh, overrides=None):
+    """PartitionSpec tree matching a ParamDecl tree."""
+    return map_decls(
+        lambda d: resolve_spec(d.axes, d.shape, mesh, PARAM_RULES, overrides),
+        decl_tree,
+    )
+
+
+def shardings(spec_tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,8 @@
+import os
+import sys
+
+# Tests run against the source tree. Do NOT force a host device count here:
+# smoke tests must see the real (single-CPU) device; only the dry-run and
+# the explicit subprocess sharding tests use placeholder device grids.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))

@@ -1,0 +1,104 @@
+"""DISGD correctness: update math vs oracle, prequential semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import state as state_lib
+from repro.core.disgd import DisgdHyper, disgd_worker_step, init_vector
+from repro.kernels import ref
+
+
+def _seeded_state(u_cap, i_cap, k, u_ids, i_ids, key):
+    """Worker state with all ids pre-inserted (vectors = replica init)."""
+    st = state_lib.init_disgd_state(u_cap, i_cap, k)
+    t = st.tables
+    uv = st.user_vecs
+    iv = st.item_vecs
+    for s, uid in enumerate(u_ids):
+        t = t._replace(user_ids=t.user_ids.at[s].set(uid))
+        uv = uv.at[s].set(init_vector(key, jnp.int32(uid), k, 0.1))
+    for s, iid in enumerate(i_ids):
+        t = t._replace(item_ids=t.item_ids.at[s].set(iid))
+        iv = iv.at[s].set(init_vector(key, jnp.int32(iid), k, 0.1))
+    return st._replace(tables=t, user_vecs=uv, item_vecs=iv)
+
+
+def test_update_matches_isgd_oracle():
+    """With known users/items, factor updates equal sequential ISGD."""
+    k, u_cap, i_cap = 8, 16, 16
+    hyper = DisgdHyper(k=k, u_cap=u_cap, i_cap=i_cap, n_i=1, g=1)
+    key = jax.random.key(0)
+    rng = np.random.default_rng(0)
+
+    u_ids = np.arange(u_cap)
+    i_ids = np.arange(i_cap)
+    st = _seeded_state(u_cap, i_cap, k, u_ids, i_ids, key)
+
+    n_ev = 64
+    ev_u = jnp.asarray(rng.integers(0, u_cap, n_ev), jnp.int32)
+    ev_i = jnp.asarray(rng.integers(0, i_cap, n_ev), jnp.int32)
+
+    new_st, hits, evaluated = disgd_worker_step(st, (ev_u, ev_i), hyper, key)
+
+    u_ref, i_ref = ref.isgd_apply(
+        st.user_vecs, st.item_vecs, ev_u, ev_i,
+        jnp.ones((n_ev,), bool), eta=hyper.eta, lam=hyper.lam,
+    )
+    np.testing.assert_allclose(np.asarray(new_st.user_vecs),
+                               np.asarray(u_ref), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(new_st.item_vecs),
+                               np.asarray(i_ref), rtol=1e-5, atol=1e-6)
+    assert bool(jnp.all(evaluated))
+
+
+def test_padding_events_are_inert():
+    hyper = DisgdHyper(k=4, u_cap=8, i_cap=8, n_i=1, g=1)
+    key = jax.random.key(1)
+    st = state_lib.init_disgd_state(8, 8, 4)
+    ev_u = jnp.asarray([-1, -1, 3], jnp.int32)
+    ev_i = jnp.asarray([-1, -1, 2], jnp.int32)
+    new_st, hits, evaluated = disgd_worker_step(st, (ev_u, ev_i), hyper, key)
+    assert np.asarray(evaluated).tolist() == [False, False, True]
+    # Only one user/item entered the tables.
+    assert int(jnp.sum(new_st.tables.user_ids >= 0)) == 1
+    assert int(jnp.sum(new_st.tables.item_ids >= 0)) == 1
+    assert bool(new_st.rated[3 % 8, 2 % 8])
+
+
+def test_new_item_cannot_be_recalled():
+    """Prequential recall must be 0 for a never-seen item (Alg. 4)."""
+    hyper = DisgdHyper(k=4, u_cap=8, i_cap=8, n_i=1, g=1)
+    key = jax.random.key(2)
+    st = state_lib.init_disgd_state(8, 8, 4)
+    ev_u = jnp.asarray([1, 1], jnp.int32)
+    ev_i = jnp.asarray([5, 6], jnp.int32)  # both first occurrences
+    _, hits, _ = disgd_worker_step(st, (ev_u, ev_i), hyper, key)
+    assert not bool(hits[0]) and not bool(hits[1])
+
+
+def test_repeated_event_error_decreases():
+    """ISGD reduces prediction error on a repeated interaction."""
+    hyper = DisgdHyper(k=8, u_cap=4, i_cap=4, n_i=1, g=1)
+    key = jax.random.key(3)
+    st = state_lib.init_disgd_state(4, 4, 8)
+    ev = (jnp.full((32,), 0, jnp.int32), jnp.full((32,), 1, jnp.int32))
+    # Re-rating the same pair is deduped in real streams, but the update
+    # math must still converge err -> 0; disable the rated check by reading
+    # factors directly.
+    new_st, _, _ = disgd_worker_step(st, ev, hyper, key)
+    u = new_st.user_vecs[0]
+    i = new_st.item_vecs[1]
+    err = abs(1.0 - float(jnp.dot(u, i)))
+    assert err < 0.9, err
+
+
+def test_replica_init_is_consistent():
+    """Replicas of the same id start identical on every worker (fold_in)."""
+    key = jax.random.key(42)
+    v1 = init_vector(key, jnp.int32(123), 8, 0.1)
+    v2 = init_vector(key, jnp.int32(123), 8, 0.1)
+    v3 = init_vector(key, jnp.int32(124), 8, 0.1)
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+    assert not np.allclose(np.asarray(v1), np.asarray(v3))

@@ -1,0 +1,32 @@
+"""Prequential evaluator (Alg. 4) aggregation."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.evaluator import RecallAccumulator, moving_average
+
+
+@given(st.lists(st.integers(0, 1), min_size=1, max_size=500),
+       st.integers(1, 100))
+@settings(max_examples=100, deadline=None)
+def test_moving_average_matches_naive(bits, window):
+    bits = np.asarray(bits, float)
+    got = moving_average(bits, window)
+    want = np.array([
+        bits[max(0, t - window + 1): t + 1].mean() for t in range(len(bits))
+    ])
+    np.testing.assert_allclose(got, want, atol=1e-9)
+
+
+def test_accumulator_scatters_to_stream_order():
+    acc = RecallAccumulator()
+    # 2 workers x capacity 3, batch of 5 events; event 4 dropped.
+    buckets = np.array([[0, 2, -1], [1, 3, -1]])
+    hits = np.array([[True, False, False], [True, True, False]])
+    evaluated = np.array([[True, True, False], [True, True, False]])
+    acc.add_batch(buckets, hits, evaluated, batch_size=5)
+    bits = acc.bits()
+    assert bits.shape == (5,)
+    np.testing.assert_array_equal(bits[:4], [1, 1, 0, 1])
+    assert np.isnan(bits[4])
+    assert acc.mean() == 0.75

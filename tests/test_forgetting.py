@@ -1,0 +1,105 @@
+"""LRU/LFU forgetting semantics."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import state as state_lib
+from repro.core.forgetting import (ForgettingConfig, apply_forgetting,
+                                   evict_to_budget)
+
+
+def _populated(u_cap=8, i_cap=8, k=4):
+    st = state_lib.init_disgd_state(u_cap, i_cap, k)
+    t = st.tables._replace(
+        user_ids=jnp.arange(u_cap, dtype=jnp.int32),
+        item_ids=jnp.arange(i_cap, dtype=jnp.int32),
+        user_freq=jnp.asarray([1, 1, 5, 5, 1, 5, 1, 5], jnp.int32),
+        item_freq=jnp.asarray([5, 1, 5, 1, 5, 1, 5, 1], jnp.int32),
+        user_ts=jnp.asarray([1, 2, 3, 4, 97, 98, 99, 100], jnp.int32),
+        item_ts=jnp.asarray([100, 99, 98, 97, 4, 3, 2, 1], jnp.int32),
+        clock=jnp.int32(100),
+    )
+    return st._replace(
+        tables=t,
+        user_vecs=jnp.ones_like(st.user_vecs),
+        item_vecs=jnp.ones_like(st.item_vecs),
+        rated=jnp.ones_like(st.rated),
+    )
+
+
+def test_lfu_evicts_below_frequency_threshold():
+    st = apply_forgetting(_populated(), ForgettingConfig(
+        policy="lfu", lfu_min_freq=2))
+    uids = np.asarray(st.tables.user_ids)
+    assert (uids >= 0).tolist() == [False, False, True, True, False, True,
+                                    False, True]
+    # Evicted entries are fully cleared.
+    assert np.all(np.asarray(st.user_vecs)[uids < 0] == 0)
+    assert np.all(~np.asarray(st.rated)[uids < 0, :])
+
+
+def test_lru_evicts_stale_entries():
+    st = apply_forgetting(_populated(), ForgettingConfig(
+        policy="lru", lru_max_age=50))
+    uids = np.asarray(st.tables.user_ids)
+    # user_ts 1..4 are older than clock-50; 97..100 survive.
+    assert (uids >= 0).tolist() == [False, False, False, False, True, True,
+                                    True, True]
+
+
+def test_none_policy_is_identity():
+    st0 = _populated()
+    st = apply_forgetting(st0, ForgettingConfig(policy="none"))
+    for a, b in zip(np.asarray(st0.tables.user_ids),
+                    np.asarray(st.tables.user_ids)):
+        assert a == b
+
+
+def test_dics_item_eviction_clears_co_rows():
+    st = state_lib.init_dics_state(4, 4)
+    t = st.tables._replace(
+        item_ids=jnp.arange(4, dtype=jnp.int32),
+        user_ids=jnp.arange(4, dtype=jnp.int32),
+        item_freq=jnp.asarray([1, 9, 9, 9], jnp.int32),
+        user_freq=jnp.full((4,), 9, jnp.int32),
+        clock=jnp.int32(10),
+    )
+    st = st._replace(tables=t, co=jnp.ones((4, 4)), item_cnt=jnp.ones(4))
+    out = apply_forgetting(st, ForgettingConfig(policy="lfu", lfu_min_freq=2))
+    co = np.asarray(out.co)
+    assert np.all(co[0, :] == 0) and np.all(co[:, 0] == 0)
+    assert np.all(co[1:, 1:] == 1)
+    assert float(out.item_cnt[0]) == 0.0
+
+
+def test_evict_to_budget_bounds_occupancy():
+    st = evict_to_budget(_populated(), user_budget=3, item_budget=2,
+                         policy="lru")
+    u_occ, i_occ = state_lib.occupancy(st.tables)
+    assert int(u_occ) <= 3
+    assert int(i_occ) <= 2
+
+
+def test_gradual_forgetting_decays_state():
+    """Paper future work: gradual forgetting shrinks learned state smoothly
+    instead of hard-evicting it."""
+    st0 = _populated()
+    st = apply_forgetting(st0, ForgettingConfig(policy="gradual",
+                                                gradual_gamma=0.5))
+    np.testing.assert_allclose(np.asarray(st.user_vecs),
+                               0.5 * np.asarray(st0.user_vecs))
+    np.testing.assert_allclose(np.asarray(st.item_vecs),
+                               0.5 * np.asarray(st0.item_vecs))
+    # Nothing is evicted: ids and history survive.
+    np.testing.assert_array_equal(np.asarray(st.tables.user_ids),
+                                  np.asarray(st0.tables.user_ids))
+    np.testing.assert_array_equal(np.asarray(st.rated), np.asarray(st0.rated))
+
+
+def test_gradual_forgetting_dics():
+    st0 = state_lib.init_dics_state(4, 4)
+    st0 = st0._replace(co=jnp.ones((4, 4)), item_cnt=2 * jnp.ones(4))
+    st = apply_forgetting(st0, ForgettingConfig(policy="gradual",
+                                                gradual_gamma=0.5))
+    np.testing.assert_allclose(np.asarray(st.co), 0.5)
+    np.testing.assert_allclose(np.asarray(st.item_cnt), 1.0)

@@ -1,0 +1,95 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("b,i,k", [(8, 64, 4), (64, 300, 10), (128, 1024, 32),
+                                   (17, 130, 7)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_masked_scores_sweep(b, i, k, dtype):
+    u = jnp.asarray(RNG.normal(size=(b, k)), dtype)
+    it = jnp.asarray(RNG.normal(size=(i, k)), dtype)
+    mask = jnp.asarray(RNG.random((b, i)) > 0.3)
+    got = ops.masked_scores(u, it, mask)
+    want = ref.masked_scores(u, it, mask)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("u_cap,i_cap,k,e", [(16, 16, 4, 10), (64, 48, 10, 100),
+                                             (128, 64, 32, 257)])
+def test_isgd_update_sweep(u_cap, i_cap, k, e):
+    ut = jnp.asarray(RNG.normal(size=(u_cap, k)) * 0.1, jnp.float32)
+    it = jnp.asarray(RNG.normal(size=(i_cap, k)) * 0.1, jnp.float32)
+    us = jnp.asarray(RNG.integers(0, u_cap, e), jnp.int32)
+    isl = jnp.asarray(RNG.integers(0, i_cap, e), jnp.int32)
+    val = jnp.asarray(RNG.random(e) > 0.15)
+    got_u, got_i = ops.isgd_update(ut, it, us, isl, val, eta=0.05, lam=0.01)
+    want_u, want_i = ref.isgd_apply(ut, it, us, isl, val, eta=0.05, lam=0.01)
+    np.testing.assert_allclose(np.asarray(got_u), np.asarray(want_u),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(got_i), np.asarray(want_i),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_isgd_sequential_dependency():
+    """Events touching the same rows must apply in order (not parallel)."""
+    k = 4
+    ut = jnp.ones((4, k), jnp.float32) * 0.3
+    it = jnp.ones((4, k), jnp.float32) * 0.3
+    us = jnp.zeros((8,), jnp.int32)
+    isl = jnp.zeros((8,), jnp.int32)
+    val = jnp.ones((8,), bool)
+    got_u, got_i = ops.isgd_update(ut, it, us, isl, val, eta=0.1, lam=0.0)
+    want_u, want_i = ref.isgd_apply(ut, it, us, isl, val, eta=0.1, lam=0.0)
+    np.testing.assert_allclose(np.asarray(got_u), np.asarray(want_u),
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(got_i), np.asarray(want_i),
+                               rtol=1e-5)
+
+
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (4, 2), (8, 1)])
+@pytest.mark.parametrize("window", [None, 32, 128])
+def test_swa_attention_sweep(hq, hkv, window):
+    b, s, d = 2, 256, 32
+    q = jnp.asarray(RNG.normal(size=(b, hq, s, d)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(b, hkv, s, d)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(b, hkv, s, d)), jnp.float32)
+    got = ops.swa_attention(q, k, v, window=window, block_q=64, block_k=64)
+    want = ref.swa_attention(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_swa_attention_dtype(dtype):
+    b, hq, hkv, s, d = 1, 2, 1, 128, 64
+    q = jnp.asarray(RNG.normal(size=(b, hq, s, d)), dtype)
+    k = jnp.asarray(RNG.normal(size=(b, hkv, s, d)), dtype)
+    v = jnp.asarray(RNG.normal(size=(b, hkv, s, d)), dtype)
+    got = ops.swa_attention(q, k, v, window=64, block_q=64, block_k=64)
+    want = ref.swa_attention(q, k, v, window=64)
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+def test_swa_small_sequence_fallback():
+    """Short sequences use the oracle path (same results by construction)."""
+    b, hq, hkv, s, d = 1, 2, 2, 16, 8
+    q = jnp.asarray(RNG.normal(size=(b, hq, s, d)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(b, hkv, s, d)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(b, hkv, s, d)), jnp.float32)
+    got = ops.swa_attention(q, k, v, window=4)
+    want = ref.swa_attention(q, k, v, window=4)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)

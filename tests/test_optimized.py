@@ -1,0 +1,53 @@
+"""Optimized presets and perf knobs (§Perf winners) stay well-formed."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.configs.optimized import OPTIMIZED, apply_optimized, cfg_id
+from repro.configs.shapes import SHAPES, plan_for
+
+
+def test_preset_ids_resolve():
+    names = {cfg_id(get_config(a)): a for a in ARCH_IDS}
+    for preset in OPTIMIZED:
+        assert preset in names, preset
+
+
+@pytest.mark.parametrize("arch_id", sorted(OPTIMIZED))
+def test_apply_optimized_changes_config(arch_id):
+    cfg = get_config(arch_id)
+    opt = apply_optimized(cfg)
+    assert opt != cfg
+    # Assigned architecture hyperparameters are untouched.
+    for f in ("n_layers", "d_model", "n_heads", "n_kv_heads", "d_ff",
+              "vocab"):
+        assert getattr(opt, f) == getattr(cfg, f)
+
+
+def test_swa_variant_enables_long_context():
+    """The beyond-paper SWA variant lifts the long_500k skip."""
+    cfg = get_config("stablelm_3b")
+    assert plan_for(cfg, SHAPES["long_500k"]).startswith("skip")
+    swa = dataclasses.replace(cfg, window=4096)
+    assert plan_for(swa, SHAPES["long_500k"]) == "run"
+
+
+def test_bf16_scan_dtype_close_to_f32():
+    """The ssm.scan_dtype perf knob keeps the forward numerically sane."""
+    from repro.data.tokens import make_batch
+    from repro.models.factory import build
+
+    cfg = get_smoke_config("hymba_1p5b")
+    cfg16 = dataclasses.replace(
+        cfg, ssm=dataclasses.replace(cfg.ssm, scan_dtype="bfloat16"))
+    batch = {k: jnp.asarray(v) for k, v in make_batch(cfg, 2, 64, 0).items()}
+    params = build(cfg).init(jax.random.key(0))
+    l32, _ = jax.jit(build(cfg).loss_fn)(params, batch)
+    l16, _ = jax.jit(build(cfg16).loss_fn)(params, batch)
+    assert np.isfinite(float(l16))
+    assert abs(float(l16) - float(l32)) < 0.05 * abs(float(l32))

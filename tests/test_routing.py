@@ -1,0 +1,96 @@
+"""Property tests for the S&R routing (paper Algorithm 1 invariants)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import routing
+
+grids = st.builds(
+    routing.GridSpec,
+    n_i=st.integers(1, 8),
+    w=st.integers(0, 4),
+)
+
+
+@given(grids, st.integers(0, 10**6), st.integers(0, 10**6))
+@settings(max_examples=200, deadline=None)
+def test_intersection_is_singleton(grid, u, i):
+    """Each (user, item) pair hits exactly one worker."""
+    inter = routing.item_candidates(i, grid) & routing.user_candidates(u, grid)
+    assert len(inter) == 1
+    assert next(iter(inter)) < grid.n_c
+
+
+@given(grids, st.integers(0, 10**6), st.integers(0, 10**6))
+@settings(max_examples=200, deadline=None)
+def test_vectorized_matches_reference(grid, u, i):
+    assert int(routing.route_key(u, i, grid)) == \
+        routing.generate_key_reference(u, i, grid)
+
+
+@given(grids, st.integers(0, 10**6))
+@settings(max_examples=100, deadline=None)
+def test_replication_spans(grid, ident):
+    """Items replicate across g workers (their row); users across n_i."""
+    assert len(routing.item_candidates(ident, grid)) == grid.g
+    assert len(routing.user_candidates(ident, grid)) == grid.n_i
+
+
+@given(grids)
+@settings(max_examples=50, deadline=None)
+def test_paper_worker_count_constraint(grid):
+    """n_c = n_i^2 + w * n_i (paper Section 4)."""
+    assert grid.n_c == grid.n_i ** 2 + grid.w * grid.n_i
+
+
+def test_uniform_load_on_uniform_ids():
+    grid = routing.GridSpec(4, 0)
+    rng = np.random.default_rng(0)
+    u = rng.integers(0, 100_000, 16000)
+    i = rng.integers(0, 50_000, 16000)
+    keys = np.asarray(routing.route_key(jnp.asarray(u), jnp.asarray(i), grid))
+    counts = np.bincount(keys, minlength=grid.n_c)
+    assert counts.min() > 0.5 * counts.mean()
+
+
+@given(
+    st.lists(st.integers(0, 31), min_size=1, max_size=200),
+    st.integers(1, 8),
+    st.integers(1, 16),
+)
+@settings(max_examples=100, deadline=None)
+def test_bucket_dispatch_np_vs_jax(keys, n_workers, capacity):
+    keys = np.asarray(keys) % n_workers
+    b_np, kept_np, load_np = routing.bucket_dispatch_np(keys, n_workers,
+                                                        capacity)
+    b_j, kept_j, load_j = routing.bucket_dispatch(
+        jnp.asarray(keys, jnp.int32), n_workers, capacity
+    )
+    np.testing.assert_array_equal(b_np, np.asarray(b_j))
+    np.testing.assert_array_equal(kept_np, np.asarray(kept_j))
+    np.testing.assert_array_equal(load_np, np.asarray(load_j))
+
+
+@given(
+    st.lists(st.integers(0, 1023), min_size=1, max_size=300),
+    st.lists(st.integers(0, 1023), min_size=1, max_size=300),
+)
+@settings(max_examples=50, deadline=None)
+def test_bucket_contents_route_correctly(us, its):
+    n = min(len(us), len(its))
+    us, its = np.asarray(us[:n]), np.asarray(its[:n])
+    grid = routing.GridSpec(2, 1)
+    keys = np.asarray(routing.route_key(jnp.asarray(us), jnp.asarray(its),
+                                        grid))
+    buckets, kept, _ = routing.bucket_dispatch_np(keys, grid.n_c, 8)
+    # Every kept event appears exactly once, in its own worker's bucket.
+    seen = []
+    for w in range(grid.n_c):
+        for e in buckets[w]:
+            if e >= 0:
+                assert keys[e] == w
+                seen.append(e)
+    assert sorted(seen) == sorted(np.nonzero(kept)[0].tolist())

@@ -1,0 +1,72 @@
+"""End-to-end system behaviour of the streaming recommender (the paper's
+headline claims, reduced scale)."""
+
+import numpy as np
+import pytest
+
+from repro.core.disgd import DisgdHyper
+from repro.core.forgetting import ForgettingConfig
+from repro.core.pipeline import StreamConfig, run_stream
+from repro.core.routing import GridSpec
+from repro.data.stream import MOVIELENS_25M, scaled, synth_stream
+
+
+@pytest.fixture(scope="module")
+def stream():
+    users, items, _ = synth_stream(scaled(MOVIELENS_25M, 0.002), seed=0)
+    return users[:2500], items[:2500]
+
+
+def _run(stream, n_i, forgetting=None):
+    users, items = stream
+    grid = GridSpec(n_i)
+    cfg = StreamConfig(
+        algorithm="disgd", grid=grid, micro_batch=512,
+        hyper=DisgdHyper(u_cap=max(64, 512 // grid.g),
+                         i_cap=max(16, 64 // grid.n_i)),
+        forgetting=forgetting or ForgettingConfig(),
+    )
+    return run_stream(users, items, cfg)
+
+
+def test_recall_improves_with_replication(stream):
+    """Paper Fig. 3: S&R recall beats the central baseline."""
+    central = _run(stream, 1)
+    dist = _run(stream, 2)
+    assert dist.recall.mean() > central.recall.mean() * 1.1
+
+
+def test_per_worker_state_shrinks(stream):
+    """Paper Fig. 4: mean per-worker state drops as n_i grows."""
+    central = _run(stream, 1).occupancy_summary()
+    dist = _run(stream, 2).occupancy_summary()
+    assert dist["user_mean"] < 0.75 * central["user_mean"]
+    assert dist["item_mean"] < 0.75 * central["item_mean"]
+
+
+def test_no_events_lost(stream):
+    users, _ = stream
+    res = _run(stream, 2)
+    assert res.events_processed + res.dropped == users.size
+    assert res.dropped < 0.02 * users.size
+
+
+def test_forgetting_bounds_memory(stream):
+    lru = ForgettingConfig(policy="lru", trigger_every=512, lru_max_age=400)
+    plain = _run(stream, 2).occupancy_summary()
+    forgot = _run(stream, 2, lru).occupancy_summary()
+    assert forgot["user_mean"] < plain["user_mean"]
+
+
+def test_recall_curve_in_unit_interval(stream):
+    res = _run(stream, 2)
+    curve = res.recall.curve(window=500)
+    assert curve.size > 0
+    assert float(curve.min()) >= 0.0 and float(curve.max()) <= 1.0
+
+
+def test_load_history_tracks_skew(stream):
+    res = _run(stream, 2)
+    loads = np.stack(res.load_history)
+    assert loads.shape[1] == 4  # n_c workers
+    assert loads.sum() >= res.events_processed

@@ -1,0 +1,59 @@
+"""System-level sanity: public API importability + end-to-end wiring."""
+
+import importlib
+
+import pytest
+
+
+@pytest.mark.parametrize("module", [
+    "repro.core.routing", "repro.core.state", "repro.core.disgd",
+    "repro.core.dics", "repro.core.forgetting", "repro.core.evaluator",
+    "repro.core.pipeline", "repro.core.distributed",
+    "repro.data.stream", "repro.data.tokens",
+    "repro.models.module", "repro.models.transformer", "repro.models.factory",
+    "repro.models.layers.attention", "repro.models.layers.moe",
+    "repro.models.layers.mamba", "repro.models.layers.xlstm",
+    "repro.kernels.ops", "repro.kernels.ref",
+    "repro.optim", "repro.checkpoint",
+    "repro.sharding.specs", "repro.sharding.ctx",
+    "repro.roofline", "repro.launch.mesh",
+    "repro.configs",
+])
+def test_imports(module):
+    importlib.import_module(module)
+
+
+def test_configs_registry_complete():
+    from repro.configs import ARCH_IDS, get_config, get_smoke_config
+    assert len(ARCH_IDS) == 10
+    families = {get_config(a).family for a in ARCH_IDS}
+    assert families == {"dense", "moe", "ssm", "hybrid", "vlm", "audio"}
+    for a in ARCH_IDS:
+        smoke = get_smoke_config(a)
+        full = get_config(a)
+        assert smoke.family == full.family
+
+
+def test_shapes_registry():
+    from repro.configs import SHAPES
+    assert set(SHAPES) == {"train_4k", "prefill_32k", "decode_32k",
+                           "long_500k"}
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["long_500k"].seq_len == 524_288
+
+
+def test_roofline_collective_parser():
+    from repro.roofline.analysis import collective_bytes
+    hlo = """
+      %ag = bf16[16,1024]{1,0} all-gather(%x), replica_groups={{0,1,2,3}}
+      %ar.1 = f32[256]{0} all-reduce(%y), to_apply=%sum
+      %rs = f32[64]{0} reduce-scatter(%z), replica_groups=[4,4]<=[16]
+      %other = f32[8]{0} add(%a, %b)
+    """
+    got = collective_bytes(hlo)
+    assert got["all-gather"] == 16 * 1024 * 2
+    assert got["all-reduce"] == 256 * 4
+    assert got["reduce-scatter"] == 64 * 4 * 4  # scaled by group size
+    assert got["counts"]["all-gather"] == 1
+    assert got["total"] == got["all-gather"] + got["all-reduce"] + \
+        got["reduce-scatter"]
