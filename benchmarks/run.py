@@ -2,15 +2,45 @@
 ``name,us_per_call,derived`` CSV.
 
   PYTHONPATH=src python -m benchmarks.run [--only recall,kernels] [--fast]
+  PYTHONPATH=src python -m benchmarks.run --smoke   # CI: BENCH_smoke.json
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import sys
 import time
 
 SUITES = ("kernels", "recall", "memory", "forgetting", "throughput", "skew")
+
+
+def smoke(out_path: str = "BENCH_smoke.json", events: int = 4096) -> None:
+    """Tiny host-vs-engine throughput check emitted as a JSON artifact so
+    CI runs leave a perf trajectory behind."""
+    import jax
+
+    from benchmarks import bench_throughput
+
+    t0 = time.perf_counter()
+    rows = bench_throughput.smoke_rows(events)
+    payload = {
+        "suite": "smoke",
+        "events": events,
+        "backend": jax.default_backend(),
+        "python": platform.python_version(),
+        "jax": jax.__version__,
+        "rows": rows,
+        "total_seconds": time.perf_counter() - t0,
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    for row in rows:
+        print(f"{row['name']},{1e6 / max(row['events_per_sec'], 1e-9):.2f},"
+              f"events/s={row['events_per_sec']:,.0f}")
+    print(f"# wrote {out_path} in {payload['total_seconds']:.1f}s",
+          file=sys.stderr)
 
 
 def main() -> None:
@@ -19,7 +49,13 @@ def main() -> None:
                     help="comma-separated subset of: " + ",".join(SUITES))
     ap.add_argument("--fast", action="store_true",
                     help="quarter-size streams (CI mode)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny throughput check, writes BENCH_smoke.json")
+    ap.add_argument("--smoke-out", default="BENCH_smoke.json")
     args = ap.parse_args()
+    if args.smoke:
+        smoke(args.smoke_out)
+        return
     only = set(args.only.split(",")) if args.only else set(SUITES)
 
     from benchmarks import (bench_forgetting, bench_kernels, bench_memory,

@@ -66,11 +66,22 @@ def score_items(u_vec, item_vecs, item_ids, rated_row):
 
 
 def _recommend_hit(u_vec, item_vecs, item_ids, rated_row, i_id, top_n: int):
-    """Prequential Recall@N for one event: is ``i_id`` in the top-N list?"""
+    """Prequential Recall@N for one event: is ``i_id`` in the top-N list?
+
+    Computed as a rank count rather than a ``top_k`` sort — the target is
+    in the top-N list iff fewer than N candidates outrank it (strictly
+    greater score, or equal score at a smaller slot index, matching
+    ``lax.top_k``'s index tie-breaking). O(I_cap) vector ops instead of a
+    sort, which dominates the per-event cost of the worker scan.
+    """
     scores = score_items(u_vec, item_vecs, item_ids, rated_row)
-    top_scores, top_idx = jax.lax.top_k(scores, min(top_n, scores.shape[-1]))
-    hit = jnp.any((item_ids[top_idx] == i_id) & jnp.isfinite(top_scores))
-    return hit
+    i_cap = scores.shape[-1]
+    t_slot = jnp.argmax(item_ids == i_id)
+    s_t = jnp.where(item_ids[t_slot] == i_id, scores[t_slot], -jnp.inf)
+    ahead = jnp.sum(scores > s_t) + jnp.sum(
+        (scores == s_t) & (jnp.arange(i_cap) < t_slot)
+    )
+    return jnp.isfinite(s_t) & (ahead < min(top_n, i_cap))
 
 
 def disgd_worker_step(state: DisgdState, events, hyper: DisgdHyper, key: jax.Array):
@@ -85,11 +96,28 @@ def disgd_worker_step(state: DisgdState, events, hyper: DisgdHyper, key: jax.Arr
     Returns:
       (new_state, hits, evaluated): ``hits`` bool[capacity] prequential
       Recall@N bits, ``evaluated`` bool[capacity] False on padding.
+
+    The per-event writes are expressed as masked row/element scatters
+    rather than ``lax.cond`` over the whole state: under the pipeline's
+    ``vmap`` over workers, ``cond`` lowers to a select that materializes
+    both branches — i.e. a full copy of every factor table and the rated
+    bitmap *per event*. Masked scatters keep each scan iteration O(rows
+    touched), which is the difference between the step being copy-bound
+    and compute-bound.
     """
     u_ids, i_ids = events
+    # Replica-consistent init vectors for the whole bucket in one batched
+    # PRNG pass (fold_in per id, so values are identical to per-event
+    # computation; unused lanes are discarded by the masks below).
+    init_us = jax.vmap(
+        lambda ident: init_vector(key, ident, hyper.k, hyper.init_scale)
+    )(u_ids)
+    init_is = jax.vmap(
+        lambda ident: init_vector(key, ident, hyper.k, hyper.init_scale)
+    )(i_ids)
 
     def body(st: DisgdState, ev):
-        u_id, i_id = ev
+        u_id, i_id, init_u, init_i = ev
         valid = u_id >= 0
         t = st.tables
 
@@ -99,16 +127,8 @@ def disgd_worker_step(state: DisgdState, events, hyper: DisgdHyper, key: jax.Arr
         new_u = t.user_ids[u_slot] != u_id
         new_i = t.item_ids[i_slot] != i_id
 
-        u_vec = jnp.where(
-            new_u,
-            init_vector(key, u_id, hyper.k, hyper.init_scale),
-            st.user_vecs[u_slot],
-        )
-        i_vec = jnp.where(
-            new_i,
-            init_vector(key, i_id, hyper.k, hyper.init_scale),
-            st.item_vecs[i_slot],
-        )
+        u_vec = jnp.where(new_u, init_u, st.user_vecs[u_slot])
+        i_vec = jnp.where(new_i, init_i, st.item_vecs[i_slot])
         # A reused slot may carry the previous tenant's history: mask it.
         rated_row = jnp.where(new_u, False, st.rated[u_slot])
         rated_row = rated_row.at[i_slot].set(
@@ -125,41 +145,41 @@ def disgd_worker_step(state: DisgdState, events, hyper: DisgdHyper, key: jax.Arr
         u_new = u_vec + hyper.eta * (err * i_vec - hyper.lam * u_vec)
         i_new = i_vec + hyper.eta * (err * u_vec - hyper.lam * i_vec)
 
-        def write(st: DisgdState) -> DisgdState:
-            t = st.tables
-            clock = t.clock + 1
-            t = t._replace(
-                user_ids=t.user_ids.at[u_slot].set(u_id),
-                item_ids=t.item_ids.at[i_slot].set(i_id),
-                user_freq=t.user_freq.at[u_slot].set(
-                    jnp.where(new_u, 1, t.user_freq[u_slot] + 1)
-                ),
-                item_freq=t.item_freq.at[i_slot].set(
-                    jnp.where(new_i, 1, t.item_freq[i_slot] + 1)
-                ),
-                user_ts=t.user_ts.at[u_slot].set(clock),
-                item_ts=t.item_ts.at[i_slot].set(clock),
-                clock=clock,
-            )
-            # Collision-eviction path: clear the previous tenant's history.
-            # (No-op when capacity covers the id space; lax.cond keeps the
-            # common path O(1) instead of materializing the full bitmap.)
-            rated = jax.lax.cond(
-                new_u, lambda r: r.at[u_slot, :].set(False), lambda r: r, st.rated
-            )
-            rated = jax.lax.cond(
-                new_i, lambda r: r.at[:, i_slot].set(False), lambda r: r, rated
-            )
-            rated = rated.at[u_slot, i_slot].set(True)
-            return DisgdState(
-                tables=t,
-                user_vecs=st.user_vecs.at[u_slot].set(u_new),
-                item_vecs=st.item_vecs.at[i_slot].set(i_new),
-                rated=rated,
-            )
+        # --- masked writes: padding events scatter out-of-bounds and are
+        # skipped by mode="drop" (cheaper than gather + select + write) ---
+        w = valid
+        wu = jnp.where(w, u_slot, hyper.u_cap)    # drop target on padding
+        wi = jnp.where(w, i_slot, hyper.i_cap)
+        clock = t.clock + w.astype(t.clock.dtype)
+        tables = t._replace(
+            user_ids=t.user_ids.at[wu].set(u_id, mode="drop"),
+            item_ids=t.item_ids.at[wi].set(i_id, mode="drop"),
+            user_freq=t.user_freq.at[wu].set(
+                jnp.where(new_u, 1, t.user_freq[u_slot] + 1), mode="drop"),
+            item_freq=t.item_freq.at[wi].set(
+                jnp.where(new_i, 1, t.item_freq[i_slot] + 1), mode="drop"),
+            user_ts=t.user_ts.at[wu].set(clock, mode="drop"),
+            item_ts=t.item_ts.at[wi].set(clock, mode="drop"),
+            clock=clock,
+        )
+        # Collision eviction: clear the evicted item's column, then the
+        # evicted user's row, then mark the rated pair (same order as the
+        # hash-map semantics; no-ops when capacity covers the id space).
+        rated = st.rated.at[:, jnp.where(w & new_i, i_slot, hyper.i_cap)].set(
+            jnp.zeros_like(st.rated[:, 0]), mode="drop")
+        row = jnp.where(w & new_u, False, rated[u_slot])
+        row = row.at[jnp.where(w, i_slot, hyper.i_cap)].set(True, mode="drop")
+        rated = rated.at[wu].set(row, mode="drop")
 
-        st = jax.lax.cond(valid, write, lambda s: s, st)
+        st = DisgdState(
+            tables=tables,
+            user_vecs=st.user_vecs.at[wu].set(u_new, mode="drop"),
+            item_vecs=st.item_vecs.at[wi].set(i_new, mode="drop"),
+            rated=rated,
+        )
         return st, (hit, valid)
 
-    state, (hits, evaluated) = jax.lax.scan(body, state, (u_ids, i_ids))
+    state, (hits, evaluated) = jax.lax.scan(
+        body, state, (u_ids, i_ids, init_us, init_is)
+    )
     return state, hits, evaluated

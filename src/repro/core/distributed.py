@@ -18,14 +18,34 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+
+try:  # jax >= 0.5 exposes shard_map at top level
+    from jax import shard_map
+except ImportError:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map
 
 from repro.core import dics as dics_lib
 from repro.core import disgd as disgd_lib
 from repro.core import state as state_lib
 from repro.core.pipeline import StreamConfig
 
-__all__ = ["grid_axes", "make_grid_step", "init_grid_states", "grid_state_specs"]
+__all__ = [
+    "grid_axes",
+    "make_grid_step",
+    "make_flat_grid_worker",
+    "init_grid_states",
+    "grid_state_specs",
+]
+
+
+def _shard_map_nocheck(f, *, mesh, in_specs, out_specs):
+    """shard_map with replication checking off (kwarg renamed across jax)."""
+    try:
+        return shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=False)
+    except TypeError:
+        return shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False)
 
 
 def grid_axes(mesh):
@@ -62,8 +82,8 @@ def grid_state_specs(cfg: StreamConfig, mesh):
     return jax.tree.map(lambda x: P(item_ax, user), states)
 
 
-def make_grid_step(cfg: StreamConfig, mesh):
-    """jit(shard_map(worker_step)) over the device grid.
+def _make_grid_step_unjitted(cfg: StreamConfig, mesh):
+    """shard_map(worker_step) over the device grid (not jitted).
 
     Args (to the returned fn):
       states: stacked worker states (n_i, g, ...), sharded on the grid.
@@ -94,11 +114,38 @@ def make_grid_step(cfg: StreamConfig, mesh):
             ev[None, None],
         )
 
-    sharded = shard_map(
+    return _shard_map_nocheck(
         local,
         mesh=mesh,
         in_specs=(state_spec, ev_spec, ev_spec),
         out_specs=(state_spec, ev_spec, ev_spec),
-        check_vma=False,
     )
-    return jax.jit(sharded)
+
+
+def make_grid_step(cfg: StreamConfig, mesh):
+    """jit(shard_map(worker_step)) over the device grid."""
+    return jax.jit(_make_grid_step_unjitted(cfg, mesh))
+
+
+def make_flat_grid_worker(cfg: StreamConfig, mesh):
+    """Engine adapter: worker-major [n_c, ...] <-> mesh grid (n_i, g, ...).
+
+    The device-resident engine (``core/engine.py``) lays buckets out
+    worker-major (``key = row * g + col``); this wraps the shard_map grid
+    step so each S&R worker runs at its mesh coordinate while the engine
+    scan stays layout-agnostic.
+    """
+    n_i, g = _grid_shape(mesh)
+    assert cfg.grid.n_i == n_i and cfg.grid.g == g, (cfg.grid, n_i, g)
+    grid_step = _make_grid_step_unjitted(cfg, mesh)
+
+    def worker(states, ev_u, ev_i):
+        to_grid = lambda x: x.reshape((n_i, g) + x.shape[1:])
+        states_g = jax.tree.map(to_grid, states)
+        s2, hits, ev = grid_step(
+            states_g, to_grid(ev_u), to_grid(ev_i)
+        )
+        flat = lambda x: x.reshape((n_i * g,) + x.shape[2:])
+        return jax.tree.map(flat, s2), flat(hits), flat(ev)
+
+    return worker

@@ -57,6 +57,14 @@ class RecallAccumulator:
         bits[flat_idx[sel]] = flat_hits[sel]
         self._bits.append(bits)
 
+    def add_raw(self, bits: np.ndarray):
+        """Append an already stream-ordered bit row (NaN = not evaluated).
+
+        Used by the device-resident engine, whose scan emits the scattered
+        rows directly (``engine.run_stream_device``).
+        """
+        self._bits.append(np.asarray(bits, np.float64))
+
     def bits(self) -> np.ndarray:
         """Recall bits in stream order; NaN = dropped/not evaluated."""
         if not self._bits:

@@ -1,21 +1,28 @@
 """End-to-end S&R streaming pipeline (paper Figure 1/2).
 
 Ties together routing (Alg. 1), the per-worker incremental algorithms
-(Alg. 2 / Alg. 3), forgetting, and prequential evaluation (Alg. 4) into the
-micro-batched streaming loop described in DESIGN.md §2:
+(Alg. 2 / Alg. 3), forgetting, and prequential evaluation (Alg. 4) into a
+micro-batched streaming loop. ``run_stream`` is a thin dispatcher over
+execution backends (``StreamConfig.backend``):
 
-  host: key events (Alg. 1) -> capacity buckets -> device
-  device: every worker ``lax.scan``s its bucket (recommend -> eval -> train)
-  host: scatter recall bits back to stream order; trigger forgetting scans
+  * ``"host"`` — the interpretable reference loop in this module:
+    host-side bucketing (Alg. 1) -> device worker steps -> host scatter of
+    recall bits; states round-trip host<->device every micro-batch.
+  * ``"scan"`` / ``"pallas"`` / ``"shard_map"`` — the device-resident
+    engine (``repro.core.engine``): the whole prequential loop is one
+    jitted ``lax.scan`` with on-device dispatch, in-scan forgetting and
+    overflow re-queue; states never leave the device. See the engine
+    module docstring for the worker execution modes.
 
 Workers are simulated on CPU with ``vmap`` over the worker axis; the same
-step functions run under ``shard_map`` on the production mesh via
-``repro.launch`` (each mesh coordinate = one worker).
+step functions run under ``shard_map`` on the production mesh
+(``core/distributed.py``, each mesh coordinate = one worker).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from functools import partial
 from typing import Any, Callable
@@ -43,6 +50,8 @@ class StreamConfig:
     hyper: Any = None                        # DisgdHyper | DicsHyper (caps etc.)
     seed: int = 0
     record_every: int = 4                    # occupancy snapshot cadence
+    backend: str = "host"                    # "host"|"scan"|"pallas"|"shard_map"
+    carry_slots: int = 0                     # overflow re-queue size (0 = micro_batch)
 
     def resolved_hyper(self):
         h = self.hyper
@@ -83,24 +92,24 @@ class StreamResult:
 
 
 def make_worker_step(cfg: StreamConfig) -> Callable:
-    """vmapped + jitted micro-batch step over all workers."""
-    hyper = cfg.resolved_hyper()
-    key = jax.random.key(cfg.seed)
+    """vmapped + jitted micro-batch step over all workers.
 
-    if cfg.algorithm == "disgd":
-        def one(state, ev):
-            return disgd_lib.disgd_worker_step(state, ev, hyper, key)
-    elif cfg.algorithm == "dics":
-        def one(state, ev):
-            return dics_lib.dics_worker_step(state, ev, hyper)
-    else:
-        raise ValueError(cfg.algorithm)
+    Memoized on the (hashable, frozen) config so repeated runs — e.g.
+    benchmark repeats — reuse the compiled executable instead of
+    re-tracing.
+    """
+    return _make_worker_step_cached(cfg)
 
-    stepped = jax.vmap(one, in_axes=(0, 0))
+
+@functools.lru_cache(maxsize=32)
+def _make_worker_step_cached(cfg: StreamConfig) -> Callable:
+    from repro.core import engine
+
+    worker = engine.make_worker_fn(cfg)
 
     @jax.jit
     def step(states, ev_u, ev_i):
-        return stepped(states, (ev_u, ev_i))
+        return worker(states, ev_u, ev_i)
 
     return step
 
@@ -117,7 +126,16 @@ def init_states(cfg: StreamConfig):
 
 def run_stream(users: np.ndarray, items: np.ndarray, cfg: StreamConfig,
                verbose: bool = False) -> StreamResult:
-    """Run the full prequential stream; returns curves + paper metrics."""
+    """Run the full prequential stream; returns curves + paper metrics.
+
+    Thin dispatcher: ``cfg.backend`` selects the host reference loop below
+    or the device-resident engine (``repro.core.engine``).
+    """
+    if cfg.backend != "host":
+        from repro.core import engine
+
+        return engine.run_stream_device(users, items, cfg, verbose=verbose)
+
     assert users.shape == items.shape
     n = users.shape[0]
     grid = cfg.grid
@@ -141,20 +159,46 @@ def run_stream(users: np.ndarray, items: np.ndarray, cfg: StreamConfig,
 
     occ_fn = jax.jit(jax.vmap(lambda s: state_lib.occupancy(s.tables)))
 
+    # Warm the jitted steps so the wall clock measures streaming, not
+    # compilation — the engine backends AOT-compile before their timer,
+    # and throughput comparisons must be symmetric.
+    dummy = jnp.full((grid.n_c, cap), -1, jnp.int32)
+    jax.block_until_ready(step(states, dummy, dummy))
+    jax.block_until_ready(occ_fn(states))
+    if forget is not None:
+        jax.block_until_ready(forget(states))
+
     t0 = time.perf_counter()
     n_batches = int(np.ceil(n / cfg.micro_batch))
-    for b in range(n_batches):
-        lo, hi = b * cfg.micro_batch, min((b + 1) * cfg.micro_batch, n)
-        bu = np.concatenate([carry_u, users[lo:hi]])
-        bi = np.concatenate([carry_i, items[lo:hi]])
+    empty = np.empty(0, dtype=np.int64)
+    b = 0
+    max_drain = None
+    while True:
+        if b < n_batches:
+            lo, hi = b * cfg.micro_batch, min((b + 1) * cfg.micro_batch, n)
+            fresh_u, fresh_i = users[lo:hi], items[lo:hi]
+        elif carry_u.size == 0:
+            break
+        else:
+            # End-of-stream drain: flush the re-queue through empty
+            # batches so overflow is processed, not dropped. Worst case
+            # (every carried event targets one worker) needs
+            # ceil(carry / capacity) passes; anything left after that
+            # bound is counted as dropped.
+            if max_drain is None:
+                max_drain = n_batches + int(np.ceil(carry_u.size / cap)) + 1
+            if b >= max_drain:
+                dropped += carry_u.size
+                break
+            fresh_u, fresh_i = empty, empty
+        bu = np.concatenate([carry_u, fresh_u])
+        bi = np.concatenate([carry_i, fresh_i])
         keys = (bi % grid.n_i) * grid.g + (bu % grid.g)
         buckets, kept, load = routing.bucket_dispatch_np(
             keys.astype(np.int64), grid.n_c, cap
         )
         # Overflow events re-queue into the next micro-batch (not lost).
         carry_u, carry_i = bu[~kept], bi[~kept]
-        if b == n_batches - 1 and carry_u.size:
-            dropped += carry_u.size  # tail overflow at end of stream
 
         ev_u = np.where(buckets >= 0, bu[np.clip(buckets, 0, None)], -1)
         ev_i = np.where(buckets >= 0, bi[np.clip(buckets, 0, None)], -1)
@@ -172,12 +216,20 @@ def run_stream(users: np.ndarray, items: np.ndarray, cfg: StreamConfig,
             states = forget(states)
             events_since_trigger = 0
 
-        if b % cfg.record_every == 0 or b == n_batches - 1:
+        if b % cfg.record_every == 0:
             u_occ, i_occ = occ_fn(states)
             user_occ.append((processed, np.asarray(u_occ)))
             item_occ.append((processed, np.asarray(i_occ)))
         if verbose and b % 16 == 0:
             print(f"[stream] batch {b}/{n_batches} recall so far: {acc.mean():.4f}")
+        b += 1
+
+    # Final occupancy snapshot, unless the last loop iteration already
+    # recorded this exact point.
+    if n_batches and (not user_occ or user_occ[-1][0] != processed):
+        u_occ, i_occ = occ_fn(states)
+        user_occ.append((processed, np.asarray(u_occ)))
+        item_occ.append((processed, np.asarray(i_occ)))
 
     jax.block_until_ready(states)
     wall = time.perf_counter() - t0

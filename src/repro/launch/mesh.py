@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_cpu_mesh"]
+__all__ = ["make_production_mesh", "make_cpu_mesh", "make_grid_mesh"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -25,3 +25,21 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_cpu_mesh(data: int = 1, model: int = 1):
     """Small mesh over however many (host) devices exist — used in tests."""
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_grid_mesh(grid):
+    """A (data=g, model=n_i) mesh matching an S&R ``GridSpec``.
+
+    One device per worker (``core/distributed.py`` maps item splits to
+    ``model`` and user groups to ``data``). Raises if the host does not
+    expose enough devices — start the process with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` to simulate.
+    """
+    needed = grid.n_c
+    have = len(jax.devices())
+    if have < needed:
+        raise ValueError(
+            f"S&R grid needs {needed} devices ({grid.n_i}x{grid.g}); "
+            f"only {have} available"
+        )
+    return jax.make_mesh((grid.g, grid.n_i), ("data", "model"))

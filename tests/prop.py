@@ -1,0 +1,113 @@
+"""Property-testing shim: use hypothesis when installed, else a fallback.
+
+CI installs ``hypothesis`` (declared in requirements-dev.txt) and gets the
+real engine — shrinking, edge-case generation, the works. Environments
+without it (e.g. hermetic containers) fall back to a tiny deterministic
+random sampler with the same surface so the property tests still *run*
+instead of failing at collection, which is how the seed repo broke.
+
+Only the strategy combinators this repo uses are implemented; extend the
+fallback when a test needs a new one.
+"""
+
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised in CI where hypothesis is installed
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # deterministic fallback sampler
+    import functools
+    import inspect
+    import random as _random
+    import zlib
+    from types import SimpleNamespace
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """A strategy is just ``draw(rng) -> value``."""
+
+        def __init__(self, draw):
+            self.draw = draw
+
+    def _integers(min_value, max_value):
+        return _Strategy(lambda r: r.randint(min_value, max_value))
+
+    def _lists(elements, min_size=0, max_size=10):
+        return _Strategy(
+            lambda r: [elements.draw(r)
+                       for _ in range(r.randint(min_size, max_size))]
+        )
+
+    def _tuples(*strategies):
+        return _Strategy(lambda r: tuple(s.draw(r) for s in strategies))
+
+    def _builds(target, **kwargs):
+        return _Strategy(
+            lambda r: target(**{k: v.draw(r) for k, v in kwargs.items()})
+        )
+
+    def _sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda r: elements[r.randrange(len(elements))])
+
+    def _booleans():
+        return _Strategy(lambda r: bool(r.getrandbits(1)))
+
+    def _floats(min_value=0.0, max_value=1.0, **_):
+        return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+    def _randoms(use_true_random=False):
+        return _Strategy(lambda r: _random.Random(r.getrandbits(31)))
+
+    st = SimpleNamespace(
+        integers=_integers,
+        lists=_lists,
+        tuples=_tuples,
+        builds=_builds,
+        sampled_from=_sampled_from,
+        booleans=_booleans,
+        floats=_floats,
+        randoms=_randoms,
+    )
+
+    def settings(max_examples: int = 100, deadline=None, **_ignored):
+        def deco(fn):
+            fn._prop_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            # ``@settings`` is applied below ``@given`` in every caller, so
+            # the attribute is already on ``fn`` here.
+            max_examples = getattr(fn, "_prop_max_examples", 100)
+
+            @functools.wraps(fn)
+            def runner(*args, **kwargs):
+                # Seed from the test's qualified name: stable across runs
+                # and processes (unlike hash()).
+                name = f"{fn.__module__}.{fn.__qualname__}"
+                rng = _random.Random(zlib.crc32(name.encode()))
+                for example in range(max_examples):
+                    drawn = [s.draw(rng) for s in strategies]
+                    try:
+                        fn(*args, *drawn, **kwargs)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"property falsified on example {example}: "
+                            f"args={drawn!r}"
+                        ) from e
+
+            # pytest must not mistake the test's parameters for fixtures:
+            # present a zero-argument signature.
+            del runner.__wrapped__
+            runner.__signature__ = inspect.Signature()
+            return runner
+
+        return deco
+
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

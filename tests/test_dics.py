@@ -2,7 +2,7 @@
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from tests.prop import given, settings, st
 
 from repro.core import state as state_lib
 from repro.core.dics import DicsHyper, dics_worker_step, similarity_matrix

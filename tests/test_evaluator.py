@@ -1,7 +1,7 @@
 """Prequential evaluator (Alg. 4) aggregation."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from tests.prop import given, settings, st
 
 from repro.core.evaluator import RecallAccumulator, moving_average
 

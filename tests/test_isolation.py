@@ -9,7 +9,7 @@ synchronization, no locking) — stated here as an executable property.
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from tests.prop import given, settings, st
 
 from repro.core.disgd import DisgdHyper
 from repro.core.pipeline import StreamConfig, init_states, make_worker_step
