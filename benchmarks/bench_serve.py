@@ -1,0 +1,170 @@
+"""Serving-plane QPS / latency: batched grid queries vs per-query calls.
+
+Claim under test: the grid query plane (``repro.serve``) serves read-only
+top-N traffic far faster than per-query calls — batching the fan-out
+matmul is where the QPS comes from, exactly the property production
+recommenders rely on to serve orders of magnitude above stream ingest.
+
+``rows()`` sweeps batch size, scoring backend (Pallas kernel vs jnp
+oracle) and grid width ``n_i`` for both algorithms, reporting QPS and
+p50/p99 per-call latency. ``smoke_rows()`` is the CI subset: one DISGD
+config with the batched-vs-per-query speedup, appended to
+``BENCH_smoke.json`` by ``--smoke`` so the artifact tracks the serving
+plane next to the training plane.
+
+  PYTHONPATH=src python -m benchmarks.bench_serve            # full sweep
+  PYTHONPATH=src python -m benchmarks.bench_serve --smoke    # CI row
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+REPEATS = 30
+WARMUP = 3
+
+
+def _trained(algorithm: str, n_i: int, events: int = 4096,
+             micro_batch: int = 512):
+    """Train a grid on the synthetic MovieLens profile; return the pieces
+    the serving plane needs."""
+    from benchmarks.common import make_cfg, stream_for
+    from repro.core.pipeline import run_stream
+
+    users, items = stream_for("movielens", events)
+    cfg = make_cfg(algorithm, "movielens", n_i, backend="scan",
+                   micro_batch=micro_batch)
+    res = run_stream(users, items, cfg)
+    return cfg, res.final_states, np.unique(users)
+
+
+def _serve_args(cfg, batch: int, use_kernel: bool):
+    from repro.serve import plane
+
+    hyper = cfg.resolved_hyper()
+    return dict(
+        algorithm=cfg.algorithm, n_i=cfg.grid.n_i, g=cfg.grid.g,
+        top_n=hyper.top_n, u_cap=hyper.u_cap,
+        qcap=plane.query_capacity(batch, cfg.grid.g),
+        k_nn=getattr(hyper, "k_nn", 10), use_kernel=use_kernel)
+
+
+def _time_calls(fn, n_calls: int):
+    """Per-call wall times (seconds) after warmup; fn must block."""
+    import jax
+
+    for _ in range(WARMUP):
+        jax.block_until_ready(fn())
+    times = np.empty(n_calls)
+    for i in range(n_calls):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        times[i] = time.perf_counter() - t0
+    return times
+
+
+def _measure(states, pool, cfg, batch: int, use_kernel: bool,
+             rng: np.random.Generator):
+    """(qps, p50_ms, p99_ms) for serving ``batch``-sized query batches."""
+    import jax.numpy as jnp
+
+    from repro.serve import grid_topn
+
+    kw = _serve_args(cfg, batch, use_kernel)
+    queries = jnp.asarray(rng.choice(pool, size=batch), jnp.int32)
+    times = _time_calls(lambda: grid_topn(states, queries, **kw)[0], REPEATS)
+    return (batch / times.mean(),
+            float(np.percentile(times, 50) * 1e3),
+            float(np.percentile(times, 99) * 1e3))
+
+
+def rows(events: int = 4096):
+    rng = np.random.default_rng(0)
+    out = []
+    for algorithm in ("disgd", "dics"):
+        for n_i in (1, 4):
+            cfg, states, pool = _trained(algorithm, n_i, events)
+            backends = [(True, "kernel"), (False, "oracle")]
+            if algorithm == "dics":       # DICS scoring has no kernel path
+                backends = [(False, "oracle")]
+            for use_kernel, blabel in backends:
+                for batch in (1, 16, 64):
+                    qps, p50, p99 = _measure(
+                        states, pool, cfg, batch, use_kernel, rng)
+                    out.append({
+                        "name": (f"serve/{algorithm}/n_i={n_i}/"
+                                 f"{blabel}/batch={batch}"),
+                        "us_per_call": 1e6 / max(qps, 1e-9),
+                        "derived": (f"qps={qps:,.0f} p50={p50:.2f}ms"
+                                    f" p99={p99:.2f}ms"),
+                    })
+    return out
+
+
+def smoke_rows(events: int = 4096):
+    """CI subset: batched grid serving vs per-query calls (DISGD, n_i=4).
+
+    The acceptance bar is speedup >= 5x at batch 64 on CPU — batching the
+    fan-out matmul must actually pay, or the serving plane is pointless.
+    """
+    rng = np.random.default_rng(0)
+    cfg, states, pool = _trained("disgd", 4, events)
+    qps1, _, _ = _measure(states, pool, cfg, 1, True, rng)
+    qps64, p50, p99 = _measure(states, pool, cfg, 64, True, rng)
+    return [{
+        "name": "serve/disgd/movielens/n_i=4",
+        "batch": 64,
+        "qps_per_query": qps1,
+        "qps_batch64": qps64,
+        "speedup_batched": qps64 / max(qps1, 1e-9),
+        "p50_ms": p50,
+        "p99_ms": p99,
+    }]
+
+
+def append_smoke(out_path: str = "BENCH_smoke.json",
+                 events: int = 4096) -> None:
+    """Append the serving rows to the CI smoke artifact (created by
+    ``benchmarks.run --smoke``; a fresh payload is written if absent) so
+    one JSON tracks both the training and the serving plane."""
+    new_rows = smoke_rows(events)
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            payload = json.load(f)
+    else:
+        payload = {"suite": "smoke", "rows": []}
+    payload["rows"] = [r for r in payload["rows"]
+                       if not str(r.get("name", "")).startswith("serve/")]
+    payload["rows"].extend(new_rows)
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    for r in new_rows:
+        print(f"{r['name']},qps_batch64={r['qps_batch64']:,.0f},"
+              f"qps_per_query={r['qps_per_query']:,.0f},"
+              f"speedup={r['speedup_batched']:.1f}x,"
+              f"p99={r['p99_ms']:.2f}ms")
+    print(f"# appended serving rows to {out_path}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: append serving rows to the smoke artifact")
+    ap.add_argument("--smoke-out", default="BENCH_smoke.json")
+    ap.add_argument("--events", type=int, default=4096)
+    args = ap.parse_args()
+    if args.smoke:
+        append_smoke(args.smoke_out, args.events)
+        return
+    print("name,us_per_call,derived")
+    for row in rows(args.events):
+        print(f"{row['name']},{row['us_per_call']:.2f},{row['derived']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -13,7 +13,8 @@ import platform
 import sys
 import time
 
-SUITES = ("kernels", "recall", "memory", "forgetting", "throughput", "skew")
+SUITES = ("kernels", "recall", "memory", "forgetting", "throughput", "skew",
+          "serve")
 
 
 def smoke(out_path: str = "BENCH_smoke.json", events: int = 4096) -> None:
@@ -59,7 +60,8 @@ def main() -> None:
     only = set(args.only.split(",")) if args.only else set(SUITES)
 
     from benchmarks import (bench_forgetting, bench_kernels, bench_memory,
-                            bench_recall, bench_skew, bench_throughput)
+                            bench_recall, bench_serve, bench_skew,
+                            bench_throughput)
 
     scale = 4 if args.fast else 1
     plans = {
@@ -69,6 +71,7 @@ def main() -> None:
         "forgetting": lambda: bench_forgetting.rows(12_288 // scale),
         "throughput": lambda: bench_throughput.rows(12_288 // scale),
         "skew": lambda: bench_skew.rows(12_288 // scale),
+        "serve": lambda: bench_serve.rows(4_096 // scale),
     }
 
     print("name,us_per_call,derived")

@@ -30,8 +30,10 @@ import jax.numpy as jnp
 
 from repro.core import state as state_lib
 from repro.core.state import DicsState
+from repro.kernels import ops
 
-__all__ = ["DicsHyper", "dics_worker_step", "dics_scores", "similarity_matrix"]
+__all__ = ["DicsHyper", "dics_worker_step", "dics_scores",
+           "dics_partial_topn", "similarity_matrix"]
 
 
 class DicsHyper(NamedTuple):
@@ -51,12 +53,15 @@ def similarity_matrix(co, item_cnt):
     return sim * (1.0 - jnp.eye(co.shape[0], dtype=co.dtype))
 
 
-def dics_scores(co, item_cnt, rated_row, item_ids, k_nn: int):
+def dics_scores(co, item_cnt, rated_row, item_ids, k_nn: int, *, sim=None):
     """Eq. 7 scores for every local candidate item.
 
     Returns f32[I_cap]; -inf on empty slots and already-rated items.
+    ``sim`` lets batched callers (the serving leaf) precompute Eq. 6 once
+    and share it across queries; the ranking rule itself lives only here.
     """
-    sim = similarity_matrix(co, item_cnt)            # [I_cap, I_cap]
+    if sim is None:
+        sim = similarity_matrix(co, item_cnt)        # [I_cap, I_cap]
     # Restrict neighborhoods to the user's rated history.
     sim_hist = jnp.where(rated_row[None, :], sim, 0.0)
     # Top-k_nn neighbor mass per candidate (TencentRec ranking).
@@ -64,6 +69,42 @@ def dics_scores(co, item_cnt, rated_row, item_ids, k_nn: int):
     scores = jnp.sum(top_vals, axis=-1)
     valid = (item_ids >= 0) & ~rated_row
     return jnp.where(valid, scores, -jnp.inf)
+
+
+def dics_partial_topn(state: DicsState, user_ids, *, top_n: int = 10,
+                      k_nn: int = 10, g: int = 1, u_cap: int = 1024):
+    """One worker's partial top-N (DICS): the Eq. 6/7 serving leaf.
+
+    Read-only scoring of this worker's local item split (``co`` /
+    ``item_cnt`` statistics) for a batch of query users — the DICS
+    counterpart of ``serve.partial_topn``, merged across splits by
+    ``repro.serve.plane``. The similarity matrix (Eq. 6) is built once
+    per call and shared by all queries in the batch.
+
+    Candidates with no positive neighbor mass are excluded (score
+    -inf), matching the training path's ``top_scores > 0`` hit rule: a
+    zero-mass recommendation carries no collaborative signal.
+
+    Returns:
+      (item_ids i32[B, N] global, scores f32[B, N], known bool[B]).
+    """
+    t = state.tables
+    slots = state_lib.slot_of(user_ids, g, u_cap)
+    known = t.user_ids[slots] == user_ids
+    rated = state.rated[slots] & known[:, None]           # [B, I_cap]
+
+    sim = similarity_matrix(state.co, state.item_cnt)     # [I_cap, I_cap]
+
+    def one(rated_row, is_known):
+        scores = dics_scores(state.co, state.item_cnt, rated_row,
+                             t.item_ids, k_nn, sim=sim)
+        cand = is_known & (scores > 0)
+        return jnp.where(cand, scores, -jnp.inf)
+
+    scores = jax.vmap(one)(rated, known)                  # [B, I_cap]
+    ids_b = jnp.broadcast_to(t.item_ids[None, :], scores.shape)
+    top_ids, top_scores = ops.topn_select(scores, ids_b, top_n)
+    return top_ids, top_scores, known
 
 
 def dics_worker_step(state: DicsState, events, hyper: DicsHyper):

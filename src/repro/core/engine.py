@@ -41,7 +41,7 @@ from __future__ import annotations
 import functools
 import time
 from functools import partial
-from typing import Callable
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -54,7 +54,8 @@ from repro.core import routing, state as state_lib
 from repro.core.evaluator import RecallAccumulator
 from repro.kernels import ops
 
-__all__ = ["make_worker_fn", "make_pallas_worker_fn", "run_stream_device"]
+__all__ = ["make_worker_fn", "make_pallas_worker_fn", "run_stream_device",
+           "PublishEvent"]
 
 
 def make_worker_fn(cfg) -> Callable:
@@ -226,7 +227,7 @@ def _make_batch_step(cfg, worker_fn):
     occ_fn = jax.vmap(lambda s: state_lib.occupancy(s.tables))
 
     def live(carry, fresh):
-        states, cu, ci, since, processed, dropped = carry
+        states, cu, ci, since, processed, dropped, forgets = carry
         fu, fi = fresh
         bu = jnp.concatenate([cu, fu])
         bi = jnp.concatenate([ci, fi])
@@ -271,8 +272,9 @@ def _make_batch_step(cfg, worker_fn):
             trigger = since >= cfg.forgetting.trigger_every
             states = jax.lax.cond(trigger, forget, lambda s: s, states)
             since = jnp.where(trigger, 0, since)
+            forgets = forgets + trigger.astype(jnp.int32)
 
-        carry = (states, cu_new, ci_new, since, processed, dropped)
+        carry = (states, cu_new, ci_new, since, processed, dropped, forgets)
         return carry, (bits, load, kept_n)
 
     def dead(carry, fresh):
@@ -315,7 +317,7 @@ def init_scan_carry(cfg, states=None, carry=(None, None)):
         cu = cu.at[:m].set(jnp.asarray(carry_u, jnp.int32)[:m])
         ci = ci.at[:m].set(jnp.asarray(carry_i, jnp.int32)[:m])
     zero = jnp.zeros((), jnp.int32)
-    return (states, cu, ci, zero, zero, jnp.asarray(lost, jnp.int32))
+    return (states, cu, ci, zero, zero, jnp.asarray(lost, jnp.int32), zero)
 
 
 @functools.lru_cache(maxsize=16)
@@ -330,9 +332,37 @@ def _compiled_scan(cfg, steps: int):
     return run.lower(carry0, xs).compile()
 
 
+class PublishEvent(NamedTuple):
+    """Snapshot-boundary payload handed to ``on_publish``.
+
+    ``states`` is the device-resident worker-state pytree at a
+    micro-batch boundary — immutable jax arrays, so holding a reference
+    IS a consistent snapshot: later training builds new buffers and can
+    never mutate what the subscriber holds. ``forgets`` counts forgetting
+    triggers fired so far (serving caches invalidate when it advances).
+    """
+
+    states: Any
+    events_processed: int
+    dropped: int
+    forgets: int
+    segment: int          # 0-based index of the segment just finished
+    steps_done: int       # scan steps completed so far
+
+
 def run_stream_device(users: np.ndarray, items: np.ndarray, cfg,
-                      verbose: bool = False, mesh=None):
-    """Run the whole prequential stream as one jitted scan on device."""
+                      verbose: bool = False, mesh=None,
+                      publish_every: int = 0, on_publish=None):
+    """Run the whole prequential stream as a jitted scan on device.
+
+    With ``publish_every == 0`` (default) the stream is one scan call.
+    With ``publish_every = k > 0`` the scan runs in segments of ``k``
+    micro-batch steps and ``on_publish(PublishEvent)`` fires after each
+    segment — the hook the serving plane's snapshot double-buffer
+    subscribes to (``repro.serve.snapshot``). Worker states stay
+    device-resident across segments; the only extra cost per boundary is
+    the host sync of two scalars plus whatever the callback does.
+    """
     from repro.core.pipeline import StreamResult
 
     assert users.shape == items.shape
@@ -346,8 +376,12 @@ def run_stream_device(users: np.ndarray, items: np.ndarray, cfg,
     drain = int(np.ceil(carry_cap / cap)) if n_batches else 0
     steps = n_batches + drain
 
-    fu = np.full((steps, mb), -1, np.int64)
-    fi = np.full((steps, mb), -1, np.int64)
+    seg = publish_every if publish_every > 0 else max(steps, 1)
+    n_segments = int(np.ceil(steps / seg))
+    steps_padded = max(n_segments, 1) * seg
+
+    fu = np.full((steps_padded, mb), -1, np.int64)
+    fi = np.full((steps_padded, mb), -1, np.int64)
     flat_u = fu[:n_batches].reshape(-1)
     flat_i = fi[:n_batches].reshape(-1)
     flat_u[:n] = users
@@ -362,24 +396,56 @@ def run_stream_device(users: np.ndarray, items: np.ndarray, cfg,
     # the executable; mesh objects are unhashable, so explicit-mesh
     # shard_map runs compile per call.
     if mesh is None and cfg.backend != "shard_map":
-        compiled = _compiled_scan(cfg, steps)
+        compiled = _compiled_scan(cfg, seg)
     else:
         worker_fn = _resolve_worker_fn(cfg, mesh=mesh)
         batch_step, _, _ = _make_batch_step(cfg, worker_fn)
         run = jax.jit(lambda c, x: jax.lax.scan(batch_step, c, x))
-        compiled = run.lower(carry0, xs).compile()
+        xs_seg = jax.tree.map(lambda x: x[:seg], xs)
+        compiled = run.lower(carry0, xs_seg).compile()
 
     t0 = time.perf_counter()
-    (states, cu, ci, _, processed, dropped), outs = compiled(carry0, xs)
+    publish_time = 0.0
+    carry = carry0
+    seg_outs = []
+    for s in range(max(n_segments, 1)):
+        xs_seg = jax.tree.map(lambda x: x[s * seg:(s + 1) * seg], xs)
+        carry, outs = compiled(carry, xs_seg)
+        seg_outs.append(outs)
+        if on_publish is not None:
+            # Publish boundary: sync the progress scalars (states stay on
+            # device) and hand the immutable state tree to the subscriber.
+            # The scalar reads block until the segment's (async-dispatched)
+            # compute finishes — they must complete BEFORE the publish
+            # timer starts, or segment compute would be misattributed to
+            # the subscriber. Only subscriber work (e.g. a serving burst)
+            # is excluded from the training wall clock, keeping throughput
+            # comparable to non-publishing runs.
+            ev = PublishEvent(
+                states=carry[0],
+                events_processed=int(carry[4]),
+                dropped=int(carry[5]),
+                forgets=int(carry[6]),
+                segment=s,
+                steps_done=(s + 1) * seg,
+            )
+            tp = time.perf_counter()
+            on_publish(ev)
+            publish_time += time.perf_counter() - tp
+    states, cu, ci, _, processed, dropped, _ = carry
     jax.block_until_ready(states)
-    wall = time.perf_counter() - t0
+    wall = time.perf_counter() - t0 - publish_time
 
-    bits, loads, kept_n, u_occ, i_occ = map(np.asarray, outs)
+    bits, loads, kept_n, u_occ, i_occ = (
+        np.concatenate([np.asarray(o[j]) for o in seg_outs])
+        for j in range(5)
+    )
     processed = int(processed)
     dropped = int(dropped) + int(np.sum(np.asarray(cu) >= 0))
 
     acc = RecallAccumulator()
-    active = [s for s in range(steps) if loads[s].sum() > 0 or s < n_batches]
+    active = [s for s in range(bits.shape[0])
+              if loads[s].sum() > 0 or s < n_batches]
     for s in active:
         acc.add_raw(bits[s])
     load_history = [loads[s] for s in active]
@@ -401,4 +467,5 @@ def run_stream_device(users: np.ndarray, items: np.ndarray, cfg,
         dropped=dropped,
         wall_seconds=wall,
         load_history=load_history,
+        final_states=states,
     )

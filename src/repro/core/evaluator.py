@@ -26,8 +26,10 @@ def moving_average(bits: np.ndarray, window: int = 5000) -> np.ndarray:
     c = np.cumsum(np.insert(bits, 0, 0.0))
     n = bits.size
     out = np.empty(n)
-    for s in range(min(window, n)):
-        out[s] = c[s + 1] / (s + 1)
+    # Warm-up head (windows still filling): mean over the first t events —
+    # one cumsum slice, not a per-element Python loop over `window` items.
+    warm = min(window, n)
+    out[:warm] = c[1 : warm + 1] / np.arange(1, warm + 1)
     if n > window:
         out[window:] = (c[window + 1 :] - c[1 : n - window + 1]) / window
     return out

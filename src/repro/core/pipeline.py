@@ -75,6 +75,10 @@ class StreamResult:
     dropped: int
     wall_seconds: float
     load_history: list        # per-batch worker loads (skew diagnostics)
+    # Final worker states [n_c, ...] (device-resident pytree) — the input
+    # to the serving plane (`repro.serve`): publish via SnapshotStore or
+    # query directly with `serve.plane.grid_topn`.
+    final_states: Any = None
 
     @property
     def throughput(self) -> float:
@@ -125,16 +129,24 @@ def init_states(cfg: StreamConfig):
 
 
 def run_stream(users: np.ndarray, items: np.ndarray, cfg: StreamConfig,
-               verbose: bool = False) -> StreamResult:
+               verbose: bool = False, publish_every: int = 0,
+               on_publish=None) -> StreamResult:
     """Run the full prequential stream; returns curves + paper metrics.
 
     Thin dispatcher: ``cfg.backend`` selects the host reference loop below
     or the device-resident engine (``repro.core.engine``).
+
+    ``publish_every``/``on_publish`` expose state snapshots at micro-batch
+    boundaries for the serving plane (``repro.serve.snapshot``): every
+    ``publish_every`` micro-batch steps, ``on_publish(PublishEvent)``
+    fires with the immutable worker-state tree at that boundary.
     """
     if cfg.backend != "host":
         from repro.core import engine
 
-        return engine.run_stream_device(users, items, cfg, verbose=verbose)
+        return engine.run_stream_device(
+            users, items, cfg, verbose=verbose,
+            publish_every=publish_every, on_publish=on_publish)
 
     assert users.shape == items.shape
     n = users.shape[0]
@@ -156,6 +168,15 @@ def run_stream(users: np.ndarray, items: np.ndarray, cfg: StreamConfig,
     carry_u = np.empty(0, dtype=np.int64)
     carry_i = np.empty(0, dtype=np.int64)
     events_since_trigger = 0
+    forgets = 0
+    published_steps = 0
+
+    def _publish_event(states, processed, dropped, forgets, segment, steps):
+        from repro.core.engine import PublishEvent
+
+        return PublishEvent(states=states, events_processed=processed,
+                            dropped=dropped, forgets=forgets,
+                            segment=segment, steps_done=steps)
 
     occ_fn = jax.jit(jax.vmap(lambda s: state_lib.occupancy(s.tables)))
 
@@ -169,6 +190,7 @@ def run_stream(users: np.ndarray, items: np.ndarray, cfg: StreamConfig,
         jax.block_until_ready(forget(states))
 
     t0 = time.perf_counter()
+    publish_time = 0.0
     n_batches = int(np.ceil(n / cfg.micro_batch))
     empty = np.empty(0, dtype=np.int64)
     b = 0
@@ -215,6 +237,19 @@ def run_stream(users: np.ndarray, items: np.ndarray, cfg: StreamConfig,
         if forget is not None and events_since_trigger >= cfg.forgetting.trigger_every:
             states = forget(states)
             events_since_trigger = 0
+            forgets += 1
+
+        if publish_every and on_publish is not None and (b + 1) % publish_every == 0:
+            # Sync in-flight device work (async forgetting dispatch) before
+            # the publish timer starts, then exclude only subscriber time
+            # from the training wall clock — the same accounting as the
+            # device engine's boundary.
+            jax.block_until_ready(states)
+            tp = time.perf_counter()
+            on_publish(_publish_event(states, processed, dropped, forgets,
+                                      (b + 1) // publish_every - 1, b + 1))
+            publish_time += time.perf_counter() - tp
+            published_steps = b + 1
 
         if b % cfg.record_every == 0:
             u_occ, i_occ = occ_fn(states)
@@ -231,8 +266,20 @@ def run_stream(users: np.ndarray, items: np.ndarray, cfg: StreamConfig,
         user_occ.append((processed, np.asarray(u_occ)))
         item_occ.append((processed, np.asarray(i_occ)))
 
+    # Tail publish: the device engine publishes after its final segment,
+    # so the host path must too — otherwise micro-batches after the last
+    # cadence boundary would never be snapshotted and the end-of-stream
+    # staleness would be unbounded.
+    if (publish_every and on_publish is not None and n_batches
+            and published_steps != b):
+        jax.block_until_ready(states)
+        tp = time.perf_counter()
+        on_publish(_publish_event(states, processed, dropped, forgets,
+                                  published_steps // publish_every, b))
+        publish_time += time.perf_counter() - tp
+
     jax.block_until_ready(states)
-    wall = time.perf_counter() - t0
+    wall = time.perf_counter() - t0 - publish_time
     return StreamResult(
         recall=acc,
         user_occupancy=user_occ,
@@ -241,6 +288,7 @@ def run_stream(users: np.ndarray, items: np.ndarray, cfg: StreamConfig,
         dropped=dropped,
         wall_seconds=wall,
         load_history=loads,
+        final_states=states,
     )
 
 

@@ -1,14 +1,27 @@
-"""Recommendation serving: batched top-N queries against worker state.
+"""Single-worker recommendation serving: batched top-N queries.
 
 Training (Alg. 2/3) interleaves recommend+update per event; production
 systems also serve *read-only* recommendation queries at much higher QPS
-than the rating stream. This module answers batches of user queries
-against a worker's current state, using the Pallas masked-scoring kernel
-(`kernels/scoring.py`) for the users x items matmul — the hot spot the
-paper's evaluation loop spends its time in.
+than the rating stream ingests. This module answers batches of user
+queries against ONE worker's state, using the Pallas masked-scoring
+kernel (`kernels/scoring.py`) for the users x items matmul — the hot
+spot the paper's evaluation loop spends its time in.
 
+This is the leaf of the grid-wide serving plane in ``repro.serve``:
+
+  * ``repro.serve.plane`` fans a query batch out to every worker of the
+    user's replica column and merges the per-split partial lists this
+    module produces (``partial_topn``) into one grid-wide top-N;
+  * ``repro.serve.snapshot`` double-buffers read-only state snapshots so
+    serving runs against a consistent grid state while the engine trains;
+  * ``repro.serve.frontend`` micro-batches queries, caches responses and
+    falls back to popularity for unknown users.
+
+List ordering is (score desc, global id asc on ties) via
+``ops.topn_select`` — slot-layout independent, so a grid merge of
+partial lists equals the single-worker list whenever there is one split.
 The per-event training path and this batched path must agree; the
-equivalence is tested in tests/test_serve.py.
+equivalence is tested in tests/test_serve.py and tests/test_serve_grid.py.
 """
 
 from __future__ import annotations
@@ -22,7 +35,7 @@ from repro.core import state as state_lib
 from repro.core.state import DisgdState
 from repro.kernels import ops
 
-__all__ = ["recommend_topn", "recommend_topn_ref"]
+__all__ = ["recommend_topn", "recommend_topn_ref", "partial_topn"]
 
 
 def _gather_queries(state: DisgdState, user_ids, g: int, u_cap: int):
@@ -31,24 +44,23 @@ def _gather_queries(state: DisgdState, user_ids, g: int, u_cap: int):
     u_vecs = jnp.where(known[:, None], state.user_vecs[slots], 0.0)
     rated = state.rated[slots] & known[:, None]
     valid_items = state.tables.item_ids >= 0
-    mask = valid_items[None, :] & ~rated
+    mask = valid_items[None, :] & ~rated & known[:, None]
     return u_vecs, mask, known
 
 
-@partial(jax.jit, static_argnames=("top_n", "g", "u_cap", "use_kernel"))
-def recommend_topn(state: DisgdState, user_ids, *, top_n: int = 10,
-                   g: int = 1, u_cap: int = 1024, use_kernel: bool = True):
-    """Top-N item ids for a batch of users on one worker.
+def partial_topn(state: DisgdState, user_ids, *, top_n: int = 10,
+                 g: int = 1, u_cap: int = 1024, use_kernel: bool = True):
+    """One worker's partial top-N (DISGD): the serving-plane leaf op.
 
-    Args:
-      state: the worker's DISGD state.
-      user_ids: int32[B] global user ids (queries for unknown users get
-        popularity-free empty lists: all -1).
-      top_n / g / u_cap: hyperparameters (see DisgdHyper).
-      use_kernel: route the scoring matmul through the Pallas kernel.
+    Scores this worker's local item split for every query and returns the
+    local top-N as *global* item ids — the unit the grid plane merges
+    across the ``n_i`` split dimension.
 
     Returns:
-      (item_ids int32[B, top_n] (-1 padded), scores f32[B, top_n]).
+      (item_ids i32[B, N], scores f32[B, N], known bool[B]). Slots that
+      hold no candidate (unknown user, empty slot, already rated) carry
+      score -inf; callers must mask ids wherever scores are non-finite
+      (``recommend_topn`` / the grid merge both do).
     """
     u_vecs, mask, known = _gather_queries(state, user_ids, g, u_cap)
     if use_kernel:
@@ -59,11 +71,33 @@ def recommend_topn(state: DisgdState, user_ids, *, top_n: int = 10,
             jnp.einsum("bk,ik->bi", u_vecs, state.item_vecs),
             -jnp.inf,
         )
-    k = min(top_n, scores.shape[-1])
-    top_scores, top_idx = jax.lax.top_k(scores, k)
-    ids = state.tables.item_ids[top_idx]
-    ok = jnp.isfinite(top_scores) & known[:, None]
-    return jnp.where(ok, ids, -1), jnp.where(ok, top_scores, -jnp.inf)
+    ids_b = jnp.broadcast_to(state.tables.item_ids[None, :], scores.shape)
+    top_ids, top_scores = ops.topn_select(scores, ids_b, top_n)
+    return top_ids, top_scores, known
+
+
+@partial(jax.jit, static_argnames=("top_n", "g", "u_cap", "use_kernel"))
+def recommend_topn(state: DisgdState, user_ids, *, top_n: int = 10,
+                   g: int = 1, u_cap: int = 1024, use_kernel: bool = True):
+    """Top-N item ids for a batch of users on one worker.
+
+    Args:
+      state: the worker's DISGD state.
+      user_ids: int32[B] global user ids.
+      top_n / g / u_cap: hyperparameters (see DisgdHyper).
+      use_kernel: route the scoring matmul through the Pallas kernel.
+
+    Returns:
+      (item_ids int32[B, top_n] (-1 padded), scores f32[B, top_n]).
+      Queries with no answer — unknown users, and known users whose
+      local split is fully rated — return all -1 ids with -inf scores,
+      never -inf-scored garbage ids.
+    """
+    ids, scores, known = partial_topn(
+        state, user_ids, top_n=top_n, g=g, u_cap=u_cap, use_kernel=use_kernel
+    )
+    ok = jnp.isfinite(scores) & known[:, None]
+    return jnp.where(ok, ids, -1), jnp.where(ok, scores, -jnp.inf)
 
 
 def recommend_topn_ref(state: DisgdState, user_ids, *, top_n: int = 10,

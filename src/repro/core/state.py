@@ -34,6 +34,7 @@ __all__ = [
     "init_dics_state",
     "slot_of",
     "occupancy",
+    "item_stats",
 ]
 
 
@@ -113,3 +114,20 @@ def occupancy(tables: Tables):
         jnp.sum(tables.user_ids >= 0).astype(jnp.int32),
         jnp.sum(tables.item_ids >= 0).astype(jnp.int32),
     )
+
+
+def item_stats(state):
+    """Per-slot (global item id, popularity weight) for either algorithm.
+
+    The weight is the per-worker rating mass of the slot's tenant:
+    ``item_freq`` touches for DISGD, the Eq. 6 ``item_cnt`` denominator
+    for DICS. The serving plane aggregates these across the grid into
+    the popularity-fallback ranking for unknown users
+    (``repro.serve.snapshot.popularity_topn``). Shapes follow the state
+    (works on one worker or a stacked ``[n_c, ...]`` grid).
+    """
+    if isinstance(state, DicsState):
+        return state.tables.item_ids, state.item_cnt
+    if isinstance(state, DisgdState):
+        return state.tables.item_ids, state.tables.item_freq.astype(jnp.float32)
+    raise TypeError(f"unknown state type {type(state)}")

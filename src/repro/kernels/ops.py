@@ -18,7 +18,8 @@ from repro.kernels.isgd import isgd_update_pallas
 from repro.kernels.scoring import masked_scores_pallas
 from repro.kernels.swa_attention import swa_attention_pallas
 
-__all__ = ["on_tpu", "masked_scores", "isgd_update", "swa_attention"]
+__all__ = ["on_tpu", "masked_scores", "isgd_update", "swa_attention",
+           "topn_select", "topn_merge"]
 
 
 def on_tpu() -> bool:
@@ -74,6 +75,47 @@ def isgd_update(user_tab, item_tab, u_slots, i_slots, valid, *, eta: float,
         user_tab, item_tab, u_slots, i_slots, valid, eta=eta, lam=lam,
         interpret=interpret,
     )
+
+
+def topn_select(scores, ids, top_n: int):
+    """Deterministic top-N selection over the last axis.
+
+    Ordering is (score descending, global id ascending on ties) — unlike
+    ``lax.top_k``, whose tie-break is the *slot index*, this ordering is
+    independent of where an item happens to live in a worker's table, so
+    the same candidate set always yields the same list no matter which
+    split/slot layout produced it. The serving plane relies on that for
+    cross-split merges (``repro.serve.plane``); single-worker serving uses
+    it too so grid-merged and local lists agree exactly.
+
+    Args:
+      scores: f32[..., C] candidate scores (-inf = not a candidate).
+      ids:    i32[..., C] global ids aligned with ``scores``.
+      top_n:  list length (clamped to C).
+
+    Returns:
+      (ids i32[..., N], scores f32[..., N]) in serving order.
+    """
+    n = min(top_n, scores.shape[-1])
+    order = jnp.lexsort((ids, -scores), axis=-1)[..., :n]
+    return (jnp.take_along_axis(ids, order, -1),
+            jnp.take_along_axis(scores, order, -1))
+
+
+def topn_merge(ids, scores, top_n: int):
+    """Merge partial top-N lists along axis -2 into one list.
+
+    ``ids``/``scores`` are [..., P, N] — P partial lists (one per item
+    split in the serving plane). Splits partition the global item space,
+    so the same id never appears in two partials and a flat re-selection
+    over the P*N candidates is an exact merge. The P*N candidate set is
+    tiny (n_i * top_n), so this is a jnp sort rather than a kernel; the
+    FLOP-heavy part of serving is the masked scoring matmul
+    (``masked_scores``), which already has a Pallas path.
+    """
+    flat_ids = ids.reshape(ids.shape[:-2] + (-1,))
+    flat_scores = scores.reshape(scores.shape[:-2] + (-1,))
+    return topn_select(flat_scores, flat_ids, top_n)
 
 
 def swa_attention(q, k, v, *, window: int | None = None, causal: bool = True,

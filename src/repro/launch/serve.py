@@ -1,4 +1,9 @@
-"""Serving driver: batched prefill + autoregressive decode.
+"""LLM serving driver: batched prefill + autoregressive decode.
+
+This drives the *transformer model zoo* (``repro.models``) — it is not
+the recommender's serving plane. For grid-wide top-N recommendation
+serving (the paper's system), use ``repro.launch.serve_rs`` and the
+``repro.serve`` package.
 
   PYTHONPATH=src python -m repro.launch.serve \
       --arch stablelm_3b --smoke --batch 4 --prompt-len 64 --gen 32

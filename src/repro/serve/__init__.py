@@ -1,0 +1,35 @@
+"""Grid-wide query-serving plane for the S&R recommender.
+
+The paper's grid answers a recommendation by combining partial results
+from the workers that hold the item splits; production deployments serve
+read-only top-N queries at far higher QPS than the training stream
+ingests. This package is that serving plane:
+
+  * ``plane``    — jitted query fan-out over the user's replica column +
+    on-device cross-split top-N merge (DISGD and DICS);
+  * ``snapshot`` — double-buffered read-only state snapshots published by
+    the engine at micro-batch boundaries, with a bounded-staleness knob;
+  * ``frontend`` — micro-batched query front-end: LRU response cache
+    (invalidated on snapshot rotation / forgetting) and a popularity
+    fallback for unknown users.
+
+Drivers: ``repro.launch.serve_rs`` (train-and-serve loop) and
+``benchmarks.bench_serve`` (QPS / latency).
+"""
+
+from repro.serve.frontend import QueryFrontend, ServeConfig, ServeResponse
+from repro.serve.plane import grid_topn, query_capacity
+from repro.serve.snapshot import (Snapshot, SnapshotStore, StaleSnapshotError,
+                                  popularity_topn)
+
+__all__ = [
+    "grid_topn",
+    "query_capacity",
+    "Snapshot",
+    "SnapshotStore",
+    "StaleSnapshotError",
+    "popularity_topn",
+    "QueryFrontend",
+    "ServeConfig",
+    "ServeResponse",
+]

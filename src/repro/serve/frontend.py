@@ -1,0 +1,216 @@
+"""Micro-batched query front-end: cache, re-queue, popularity fallback.
+
+Production serving traffic is many small point queries; the grid plane
+wants dense batches. This front-end sits between them:
+
+  * incoming user ids are answered from an LRU response cache when the
+    cache entry was computed against the current snapshot — the cache is
+    invalidated whenever the snapshot rotates (new version) or a
+    forgetting pass fired (state was evicted, cached lists may now
+    recommend forgotten items);
+  * misses are packed into fixed-size micro-batches for ``grid_topn``;
+    queries that overflow their column's bucket capacity come back
+    un-served and are re-queued into the next batch (the same
+    backpressure contract as the training dispatch);
+  * users unknown on every worker of their column get the snapshot's
+    popularity head instead of an empty list — the classic cold-start
+    answer — flagged ``known=False`` in the response.
+
+The front-end is synchronous and single-threaded by design: one
+``serve`` call = one consistent snapshot. Staleness is enforced at
+acquire time via ``ServeConfig.max_staleness_events``.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import routing
+from repro.serve import plane
+from repro.serve.snapshot import SnapshotStore
+
+__all__ = ["ServeConfig", "ServeResponse", "QueryFrontend"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Static parameters of the serving plane (jit keys + knobs)."""
+
+    algorithm: str = "disgd"              # "disgd" | "dics"
+    grid: routing.GridSpec = routing.GridSpec(1)
+    u_cap: int = 1024
+    top_n: int = 10
+    k_nn: int = 10                        # DICS neighborhood (Eq. 7)
+    batch_size: int = 64                  # query micro-batch
+    query_capacity: int = 0               # per-column bucket; 0 = auto
+    capacity_factor: float = 2.0          # auto qcap vs fair share
+    use_kernel: bool = True               # Pallas scoring for DISGD
+    cache_capacity: int = 4096            # LRU response-cache entries
+    max_staleness_events: int | None = None
+
+    @property
+    def qcap(self) -> int:
+        if self.query_capacity:
+            return min(self.query_capacity, self.batch_size)
+        return plane.query_capacity(self.batch_size, self.grid.g,
+                                    self.capacity_factor)
+
+    @classmethod
+    def from_stream(cls, stream_cfg, **overrides) -> "ServeConfig":
+        """Derive the serving parameters from a training ``StreamConfig``."""
+        hyper = stream_cfg.resolved_hyper()
+        fields = dict(
+            algorithm=stream_cfg.algorithm,
+            grid=stream_cfg.grid,
+            u_cap=hyper.u_cap,
+            top_n=hyper.top_n,
+            k_nn=getattr(hyper, "k_nn", 10),
+        )
+        fields.update(overrides)
+        return cls(**fields)
+
+
+@dataclasses.dataclass
+class ServeResponse:
+    ids: np.ndarray       # i32[Q, N] global item ids, -1 padded
+    scores: np.ndarray    # f32[Q, N]; popularity mass on fallback rows
+    known: np.ndarray     # bool[Q] False -> answered by popularity fallback
+    snapshot_version: int
+    cache_hits: int       # positions answered without touching the plane
+    fallbacks: int        # positions answered by the popularity head
+
+
+class QueryFrontend:
+    """Serves point queries against the freshest published snapshot."""
+
+    def __init__(self, store: SnapshotStore, cfg: ServeConfig):
+        self.store = store
+        self.cfg = cfg
+        self._cache: collections.OrderedDict[int, tuple] = collections.OrderedDict()
+        self._cache_version = -1
+        self._cache_forgets = -1
+        self.stats = collections.Counter()
+
+    # -- cache ------------------------------------------------------------
+
+    def _sync_cache_epoch(self, snap) -> None:
+        """Drop every cached answer when the snapshot rotates or forgets."""
+        if (snap.version, snap.forgets) != (self._cache_version,
+                                            self._cache_forgets):
+            if self._cache:
+                self.stats["invalidations"] += 1
+            self._cache.clear()
+            self._cache_version = snap.version
+            self._cache_forgets = snap.forgets
+
+    def _cache_put(self, uid: int, entry: tuple) -> None:
+        self._cache[uid] = entry
+        self._cache.move_to_end(uid)
+        while len(self._cache) > self.cfg.cache_capacity:
+            self._cache.popitem(last=False)
+
+    # -- the serving loop -------------------------------------------------
+
+    def _compute(self, snap, uids: list[int]) -> dict:
+        """Run the grid plane for ``uids``; returns {uid: entry} and fills
+        the cache. Overflowed queries re-queue into the next micro-batch.
+
+        The returned dict — not the cache — is what answers this call:
+        the LRU may evict an entry computed earlier in the same call when
+        the unique-query count exceeds ``cache_capacity``.
+        """
+        cfg = self.cfg
+        computed = {}
+        queue = collections.deque(uids)
+        while queue:
+            batch = [queue.popleft()
+                     for _ in range(min(cfg.batch_size, len(queue)))]
+            arr = np.full(cfg.batch_size, -1, np.int64)
+            arr[:len(batch)] = batch
+            ids, scores, known, served = plane.grid_topn(
+                snap.states, jnp.asarray(arr),
+                algorithm=cfg.algorithm, n_i=cfg.grid.n_i, g=cfg.grid.g,
+                top_n=cfg.top_n, u_cap=cfg.u_cap, qcap=cfg.qcap,
+                k_nn=cfg.k_nn, use_kernel=cfg.use_kernel)
+            ids, scores = np.asarray(ids), np.asarray(scores)
+            known, served = np.asarray(known), np.asarray(served)
+            self.stats["plane_batches"] += 1
+            progress = False
+            for j, uid in enumerate(batch):
+                if served[j]:
+                    progress = True
+                    entry = (ids[j], scores[j], bool(known[j]))
+                    computed[uid] = entry
+                    self._cache_put(uid, entry)
+                else:               # column bucket overflow: try next batch
+                    self.stats["requeued"] += 1
+                    queue.append(uid)
+            if not progress:
+                raise RuntimeError(
+                    "query dispatch made no progress; "
+                    f"qcap={cfg.qcap} cannot be right for batch={batch}")
+        return computed
+
+    def serve(self, user_ids) -> ServeResponse:
+        """Answer a batch of point queries (any length, duplicates fine)."""
+        cfg = self.cfg
+        snap = self.store.acquire(cfg.max_staleness_events)
+        self._sync_cache_epoch(snap)
+
+        uids = np.asarray(user_ids, np.int64).reshape(-1)
+        self.stats["queries"] += uids.size
+        # Resolve cache hits BEFORE computing misses: _compute's LRU
+        # insertions may evict a previously-cached uid of this very call,
+        # so answers are assembled from this local dict, never from the
+        # cache after the fact.
+        resolved, from_cache, missing = {}, set(), []
+        for uid in uids.tolist():
+            if uid < 0 or uid in resolved or uid in from_cache:
+                continue
+            entry = self._cache.get(uid)
+            if entry is not None:
+                self._cache.move_to_end(uid)
+                resolved[uid] = entry
+                from_cache.add(uid)
+            else:
+                missing.append(uid)
+                resolved[uid] = None    # placeholder: dedupes the queue
+        if missing:
+            resolved.update(self._compute(snap, missing))
+
+        n = min(cfg.top_n, len(snap.popular_ids))
+        out_ids = np.full((uids.size, cfg.top_n), -1, np.int32)
+        out_scores = np.full((uids.size, cfg.top_n), -np.inf, np.float32)
+        out_known = np.zeros(uids.size, bool)
+        cache_hits = fallbacks = 0
+        for i, uid in enumerate(uids.tolist()):
+            if uid < 0:
+                continue
+            entry = resolved.get(uid)
+            if entry is None:       # unreachable: every uid was resolved
+                continue            # above; belt and braces
+            if uid in from_cache:
+                cache_hits += 1
+            ids_row, scores_row, known_row = entry
+            if known_row:
+                m = min(cfg.top_n, ids_row.shape[0])
+                out_ids[i, :m] = ids_row[:m]
+                out_scores[i, :m] = scores_row[:m]
+                out_known[i] = True
+            else:                   # cold start: popularity head
+                head = snap.popular_ids[:n]
+                live = head >= 0    # keep -inf padding convention when the
+                out_ids[i, :n] = head    # grid has < top_n live items
+                out_scores[i, :n] = np.where(
+                    live, snap.popular_mass[:n], -np.inf)
+                fallbacks += 1
+        self.stats["cache_hits"] += cache_hits
+        self.stats["fallbacks"] += fallbacks
+        return ServeResponse(
+            ids=out_ids, scores=out_scores, known=out_known,
+            snapshot_version=snap.version,
+            cache_hits=cache_hits, fallbacks=fallbacks)

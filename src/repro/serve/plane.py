@@ -1,0 +1,126 @@
+"""Grid-wide top-N query plane: fan-out + cross-split merge, on device.
+
+A query for user ``u`` concerns the ``n_i`` workers of ``u``'s replica
+column (grid column ``u % g``): each holds one item split plus an
+independently-trained replica of ``u``'s state. A grid-wide answer is the
+merge of those workers' partial top-N lists — splits partition the global
+item id space, so the merge is an exact re-selection over ``n_i * N``
+candidates (no dedup needed) and per-worker rated-item exclusion is
+already grid-wide exclusion (the pair ``(u, i)`` is recorded on the one
+worker that scores ``i`` for ``u``).
+
+``grid_topn`` is one jitted call: queries are capacity-bucketed by column
+(the same MoE-style dispatch the training plane uses), every worker
+scores its column's bucket against its local split (Pallas masked
+scoring for DISGD, Eq. 6/7 statistics for DICS), and the partial lists
+merge across the split axis with ``ops.topn_merge`` — (score desc,
+global id asc) ordering, so results are independent of slot layout and
+of the order of the splits. At ``n_i = 1`` the merge is exact identity
+with the single-worker ``core.serve.recommend_topn``; both invariants
+are pinned in tests/test_serve_grid.py.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dics as dics_lib
+from repro.core import routing
+from repro.core import serve as serve_lib
+from repro.kernels import ops
+
+__all__ = ["grid_topn", "query_capacity"]
+
+
+def query_capacity(batch_size: int, g: int, factor: float = 2.0) -> int:
+    """Per-column bucket capacity for a query micro-batch.
+
+    Mirrors ``StreamConfig.bucket_capacity``: ``factor`` times the fair
+    share of a batch across the ``g`` columns, floored at 8 and capped at
+    the batch size. Queries beyond a column's capacity are reported
+    un-served (``served == False``) and re-queued by the front-end.
+    """
+    fair = batch_size / g
+    return max(8, min(batch_size, int(np.ceil(fair * factor))))
+
+
+@partial(jax.jit, static_argnames=("algorithm", "n_i", "g", "top_n", "u_cap",
+                                   "qcap", "k_nn", "use_kernel"))
+def grid_topn(states, user_ids, *, algorithm: str = "disgd", n_i: int = 1,
+              g: int = 1, top_n: int = 10, u_cap: int = 1024, qcap: int = 64,
+              k_nn: int = 10, use_kernel: bool = True):
+    """Grid-wide top-N for a batch of users, merged across item splits.
+
+    Args:
+      states: stacked worker states ``[n_c, ...]`` (``pipeline.init_states``
+        layout, worker key = row * g + col) — typically a read-only
+        snapshot from ``repro.serve.snapshot``.
+      user_ids: i32[Q] global user ids; -1 entries are padding.
+      algorithm: "disgd" | "dics" — which serving leaf scores the splits.
+      n_i / g / u_cap / k_nn: grid + hyper parameters (``GridSpec``,
+        ``DisgdHyper`` / ``DicsHyper``).
+      qcap: per-column query bucket capacity (``query_capacity``).
+      use_kernel: route DISGD scoring through the Pallas kernel.
+
+    Returns:
+      ids i32[Q, N]: merged top-N global item ids, -1 padded.
+      scores f32[Q, N]: serving scores, -inf where ids == -1.
+      known bool[Q]: user known on at least one worker of their column
+        (False -> the front-end answers from the popularity fallback).
+      served bool[Q]: False for -1 padding and for queries that overflowed
+        their column's bucket this call (re-queue and retry).
+    """
+    q = user_ids.shape[0]
+    user_ids = user_ids.astype(jnp.int32)
+    valid = user_ids >= 0
+    # Invalid slots route to column g: out of range, so they occupy no
+    # bucket capacity (same trick as the training engine's dispatch).
+    col = jnp.where(valid, user_ids % g, g).astype(jnp.int32)
+    buckets, kept, _ = routing.bucket_dispatch(col, g, qcap)   # [g, qcap]
+    served = kept & valid
+    qu = jnp.where(buckets >= 0, user_ids[jnp.clip(buckets, 0, None)], -1)
+
+    # Worker-major [n_c, ...] -> grid [n_i, g, ...]; every worker of row r
+    # scores the same column bucket qu[col] against its own item split.
+    grid_states = jax.tree.map(
+        lambda x: x.reshape((n_i, g) + x.shape[1:]), states)
+
+    if algorithm == "disgd":
+        def leaf(st, uq):
+            return serve_lib.partial_topn(
+                st, uq, top_n=top_n, g=g, u_cap=u_cap, use_kernel=use_kernel)
+    elif algorithm == "dics":
+        def leaf(st, uq):
+            return dics_lib.dics_partial_topn(
+                st, uq, top_n=top_n, k_nn=k_nn, g=g, u_cap=u_cap)
+    else:
+        raise ValueError(f"unknown serving algorithm {algorithm!r}")
+
+    per_col = jax.vmap(leaf, in_axes=(0, 0))        # over the g columns
+    per_grid = jax.vmap(per_col, in_axes=(0, None))  # over the n_i rows
+    p_ids, p_scores, p_known = per_grid(grid_states, qu)
+    # p_ids: [n_i, g, qcap, N] -> merge over the split axis.
+    m_ids, m_scores = ops.topn_merge(
+        jnp.moveaxis(p_ids, 0, 2), jnp.moveaxis(p_scores, 0, 2), top_n)
+    known = jnp.any(p_known, axis=0)                 # [g, qcap]
+
+    ok = jnp.isfinite(m_scores) & known[..., None]
+    m_ids = jnp.where(ok, m_ids, -1)
+    m_scores = jnp.where(ok, m_scores, -jnp.inf)
+
+    # Scatter bucket-ordered results back to request order; bucket padding
+    # (buckets == -1) scatters out of range and is dropped.
+    n = m_ids.shape[-1]
+    flat_idx = buckets.reshape(-1)
+    tgt = jnp.where(flat_idx >= 0, flat_idx, q)
+    out_ids = jnp.full((q, n), -1, jnp.int32).at[tgt].set(
+        m_ids.reshape(-1, n), mode="drop")
+    out_scores = jnp.full((q, n), -jnp.inf, jnp.float32).at[tgt].set(
+        m_scores.reshape(-1, n), mode="drop")
+    out_known = jnp.zeros((q,), bool).at[tgt].set(
+        known.reshape(-1), mode="drop") & valid
+    return out_ids, out_scores, out_known, served

@@ -1,0 +1,156 @@
+"""Snapshot double-buffering: serve a consistent grid while training runs.
+
+The engine publishes worker states at micro-batch boundaries
+(``engine.run_stream_device(publish_every=..., on_publish=...)``); this
+store is the subscriber. It keeps a small ring of snapshot buffers
+(double-buffered by default): ``publish`` writes the incoming state tree
+into the back buffer and then atomically rotates it to the front, so
+``acquire`` always returns a complete snapshot taken exactly at a
+micro-batch boundary — a query can never observe partial state from a
+later micro-batch. JAX arrays are immutable, so a published tree costs
+no copy and stays valid however long a reader holds it while training
+keeps producing new buffers.
+
+Bounded staleness: the trainer (or driver) reports stream progress via
+``report_progress`` — publishes do this implicitly — and ``acquire``
+raises ``StaleSnapshotError`` when the front snapshot has fallen more
+than ``max_staleness_events`` processed events behind that progress.
+The knob maps directly onto the publish cadence: publishing every ``k``
+micro-batches of size ``mb`` bounds staleness by ``k * mb`` events.
+
+Each snapshot also carries the grid-wide popularity head
+(``popularity_topn`` over the paper's frequency statistics), the
+front-end's fallback answer for unknown users.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any
+
+import numpy as np
+
+from repro.core import state as state_lib
+
+__all__ = ["Snapshot", "SnapshotStore", "StaleSnapshotError",
+           "popularity_topn"]
+
+
+class StaleSnapshotError(RuntimeError):
+    """The front snapshot violates the caller's staleness bound."""
+
+
+def popularity_topn(states, top_n: int):
+    """Grid-wide most-popular items from a (stacked) state tree.
+
+    Aggregates per-worker item rating mass (``state_lib.item_stats``) by
+    global id — an item replicated across the ``g`` workers of its row
+    contributes all replicas' local counts — and returns the ``top_n``
+    head ordered by (mass desc, id asc).
+
+    Returns:
+      (ids int64[top_n] (-1 padded), mass float64[top_n]).
+    """
+    ids, weight = state_lib.item_stats(states)
+    ids = np.asarray(ids).reshape(-1)
+    weight = np.asarray(weight, np.float64).reshape(-1)
+    live = ids >= 0
+    ids, weight = ids[live], weight[live]
+    out_ids = np.full(top_n, -1, np.int64)
+    out_mass = np.zeros(top_n, np.float64)
+    if ids.size:
+        uniq, inverse = np.unique(ids, return_inverse=True)
+        mass = np.zeros(uniq.size, np.float64)
+        np.add.at(mass, inverse, weight)
+        order = np.lexsort((uniq, -mass))[:top_n]
+        out_ids[:order.size] = uniq[order]
+        out_mass[:order.size] = mass[order]
+    return out_ids, out_mass
+
+
+@dataclasses.dataclass(frozen=True)
+class Snapshot:
+    """One published, read-only grid state at a micro-batch boundary."""
+
+    states: Any               # [n_c, ...] worker-state pytree (immutable)
+    version: int              # monotonically increasing publish counter
+    events_processed: int     # stream position of the boundary
+    forgets: int              # forgetting triggers fired up to the boundary
+    popular_ids: np.ndarray   # popularity-fallback head (global ids)
+    popular_mass: np.ndarray  # its rating mass (fallback "scores")
+
+
+class SnapshotStore:
+    """Double-buffered snapshot exchange between trainer and servers.
+
+    Thread-safe; the rotation is a single front-index assignment under a
+    lock, so readers either get the old complete snapshot or the new
+    complete one, never a mix.
+    """
+
+    def __init__(self, slots: int = 2, fallback_n: int = 100):
+        if slots < 2:
+            raise ValueError("double-buffering needs at least 2 slots")
+        self._slots: list[Snapshot | None] = [None] * slots
+        self._front = -1
+        self._version = 0
+        self._progress = 0
+        self._fallback_n = fallback_n
+        self._lock = threading.Lock()
+
+    def publish(self, states, events_processed: int, forgets: int = 0) -> Snapshot:
+        """Write ``states`` to the back buffer and rotate it to the front."""
+        popular_ids, popular_mass = popularity_topn(states, self._fallback_n)
+        with self._lock:
+            self._version += 1
+            snap = Snapshot(
+                states=states,
+                version=self._version,
+                events_processed=int(events_processed),
+                forgets=int(forgets),
+                popular_ids=popular_ids,
+                popular_mass=popular_mass,
+            )
+            back = (self._front + 1) % len(self._slots)
+            self._slots[back] = snap
+            self._front = back                     # the atomic rotation
+            self._progress = max(self._progress, snap.events_processed)
+        return snap
+
+    def subscriber(self):
+        """Adapter for the engine hook: ``on_publish=store.subscriber()``."""
+        def _on_publish(ev):
+            self.publish(ev.states, ev.events_processed, ev.forgets)
+        return _on_publish
+
+    def acquire(self, max_staleness_events: int | None = None) -> Snapshot:
+        """The front snapshot; optionally enforce a staleness bound."""
+        with self._lock:
+            snap = self._slots[self._front] if self._front >= 0 else None
+            progress = self._progress
+        if snap is None:
+            raise LookupError("no snapshot published yet")
+        if (max_staleness_events is not None
+                and progress - snap.events_processed > max_staleness_events):
+            raise StaleSnapshotError(
+                f"snapshot v{snap.version} is {progress - snap.events_processed}"
+                f" events behind the stream (bound {max_staleness_events});"
+                " publish more often or loosen the bound")
+        return snap
+
+    def report_progress(self, events_processed: int) -> None:
+        """Advance the trainer's stream position (drives the staleness check)."""
+        with self._lock:
+            self._progress = max(self._progress, int(events_processed))
+
+    def staleness(self) -> int:
+        """Processed events the front snapshot is behind reported progress."""
+        with self._lock:
+            if self._front < 0:
+                return 0
+            return self._progress - self._slots[self._front].events_processed
+
+    @property
+    def latest_version(self) -> int:
+        return self._version

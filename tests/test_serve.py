@@ -38,6 +38,49 @@ def test_unknown_user_gets_empty_list():
     assert np.all(np.asarray(ids) == -1)
 
 
+def test_fully_rated_user_gets_empty_list():
+    """A known user whose local split is fully rated has no candidates:
+    the answer is all -1 ids / -inf scores (like an unknown user), never
+    -inf-scored garbage ids leaking from the top-k padding."""
+    u_cap, i_cap, k = 16, 8, 4
+    hyper = DisgdHyper(k=k, u_cap=u_cap, i_cap=i_cap, n_i=1, g=1)
+    st = state_lib.init_disgd_state(u_cap, i_cap, k)
+    # User 3 rates every item of the local split.
+    ev_u = jnp.full((i_cap,), 3, jnp.int32)
+    ev_i = jnp.arange(i_cap, dtype=jnp.int32)
+    st, _, _ = disgd_worker_step(st, (ev_u, ev_i), hyper, jax.random.key(0))
+    assert bool(jnp.all(st.rated[3 % u_cap]))  # split really is exhausted
+    for use_kernel in (True, False):
+        ids, scores = recommend_topn(
+            st, jnp.asarray([3], jnp.int32), top_n=5,
+            g=hyper.g, u_cap=u_cap, use_kernel=use_kernel)
+        np.testing.assert_array_equal(np.asarray(ids), -1)
+        assert np.all(np.isneginf(np.asarray(scores)))
+
+
+def test_tie_break_is_global_id_not_slot_order():
+    """Serving order on score ties is ascending global id — independent of
+    where items happen to live in the slot table, so single-worker lists
+    and grid merges agree exactly."""
+    u_cap, i_cap, k = 8, 8, 4
+    st = state_lib.init_disgd_state(u_cap, i_cap, k)
+    # User 1 known with a fixed vector; items placed so that slot order
+    # and id order disagree: slot s holds global id (i_cap - 1 - s).
+    ids_desc = jnp.arange(i_cap - 1, -1, -1, dtype=jnp.int32)
+    st = st._replace(
+        tables=st.tables._replace(
+            user_ids=st.tables.user_ids.at[1].set(1),
+            item_ids=ids_desc,
+        ),
+        user_vecs=st.user_vecs.at[1].set(jnp.ones((k,))),
+        item_vecs=jnp.ones((i_cap, k)),   # all items score identically
+    )
+    ids, scores = recommend_topn(st, jnp.asarray([1], jnp.int32), top_n=4,
+                                 g=1, u_cap=u_cap)
+    np.testing.assert_array_equal(np.asarray(ids[0]), [0, 1, 2, 3])
+    assert np.allclose(np.asarray(scores[0]), float(k))
+
+
 def test_rated_items_never_recommended():
     st, hyper = _trained_state()
     queries = jnp.arange(32, dtype=jnp.int32)

@@ -1,0 +1,383 @@
+"""Grid-wide serving plane: merge parity, snapshots, staleness, front-end.
+
+Pins the contracts ISSUE 2 asks for:
+  * the cross-split merge equals the single-worker ``recommend_topn``
+    when ``n_i = 1`` and is invariant under permutation of the item
+    splits (property tests over randomized grid states);
+  * rated-item exclusion survives the merge (grid-wide lists never
+    recommend a pair the stream already rated);
+  * both paper algorithms serve (DISGD and DICS);
+  * a snapshot published at micro-batch boundary ``t`` is exactly the
+    state after ``t``'s events — never partial state from ``t+1`` — and
+    a held snapshot is immutable while training continues;
+  * the front-end caches, invalidates on rotation/forgetting, re-queues
+    column overflow, enforces the staleness bound, and answers unknown
+    users from the popularity head.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from tests.prop import given, settings, st
+
+from repro.core import state as state_lib
+from repro.core.dics import DicsHyper, dics_partial_topn
+from repro.core.disgd import DisgdHyper
+from repro.core.pipeline import StreamConfig, run_stream
+from repro.core.routing import GridSpec
+from repro.core.serve import recommend_topn
+from repro.serve import (QueryFrontend, ServeConfig, SnapshotStore,
+                         StaleSnapshotError, grid_topn, popularity_topn)
+
+
+# ---------------------------------------------------------------------------
+# Randomized grid states (slot-consistent, so they are reachable states)
+# ---------------------------------------------------------------------------
+
+
+def _random_grid_disgd(seed, n_i, g, u_cap=24, i_cap=16, k=4):
+    """Stacked [n_c, ...] DISGD states with slot-consistent global ids."""
+    rng = np.random.default_rng(seed)
+    workers = []
+    for row in range(n_i):
+        for col in range(g):
+            st_ = state_lib.init_disgd_state(u_cap, i_cap, k)
+            user_ids = np.full(u_cap, -1, np.int64)
+            for s in range(u_cap):
+                if rng.random() < 0.6:
+                    user_ids[s] = g * (s + u_cap * rng.integers(0, 3)) + col
+            item_ids = np.full(i_cap, -1, np.int64)
+            for s in range(i_cap):
+                if rng.random() < 0.7:
+                    item_ids[s] = n_i * (s + i_cap * rng.integers(0, 3)) + row
+            st_ = st_._replace(
+                tables=st_.tables._replace(
+                    user_ids=jnp.asarray(user_ids, jnp.int32),
+                    item_ids=jnp.asarray(item_ids, jnp.int32),
+                    item_freq=jnp.asarray(
+                        rng.integers(1, 9, i_cap), jnp.int32),
+                ),
+                user_vecs=jnp.asarray(
+                    rng.normal(size=(u_cap, k)), jnp.float32),
+                item_vecs=jnp.asarray(
+                    rng.normal(size=(i_cap, k)), jnp.float32),
+                rated=jnp.asarray(rng.random((u_cap, i_cap)) < 0.2),
+            )
+            workers.append(st_)
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *workers)
+
+
+def _queries(states, n_i, g, rng, n=12):
+    """Mix of user ids present in the tables and unknown ids."""
+    uids = np.asarray(states.tables.user_ids).reshape(-1)
+    uids = uids[uids >= 0]
+    known = rng.choice(uids, size=min(n, uids.size))
+    unknown = g * 10_000 + rng.integers(0, g, size=4)   # never inserted
+    return jnp.asarray(np.concatenate([known, unknown]), jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Merge correctness (the tentpole contracts)
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_merge_equals_single_worker_at_ni1(seed):
+    u_cap, i_cap = 24, 16
+    states = _random_grid_disgd(seed, 1, 1, u_cap=u_cap, i_cap=i_cap)
+    q = _queries(states, 1, 1, np.random.default_rng(seed))
+    ids_g, sc_g, known, served = grid_topn(
+        states, q, algorithm="disgd", n_i=1, g=1, top_n=10, u_cap=u_cap,
+        qcap=q.shape[0])
+    st_one = jax.tree.map(lambda x: x[0], states)
+    ids_s, sc_s = recommend_topn(st_one, q, top_n=10, g=1, u_cap=u_cap)
+    np.testing.assert_array_equal(np.asarray(ids_g), np.asarray(ids_s))
+    np.testing.assert_array_equal(np.asarray(sc_g), np.asarray(sc_s))
+    assert np.asarray(served).all()
+
+
+@given(st.integers(0, 10_000), st.sampled_from([2, 3]))
+@settings(max_examples=10, deadline=None)
+def test_merge_invariant_under_split_permutation(seed, n_i):
+    """Relabeling which grid row serves which partial list must not change
+    the merged answer: the merge orders by (score, global id), never by
+    split position."""
+    g = n_i
+    u_cap, i_cap = 24, 16
+    states = _random_grid_disgd(seed, n_i, g, u_cap=u_cap, i_cap=i_cap)
+    q = _queries(states, n_i, g, np.random.default_rng(seed))
+    kw = dict(algorithm="disgd", n_i=n_i, g=g, top_n=10, u_cap=u_cap,
+              qcap=q.shape[0])
+    ids_a, sc_a, known_a, _ = grid_topn(states, q, **kw)
+
+    perm = np.random.default_rng(seed + 1).permutation(n_i)
+    permuted = jax.tree.map(
+        lambda x: x.reshape((n_i, g) + x.shape[1:])[perm].reshape(x.shape),
+        states)
+    ids_b, sc_b, known_b, _ = grid_topn(permuted, q, **kw)
+    np.testing.assert_array_equal(np.asarray(ids_a), np.asarray(ids_b))
+    np.testing.assert_array_equal(np.asarray(sc_a), np.asarray(sc_b))
+    np.testing.assert_array_equal(np.asarray(known_a), np.asarray(known_b))
+
+
+def _stream(n=2000, seed=0):
+    from repro.data.stream import MOVIELENS_25M, scaled, synth_stream
+
+    users, items, _ = synth_stream(scaled(MOVIELENS_25M, 0.002), seed=seed)
+    return users[:n], items[:n]
+
+
+def test_grid_serving_excludes_rated_pairs_across_splits():
+    """Ample capacity => every stream pair is recorded; a grid-wide list
+    must never recommend an item its user already rated, whichever split
+    holds it."""
+    users, items = _stream()
+    cfg = StreamConfig(algorithm="disgd", grid=GridSpec(2), micro_batch=256,
+                       hyper=DisgdHyper(u_cap=512, i_cap=128), backend="scan")
+    res = run_stream(users, items, cfg)
+    assert res.dropped == 0
+    rated = set(zip(users.tolist(), items.tolist()))
+    q_users = np.unique(users)[:64]
+    ids, _, known, served = grid_topn(
+        res.final_states, jnp.asarray(q_users, jnp.int32),
+        algorithm="disgd", n_i=2, g=2, top_n=10, u_cap=512, qcap=64)
+    ids = np.asarray(ids)
+    assert np.asarray(served).all()
+    assert np.asarray(known).any()
+    for b, u in enumerate(q_users.tolist()):
+        for iid in ids[b]:
+            if iid >= 0:
+                assert (u, int(iid)) not in rated
+
+
+def test_dics_grid_parity_at_ni1_and_serves_at_ni2():
+    """Both paper algorithms serve: DICS n_i=1 merge equals the
+    single-worker Eq. 6/7 leaf; n_i=2 returns lists for known users."""
+    users, items = _stream(n=1200)
+    hyper = DicsHyper(u_cap=256, i_cap=64)
+    cfg = StreamConfig(algorithm="dics", grid=GridSpec(1), micro_batch=256,
+                       hyper=hyper, backend="scan")
+    res = run_stream(users, items, cfg)
+    q = jnp.asarray(np.unique(users)[:32], jnp.int32)
+    ids_g, sc_g, known, served = grid_topn(
+        res.final_states, q, algorithm="dics", n_i=1, g=1, top_n=10,
+        u_cap=256, k_nn=hyper.k_nn, qcap=32)
+    st_one = jax.tree.map(lambda x: x[0], res.final_states)
+    ids_r, sc_r, known_r = dics_partial_topn(
+        st_one, q, top_n=10, k_nn=hyper.k_nn, g=1, u_cap=256)
+    ok = np.isfinite(np.asarray(sc_r)) & np.asarray(known_r)[:, None]
+    np.testing.assert_array_equal(
+        np.asarray(ids_g), np.where(ok, np.asarray(ids_r), -1))
+    assert np.asarray(served).all()
+    # Some user must actually have a non-empty DICS answer, or the test
+    # says nothing.
+    assert (np.asarray(ids_g) >= 0).any()
+
+    cfg2 = dataclasses.replace(
+        cfg, grid=GridSpec(2), hyper=DicsHyper(u_cap=128, i_cap=32))
+    res2 = run_stream(users, items, cfg2)
+    ids2, _, known2, served2 = grid_topn(
+        res2.final_states, q, algorithm="dics", n_i=2, g=2, top_n=10,
+        u_cap=128, k_nn=hyper.k_nn, qcap=32)
+    assert np.asarray(served2).all()
+    assert (np.asarray(ids2)[np.asarray(known2)] >= 0).any()
+
+
+# ---------------------------------------------------------------------------
+# Snapshots: boundary consistency, immutability, staleness
+# ---------------------------------------------------------------------------
+
+
+def test_snapshot_is_exact_micro_batch_boundary_state():
+    """Serving from snapshot t never observes partial state from
+    micro-batch t+1: each published tree equals an independent run over
+    exactly the events of the first t micro-batches, bit for bit."""
+    users, items = _stream()
+    cfg = StreamConfig(algorithm="disgd", grid=GridSpec(2), micro_batch=256,
+                       capacity_factor=4.0,
+                       hyper=DisgdHyper(u_cap=256, i_cap=64), backend="scan")
+    published = []
+    run_stream(users, items, cfg, publish_every=2,
+               on_publish=lambda ev: published.append(ev))
+    assert len(published) >= 3
+    for ev in published[:3]:
+        # Ample capacity => no overflow carry: the snapshot's stream
+        # position is exactly a whole number of micro-batches.
+        e = ev.events_processed
+        assert e == min(ev.steps_done * cfg.micro_batch, users.size)
+        ref = run_stream(users[:e], items[:e], cfg)
+        for a, b in zip(jax.tree.leaves(ev.states),
+                        jax.tree.leaves(ref.final_states)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_held_snapshot_unaffected_by_further_training():
+    users, items = _stream()
+    cfg = StreamConfig(algorithm="disgd", grid=GridSpec(2), micro_batch=256,
+                       hyper=DisgdHyper(u_cap=256, i_cap=64), backend="scan")
+    store = SnapshotStore()
+    held = {}
+    answers = {}
+    q = jnp.asarray(np.unique(users)[:16], jnp.int32)
+    kw = dict(algorithm="disgd", n_i=2, g=2, top_n=10, u_cap=256, qcap=16)
+
+    def on_publish(ev):
+        store.publish(ev.states, ev.events_processed, ev.forgets)
+        if ev.segment == 0:              # hold the first snapshot...
+            held["snap"] = store.acquire()
+            answers["then"] = np.asarray(grid_topn(
+                held["snap"].states, q, **kw)[0])
+
+    run_stream(users, items, cfg, publish_every=2, on_publish=on_publish)
+    assert store.latest_version > 1      # training rotated past the held one
+    again = np.asarray(grid_topn(held["snap"].states, q, **kw)[0])
+    np.testing.assert_array_equal(answers["then"], again)
+
+
+def test_host_backend_publishes_final_state():
+    """Tail micro-batches past the last cadence boundary still publish:
+    host and device backends both end with a snapshot of the final state,
+    so the staleness bound holds at end of stream on either."""
+    users, items = _stream(n=1500)          # 6 micro-batches of 256
+    cfg = StreamConfig(algorithm="disgd", grid=GridSpec(2), micro_batch=256,
+                       hyper=DisgdHyper(u_cap=256, i_cap=64), backend="host")
+    for backend in ("host", "scan"):
+        pubs = []
+        res = run_stream(users, items, dataclasses.replace(cfg, backend=backend),
+                         publish_every=4, on_publish=pubs.append)
+        assert pubs, backend
+        assert pubs[-1].events_processed == res.events_processed, backend
+
+
+def test_fallback_pads_with_neg_inf_when_grid_has_few_items():
+    """A popularity head shorter than top_n keeps the -inf/-1 padding
+    convention — -1 padding must never surface as a 0.0-scored answer."""
+    st_ = state_lib.init_disgd_state(8, 8, 4)
+    st_ = st_._replace(tables=st_.tables._replace(
+        item_ids=st_.tables.item_ids.at[0].set(5).at[1].set(3),
+        item_freq=st_.tables.item_freq.at[0].set(7).at[1].set(2)))
+    states = jax.tree.map(lambda x: x[None], st_)
+    store = SnapshotStore()
+    store.publish(states, events_processed=0)
+    fe = QueryFrontend(store, ServeConfig(algorithm="disgd", grid=GridSpec(1),
+                                          u_cap=8, top_n=5, batch_size=4))
+    resp = fe.serve(np.asarray([12345]))     # unknown -> popularity head
+    assert resp.fallbacks == 1
+    np.testing.assert_array_equal(resp.ids[0], [5, 3, -1, -1, -1])
+    assert resp.scores[0][0] == 7.0 and resp.scores[0][1] == 2.0
+    assert np.isneginf(resp.scores[0][2:]).all()
+
+
+def test_staleness_bound_enforced():
+    states = _random_grid_disgd(0, 1, 1)
+    store = SnapshotStore()
+    with pytest.raises(LookupError):
+        store.acquire()
+    store.publish(states, events_processed=1000)
+    assert store.acquire(max_staleness_events=0).version == 1
+    store.report_progress(1500)
+    assert store.staleness() == 500
+    store.acquire(max_staleness_events=500)          # at the bound: fine
+    with pytest.raises(StaleSnapshotError):
+        store.acquire(max_staleness_events=499)
+    store.publish(states, events_processed=1500)     # rotation clears it
+    assert store.acquire(max_staleness_events=0).version == 2
+
+
+# ---------------------------------------------------------------------------
+# Front-end: cache, invalidation, overflow re-queue, fallback
+# ---------------------------------------------------------------------------
+
+
+def _frontend(n_i=1, g=1, seed=0, **over):
+    states = _random_grid_disgd(seed, n_i, g)
+    store = SnapshotStore()
+    store.publish(states, events_processed=0)
+    cfg = ServeConfig(algorithm="disgd", grid=GridSpec(n_i), u_cap=24,
+                      top_n=5, batch_size=16, **over)
+    return states, store, QueryFrontend(store, cfg)
+
+
+def test_frontend_caches_and_invalidates_on_rotation():
+    states, store, fe = _frontend()
+    uids = np.asarray(states.tables.user_ids).reshape(-1)
+    q = uids[uids >= 0][:6]
+    first = fe.serve(q)
+    second = fe.serve(q)
+    assert first.cache_hits == 0 and second.cache_hits == len(q)
+    np.testing.assert_array_equal(first.ids, second.ids)
+    assert fe.stats["plane_batches"] == 1
+
+    store.publish(states, events_processed=10)       # rotation
+    third = fe.serve(q)
+    assert third.cache_hits == 0
+    assert fe.stats["invalidations"] == 1
+
+    store.publish(states, events_processed=20, forgets=1)  # forgetting fired
+    fourth = fe.serve(q)
+    assert fourth.cache_hits == 0
+    assert fe.stats["invalidations"] == 2
+
+
+def test_frontend_popularity_fallback_for_unknown_users():
+    states, store, fe = _frontend()
+    pop_ids, _ = popularity_topn(states, 5)
+    resp = fe.serve(np.asarray([10_007, 10_011]))    # never-inserted users
+    assert resp.fallbacks == 2
+    assert not resp.known.any()
+    for row in resp.ids:
+        np.testing.assert_array_equal(row, pop_ids[:5])
+    assert (resp.ids >= 0).any()                     # not the old all -1
+
+
+def test_frontend_requeues_column_overflow():
+    g = 2
+    states, store, fe = _frontend(n_i=g, g=g, query_capacity=8)
+    uids = np.asarray(states.tables.user_ids).reshape(-1)
+    col0 = np.unique(uids[(uids >= 0) & (uids % g == 0)])[:16]
+    assert col0.size == 16                           # all in one column
+    resp = fe.serve(col0)
+    assert fe.stats["requeued"] > 0                  # overflow happened...
+    assert resp.known.all()                          # ...but everyone served
+    assert (resp.ids >= 0).all()
+
+
+def test_frontend_answers_batches_larger_than_the_cache():
+    """The LRU is an optimization layer, never a correctness dependency:
+    a serve() call with more unique users than cache_capacity must still
+    answer every row (eviction mid-call cannot lose answers)."""
+    states, store, fe = _frontend(cache_capacity=4)
+    uids = np.asarray(states.tables.user_ids).reshape(-1)
+    q = np.unique(uids[uids >= 0])[:10]
+    assert q.size == 10
+    resp = fe.serve(q)
+    assert resp.known.all()
+    assert (resp.ids >= 0).any(axis=1).all()
+
+    # A previously-cached uid must survive being evicted mid-call by the
+    # misses computed in the same serve() (and still count as a hit).
+    first = fe.serve(q[:1])
+    assert first.known.all()
+    mixed = fe.serve(q)          # q[0] cached; 9 misses overflow capacity 4
+    assert mixed.known.all()
+    assert (mixed.ids >= 0).any(axis=1).all()
+    assert mixed.cache_hits >= 1
+    np.testing.assert_array_equal(mixed.ids[0], first.ids[0])
+
+
+def test_frontend_enforces_staleness_bound():
+    states, store, fe = _frontend(max_staleness_events=100)
+    uids = np.asarray(states.tables.user_ids).reshape(-1)
+    q = uids[uids >= 0][:2]
+    fe.serve(q)                                      # fresh: fine
+    store.report_progress(500)
+    with pytest.raises(StaleSnapshotError):
+        fe.serve(q)
+    store.publish(states, events_processed=500)      # republish unblocks
+    fe.serve(q)
