@@ -1,0 +1,180 @@
+"""Elastic resharding: regrid latency + post-regrid throughput and QPS.
+
+Claim under test: online ``(g, n_i)`` resharding (``repro.core.regrid``)
+is a control-plane blip, not an outage — the transform itself runs in
+milliseconds (one jitted scatter pass over the logical records), the
+resumed stream trains at the target grid's native events/s, and the
+serving plane answers from the regridded snapshot at the target grid's
+native QPS.
+
+``rows()`` sweeps source→target shapes for both algorithms, reporting
+regrid latency, post-regrid training throughput, and batch-64 serving
+QPS vs ``n_i``. ``smoke_rows()`` is the CI subset — one DISGD scale-out
+— appended to ``BENCH_smoke.json`` by ``--smoke`` so the artifact tracks
+elasticity next to training throughput and serving QPS.
+
+  PYTHONPATH=src python -m benchmarks.bench_regrid            # full sweep
+  PYTHONPATH=src python -m benchmarks.bench_regrid --smoke    # CI row
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import numpy as np
+
+REPEATS = 20
+WARMUP = 2
+
+TRANSITIONS = ((2, 2, 1, 4), (2, 2, 4, 2), (2, 2, 4, 4))
+
+
+def _grids(t):
+    from repro.core.routing import GridSpec
+
+    return GridSpec.rect(t[0], t[1]), GridSpec.rect(t[2], t[3])
+
+
+def _trained(algorithm: str, src, events: int, micro_batch: int = 512):
+    from benchmarks.common import make_cfg, stream_for
+    from repro.core.pipeline import run_stream
+
+    users, items = stream_for("movielens", events)
+    cut = users.size // 2
+    cfg = make_cfg(algorithm, "movielens", src.n_i, backend="scan",
+                   micro_batch=micro_batch)
+    cfg = dataclasses.replace(cfg, grid=src)
+    res = run_stream(users[:cut], items[:cut], cfg)
+    return cfg, res.final_states, (users[cut:], items[cut:]), np.unique(users)
+
+
+def _time_regrid(states, src, dst):
+    """Milliseconds per regrid call (compile excluded, like the engines)."""
+    import jax
+
+    from repro.core.regrid import regrid
+
+    for _ in range(WARMUP):
+        jax.block_until_ready(regrid(states, src, dst))
+    times = np.empty(REPEATS)
+    for i in range(REPEATS):
+        t0 = time.perf_counter()
+        jax.block_until_ready(regrid(states, src, dst))
+        times[i] = time.perf_counter() - t0
+    return float(np.median(times) * 1e3)
+
+
+def _post_regrid(cfg, states, tail, pool, src, dst, batch: int = 64):
+    """(events/s resumed on dst, batch-``batch`` QPS from the regridded
+    snapshot) — the "service resumes at the new shape" half of the claim."""
+    import jax.numpy as jnp
+
+    from repro.core.pipeline import run_stream
+    from repro.core.regrid import regrid
+    from repro.serve import grid_topn, plane
+
+    cfg_b = dataclasses.replace(cfg, grid=dst)
+    regridded = regrid(states, src, dst)
+    res = run_stream(tail[0], tail[1], cfg_b, initial_states=regridded)
+
+    hyper = cfg.resolved_hyper()
+    kw = dict(algorithm=cfg.algorithm, grid=dst, top_n=hyper.top_n,
+              u_cap=hyper.u_cap, qcap=plane.query_capacity(batch, dst.g),
+              k_nn=getattr(hyper, "k_nn", 10))
+    queries = jnp.asarray(
+        np.random.default_rng(0).choice(pool, size=batch), jnp.int32)
+    import jax
+
+    for _ in range(WARMUP):
+        jax.block_until_ready(grid_topn(res.final_states, queries, **kw)[0])
+    times = np.empty(REPEATS)
+    for i in range(REPEATS):
+        t0 = time.perf_counter()
+        jax.block_until_ready(grid_topn(res.final_states, queries, **kw)[0])
+        times[i] = time.perf_counter() - t0
+    return res.throughput, batch / float(np.median(times))
+
+
+def rows(events: int = 8192):
+    out = []
+    for algorithm in ("disgd", "dics"):
+        for t in TRANSITIONS:
+            src, dst = _grids(t)
+            cfg, states, tail, pool = _trained(algorithm, src, events)
+            ms = _time_regrid(states, src, dst)
+            evs, qps = _post_regrid(cfg, states, tail, pool, src, dst)
+            out.append({
+                "name": (f"regrid/{algorithm}/"
+                         f"{src.n_i}x{src.g}->{dst.n_i}x{dst.g}"),
+                "us_per_call": ms * 1e3,
+                "derived": (f"regrid={ms:.2f}ms post_events/s={evs:,.0f}"
+                            f" qps_batch64={qps:,.0f}"),
+            })
+    return out
+
+
+def smoke_rows(events: int = 4096):
+    """CI subset: one DISGD scale-out (2x2 -> 4x4).
+
+    The acceptance bar: the regrid itself must cost less than one second
+    on CPU at smoke scale — elasticity that takes longer than draining a
+    micro-batch would be an outage, not a reshape.
+    """
+    from repro.core.routing import GridSpec
+
+    src, dst = GridSpec.rect(2, 2), GridSpec.rect(4, 4)
+    cfg, states, tail, pool = _trained("disgd", src, events)
+    ms = _time_regrid(states, src, dst)
+    evs, qps = _post_regrid(cfg, states, tail, pool, src, dst)
+    return [{
+        "name": f"regrid/disgd/movielens/{src.n_i}x{src.g}->{dst.n_i}x{dst.g}",
+        "regrid_ms": ms,
+        "post_events_per_sec": evs,
+        "qps_batch64": qps,
+    }]
+
+
+def append_smoke(out_path: str = "BENCH_smoke.json",
+                 events: int = 4096) -> None:
+    """Append the regrid rows to the CI smoke artifact (see bench_serve)."""
+    new_rows = smoke_rows(events)
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            payload = json.load(f)
+    else:
+        payload = {"suite": "smoke", "rows": []}
+    payload["rows"] = [r for r in payload["rows"]
+                       if not str(r.get("name", "")).startswith("regrid/")]
+    payload["rows"].extend(new_rows)
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    for r in new_rows:
+        print(f"{r['name']},regrid_ms={r['regrid_ms']:.2f},"
+              f"post_events/s={r['post_events_per_sec']:,.0f},"
+              f"qps_batch64={r['qps_batch64']:,.0f}")
+    print(f"# appended regrid rows to {out_path}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: append regrid rows to the smoke artifact")
+    ap.add_argument("--smoke-out", default="BENCH_smoke.json")
+    ap.add_argument("--events", type=int, default=None,
+                    help="stream length (default: 8192 sweep, 4096 smoke "
+                         "— the scale every other smoke row uses)")
+    args = ap.parse_args()
+    if args.smoke:
+        append_smoke(args.smoke_out, args.events or 4096)
+        return
+    print("name,us_per_call,derived")
+    for row in rows(args.events or 8192):
+        print(f"{row['name']},{row['us_per_call']:.2f},{row['derived']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -48,7 +48,7 @@ def _serve_args(cfg, batch: int, use_kernel: bool):
 
     hyper = cfg.resolved_hyper()
     return dict(
-        algorithm=cfg.algorithm, n_i=cfg.grid.n_i, g=cfg.grid.g,
+        algorithm=cfg.algorithm, grid=cfg.grid,
         top_n=hyper.top_n, u_cap=hyper.u_cap,
         qcap=plane.query_capacity(batch, cfg.grid.g),
         k_nn=getattr(hyper, "k_nn", 10), use_kernel=use_kernel)

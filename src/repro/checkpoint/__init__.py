@@ -1,3 +1,4 @@
-from repro.checkpoint.checkpointer import save_checkpoint, restore_checkpoint
+from repro.checkpoint.checkpointer import (latest_step, restore_checkpoint,
+                                           save_checkpoint)
 
-__all__ = ["save_checkpoint", "restore_checkpoint"]
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]

@@ -28,9 +28,11 @@ from repro.core import dics as dics_lib
 from repro.core import disgd as disgd_lib
 from repro.core import state as state_lib
 from repro.core.pipeline import StreamConfig
+from repro.core.routing import GridSpec
 
 __all__ = [
     "grid_axes",
+    "grid_from_mesh",
     "make_grid_step",
     "make_flat_grid_worker",
     "init_grid_states",
@@ -54,18 +56,25 @@ def grid_axes(mesh):
     return "model", user_axes
 
 
-def _grid_shape(mesh):
+def grid_from_mesh(mesh) -> GridSpec:
+    """The S&R ``GridSpec`` a device mesh realizes (item axis x user axes).
+
+    The inverse of ``launch.mesh.make_grid_mesh``: configs built for an
+    existing mesh should derive their grid from it rather than repeat the
+    shape — and a rescale that re-carves the mesh gets its new ``GridSpec``
+    from here.
+    """
     item_ax, user_axes = grid_axes(mesh)
     n_i = mesh.shape[item_ax]
     g = int(np.prod([mesh.shape[a] for a in user_axes]))
-    return n_i, g
+    return GridSpec.rect(n_i, g)
 
 
 def init_grid_states(cfg: StreamConfig, mesh):
     """Stacked worker states shaped (n_i, g, ...) for the mesh grid."""
     hyper = cfg.resolved_hyper()
-    n_i, g = _grid_shape(mesh)
-    assert cfg.grid.n_i == n_i and cfg.grid.g == g, (cfg.grid, n_i, g)
+    n_i, g = grid_from_mesh(mesh).shape
+    assert cfg.grid.shape == (n_i, g), (cfg.grid, n_i, g)
     if cfg.algorithm == "disgd":
         one = state_lib.init_disgd_state(hyper.u_cap, hyper.i_cap, hyper.k)
     else:
@@ -135,8 +144,8 @@ def make_flat_grid_worker(cfg: StreamConfig, mesh):
     step so each S&R worker runs at its mesh coordinate while the engine
     scan stays layout-agnostic.
     """
-    n_i, g = _grid_shape(mesh)
-    assert cfg.grid.n_i == n_i and cfg.grid.g == g, (cfg.grid, n_i, g)
+    n_i, g = grid_from_mesh(mesh).shape
+    assert cfg.grid.shape == (n_i, g), (cfg.grid, n_i, g)
     grid_step = _make_grid_step_unjitted(cfg, mesh)
 
     def worker(states, ev_u, ev_i):

@@ -352,7 +352,8 @@ class PublishEvent(NamedTuple):
 
 def run_stream_device(users: np.ndarray, items: np.ndarray, cfg,
                       verbose: bool = False, mesh=None,
-                      publish_every: int = 0, on_publish=None):
+                      publish_every: int = 0, on_publish=None,
+                      initial_states=None, initial_carry=(None, None)):
     """Run the whole prequential stream as a jitted scan on device.
 
     With ``publish_every == 0`` (default) the stream is one scan call.
@@ -362,6 +363,10 @@ def run_stream_device(users: np.ndarray, items: np.ndarray, cfg,
     subscribes to (``repro.serve.snapshot``). Worker states stay
     device-resident across segments; the only extra cost per boundary is
     the host sync of two scalars plus whatever the callback does.
+
+    ``initial_states``/``initial_carry`` resume from a checkpoint or a
+    regridded state; shapes must match ``cfg`` (the compiled scan is
+    shape-polymorphic in values only), so regrid to ``cfg.grid`` first.
     """
     from repro.core.pipeline import StreamResult
 
@@ -371,9 +376,11 @@ def run_stream_device(users: np.ndarray, items: np.ndarray, cfg,
     carry_cap = cfg.carry_slots or mb
     cap = cfg.bucket_capacity
 
+    resumed_carry = (initial_carry[0] is not None
+                     and np.asarray(initial_carry[0]).size > 0)
     n_batches = int(np.ceil(n / mb)) if n else 0
     # Static drain tail: worst case every carried event targets one worker.
-    drain = int(np.ceil(carry_cap / cap)) if n_batches else 0
+    drain = int(np.ceil(carry_cap / cap)) if (n_batches or resumed_carry) else 0
     steps = n_batches + drain
 
     seg = publish_every if publish_every > 0 else max(steps, 1)
@@ -387,7 +394,7 @@ def run_stream_device(users: np.ndarray, items: np.ndarray, cfg,
     flat_u[:n] = users
     flat_i[:n] = items
 
-    carry0 = init_scan_carry(cfg)
+    carry0 = init_scan_carry(cfg, states=initial_states, carry=initial_carry)
     xs = (jnp.asarray(fu, jnp.int32), jnp.asarray(fi, jnp.int32))
 
     # AOT-compile so the wall clock measures steady-state streaming, not

@@ -36,8 +36,11 @@ from repro.core import disgd as disgd_lib
 from repro.core import forgetting as forgetting_lib
 from repro.core import routing, state as state_lib
 from repro.core.evaluator import RecallAccumulator
+from repro.core.regrid import CheckpointShapeError
 
-__all__ = ["StreamConfig", "StreamResult", "run_stream", "make_worker_step"]
+__all__ = ["StreamConfig", "StreamResult", "run_stream", "make_worker_step",
+           "save_stream_checkpoint", "restore_stream_checkpoint",
+           "CheckpointShapeError", "LOGICAL_FORMAT"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -130,7 +133,8 @@ def init_states(cfg: StreamConfig):
 
 def run_stream(users: np.ndarray, items: np.ndarray, cfg: StreamConfig,
                verbose: bool = False, publish_every: int = 0,
-               on_publish=None) -> StreamResult:
+               on_publish=None, initial_states=None,
+               initial_carry=(None, None)) -> StreamResult:
     """Run the full prequential stream; returns curves + paper metrics.
 
     Thin dispatcher: ``cfg.backend`` selects the host reference loop below
@@ -140,20 +144,28 @@ def run_stream(users: np.ndarray, items: np.ndarray, cfg: StreamConfig,
     boundaries for the serving plane (``repro.serve.snapshot``): every
     ``publish_every`` micro-batch steps, ``on_publish(PublishEvent)``
     fires with the immutable worker-state tree at that boundary.
+
+    ``initial_states``/``initial_carry`` resume mid-stream from a
+    checkpoint or a regridded state (``repro.core.regrid``): the states
+    must be shaped for ``cfg.grid`` — restore with
+    ``restore_stream_checkpoint`` (which regrids portable checkpoints to
+    the configured grid) or call ``regrid.regrid`` first.
+    ``events_processed``/recall in the result cover the resumed segment.
     """
     if cfg.backend != "host":
         from repro.core import engine
 
         return engine.run_stream_device(
             users, items, cfg, verbose=verbose,
-            publish_every=publish_every, on_publish=on_publish)
+            publish_every=publish_every, on_publish=on_publish,
+            initial_states=initial_states, initial_carry=initial_carry)
 
     assert users.shape == items.shape
     n = users.shape[0]
     grid = cfg.grid
     cap = cfg.bucket_capacity
     step = make_worker_step(cfg)
-    states = init_states(cfg)
+    states = initial_states if initial_states is not None else init_states(cfg)
 
     forget = None
     if cfg.forgetting.policy != "none":
@@ -165,8 +177,8 @@ def run_stream(users: np.ndarray, items: np.ndarray, cfg: StreamConfig,
     user_occ, item_occ, loads = [], [], []
     dropped = 0
     processed = 0
-    carry_u = np.empty(0, dtype=np.int64)
-    carry_i = np.empty(0, dtype=np.int64)
+    carry_u, carry_i = (np.asarray(c, np.int64) if c is not None
+                        else np.empty(0, np.int64) for c in initial_carry)
     events_since_trigger = 0
     forgets = 0
     published_steps = 0
@@ -296,35 +308,99 @@ def run_stream(users: np.ndarray, items: np.ndarray, cfg: StreamConfig,
 # Fault tolerance: checkpoint/resume of the streaming state
 # ---------------------------------------------------------------------------
 
+# Version tag of the grid-portable checkpoint payload. v1: LogicalState
+# records + (algorithm, grid shape, carry). Legacy fixed-shape checkpoints
+# have no "format" key and restore only at their original grid.
+LOGICAL_FORMAT = "sr-logical-v1"
+
 
 def save_stream_checkpoint(directory: str, events_processed: int, states,
-                           carry=(None, None)):
-    """Persist worker states (+ the re-queue carry) mid-stream."""
+                           carry=(None, None), grid=None, algorithm=None):
+    """Persist worker states (+ the re-queue carry) mid-stream.
+
+    With ``grid`` (the ``GridSpec`` the states are shaped for), the
+    checkpoint is written in the grid-portable *logical* format
+    (``repro.core.regrid.LogicalState``, version-tagged): it restores at
+    ANY ``(n_i, g)`` — ``restore_stream_checkpoint`` rebuilds worker
+    tables for the configured grid. Without ``grid``, the legacy
+    fixed-shape format is written (restorable only at the same grid).
+    """
     from repro.checkpoint import save_checkpoint
 
     carry_u, carry_i = carry
     tree = {
-        "states": jax.tree.map(np.asarray, states),
         "carry_u": np.asarray(carry_u if carry_u is not None else
                               np.empty(0, np.int64)),
         "carry_i": np.asarray(carry_i if carry_i is not None else
                               np.empty(0, np.int64)),
     }
+    if grid is None:
+        tree["states"] = jax.tree.map(np.asarray, states)
+    else:
+        from repro.core import regrid as regrid_lib
+        from repro.core.state import DicsState
+
+        if algorithm is None:
+            algorithm = "dics" if isinstance(states, DicsState) else "disgd"
+        logical = regrid_lib.extract_logical(states, grid)
+        tree.update({
+            "format": LOGICAL_FORMAT,
+            "algorithm": algorithm,
+            "grid": np.asarray([grid.n_i, grid.g], np.int64),
+            "logical": jax.tree.map(np.asarray, logical),
+        })
     return save_checkpoint(directory, events_processed, tree)
 
 
 def restore_stream_checkpoint(directory: str, cfg: StreamConfig,
                               step: int | None = None):
-    """Restore worker states with the structure of ``init_states(cfg)``."""
+    """Restore worker states shaped like ``init_states(cfg)``.
+
+    Grid-portable (logical-format) checkpoints restore at whatever grid
+    ``cfg`` configures, regridding on the fly; legacy fixed-shape
+    checkpoints must match the configured grid or raise
+    ``CheckpointShapeError``.
+    """
     from repro.checkpoint import restore_checkpoint
+    from repro.core import regrid as regrid_lib
 
     events_processed, tree = restore_checkpoint(directory, step)
+    carry = (tree["carry_u"], tree["carry_i"])
+    hyper = cfg.resolved_hyper()
+
+    fmt = tree.get("format")
+    if fmt is not None:
+        if fmt != LOGICAL_FORMAT:
+            raise ValueError(f"unknown checkpoint format {fmt!r}")
+        if tree["algorithm"] != cfg.algorithm:
+            raise ValueError(
+                f"checkpoint holds {tree['algorithm']!r} state but the "
+                f"config asks for {cfg.algorithm!r}")
+        n_i, g = (int(x) for x in np.asarray(tree["grid"]))
+        src = routing.GridSpec.rect(n_i, g)
+        logical = regrid_lib.LogicalState(
+            *(jnp.asarray(leaf) for leaf in tree["logical"]))
+        states = regrid_lib.build_states(
+            logical, src=src, dst=cfg.grid,
+            u_cap=hyper.u_cap, i_cap=hyper.i_cap)
+        return events_processed, states, carry
+
     template = init_states(cfg)
     flat_t, treedef = jax.tree.flatten(template)
     flat_s = jax.tree.leaves(tree["states"])
-    assert len(flat_t) == len(flat_s), "checkpoint/config structure mismatch"
+    ckpt_workers = flat_s[0].shape[0] if flat_s and flat_s[0].ndim else "?"
+    if len(flat_t) != len(flat_s):
+        raise regrid_lib.CheckpointShapeError(
+            ckpt_workers, cfg.grid,
+            f"leaf count {len(flat_s)} != expected {len(flat_t)} "
+            f"(algorithm mismatch?)")
+    for s, t in zip(flat_s, flat_t):
+        if tuple(s.shape) != tuple(t.shape):
+            raise regrid_lib.CheckpointShapeError(
+                ckpt_workers, cfg.grid,
+                f"leaf shape {tuple(s.shape)} != expected {tuple(t.shape)}")
     states = jax.tree.unflatten(
         treedef,
         [jnp.asarray(s, t.dtype) for s, t in zip(flat_s, flat_t)],
     )
-    return events_processed, states, (tree["carry_u"], tree["carry_i"])
+    return events_processed, states, carry

@@ -1,0 +1,372 @@
+"""Online (g, n_i) resharding: the elastic-grid transform for S&R state.
+
+The paper's Splitting & Replication figure arranges ``n_c = n_i * g``
+workers on a grid: item state is *split* across the ``n_i`` rows and
+*replicated* across the ``g`` columns of its row; user state is split
+across the ``g`` columns and replicated down the ``n_i`` rows of its
+column; each rating event lands on the single row/column intersection.
+That picture fixes the grid shape at init — this module makes the shape a
+runtime knob, the operational gap Benczúr et al. call *elastic
+repartitioning*.
+
+The transform runs in two halves that compose into ``regrid``:
+
+  * ``extract_logical`` — flatten every worker's live entries into a
+    *logical state*: record arrays keyed by **global** user/item id,
+    annotated with their replica provenance (the source grid row for user
+    replicas, the source column for item replicas), plus the exact
+    pair-partitioned rating relation and the DICS co-occurrence blocks.
+    No target shape appears anywhere in it, so the same logical state
+    rebuilds at any ``(n_i', g')`` — it is also the grid-portable
+    checkpoint payload (``pipeline.save_stream_checkpoint(grid=...)``).
+  * ``build_states`` — scatter the records into freshly shaped worker
+    tables for the target grid: user/item factor shards are re-slotted by
+    the target strides (``slot = (id // stride) % capacity``), user
+    vectors are re-replicated across the new replica rows, and the DICS
+    co-occurrence blocks are re-partitioned by the new item splits and
+    merged across congruent source columns.
+
+Replica mapping is the congruence rule: destination row ``r'`` merges the
+source rows ``r ≡ r' (mod gcd(n_i, n_i'))`` (columns symmetrically with
+``gcd(g, g')``). Consequences worth knowing:
+
+  * identity regrid maps every replica to itself — ``regrid(s, grid,
+    grid)`` is bit-exact *structurally*, not via a short-circuit;
+  * refining a split axis by a divisible factor (``n_i | n_i'``) carries
+    each replica verbatim to the sub-split that still covers it;
+  * coarsening by a divisible factor (``n_i' | n_i``) merges exactly the
+    replicas whose splits union to the new split — additive statistics
+    (frequencies, DICS counts) sum exactly, diverged factor vectors merge
+    by the ``merge`` policy ("fresh": the replica with the highest local
+    last-touch clock wins — a *proxy* for recency, since per-worker event
+    clocks are not globally ordered and can misrank under heavy load skew;
+    "mean": frequency-weighted average, skew-robust but not value-
+    preserving). Merging only happens when a slot has several sources;
+    identity and divisible refinements carry the single source verbatim;
+  * non-divisible reshapes fall back to the same rule with a smaller gcd
+    — still deterministic, with additive statistics over-covered rather
+    than lost (cosine similarity is scale-invariant, so DICS ranking
+    survives; this is the paper's replication-by-belonging applied at
+    reshape time).
+
+Everything is pure ``jnp`` with static shapes — ``build_states`` is one
+jitted call per (source, target, capacity) signature — so a regrid can
+run device-resident between two engine scan segments.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import state as state_lib
+from repro.core.routing import GridSpec
+from repro.core.state import DicsState, DisgdState, Tables
+
+__all__ = [
+    "LogicalState",
+    "CheckpointShapeError",
+    "extract_logical",
+    "build_states",
+    "regrid",
+]
+
+
+class CheckpointShapeError(ValueError):
+    """A fixed-shape checkpoint does not fit the configured worker grid.
+
+    Carries both shapes so callers can react programmatically; the fix is
+    either to restore with the grid the checkpoint was written at, or to
+    re-save it in the grid-portable logical format
+    (``save_stream_checkpoint(..., grid=...)``), which restores at any
+    ``(n_i, g)`` via ``repro.core.regrid``.
+    """
+
+    def __init__(self, checkpoint_workers, config_grid: GridSpec,
+                 detail: str = ""):
+        self.checkpoint_workers = checkpoint_workers
+        self.config_grid = config_grid
+        msg = (
+            f"checkpoint was written for a {checkpoint_workers}-worker grid "
+            f"but the config asks for {config_grid} "
+            f"(n_c={config_grid.n_c}){': ' + detail if detail else ''}. "
+            "Restore with the original grid, or re-save the checkpoint in "
+            "the grid-portable logical format (save_stream_checkpoint(..., "
+            "grid=...)) which repro.core.regrid rebuilds at any shape."
+        )
+        super().__init__(msg)
+
+
+class LogicalState(NamedTuple):
+    """Grid-portable worker state: global-id-keyed records + provenance.
+
+    User/item records are flattened worker-major (``[n_c * cap]``, the
+    flatten of the stacked tables), so the source slot layout is
+    recoverable but never needed: every record carries its global id and
+    the replica coordinate that cannot be derived from the id alone (the
+    source *row* for a user replica, the source *column* for an item
+    replica — the other coordinate is ``id mod`` the grid). Zero-width
+    leaves (``u_vec``/``i_vec`` with ``k = 0``, ``co`` with zero side)
+    mark the algorithm that does not own them.
+    """
+
+    # user replica records, [n_c * u_cap]
+    u_id: jax.Array      # i32, global id, -1 = empty slot
+    u_row: jax.Array     # i32, source grid row of this replica
+    u_freq: jax.Array    # i32
+    u_ts: jax.Array      # i32
+    u_vec: jax.Array     # f32[N, k] (DISGD) / f32[N, 0] (DICS)
+    # item replica records, [n_c * i_cap]
+    i_id: jax.Array      # i32
+    i_col: jax.Array     # i32, source grid column of this replica
+    i_freq: jax.Array    # i32
+    i_ts: jax.Array      # i32
+    i_vec: jax.Array     # f32[M, k] (DISGD) / f32[M, 0] (DICS)
+    i_cnt: jax.Array     # f32[M] Eq. 6 denominators (zeros for DISGD)
+    # exact pair-partitioned relations, source worker-major
+    rated: jax.Array     # bool[n_c, u_cap, i_cap]
+    co: jax.Array        # f32[n_c, i_cap, i_cap] (f32[n_c, 0, 0] for DISGD)
+    clock: jax.Array     # i32[n_i, g] per-worker event clocks
+
+
+def extract_logical(states, grid: GridSpec) -> LogicalState:
+    """Flatten stacked ``[n_c, ...]`` worker states into a LogicalState."""
+    t = states.tables
+    n_c, u_cap = t.user_ids.shape
+    i_cap = t.item_ids.shape[1]
+    if n_c != grid.n_c:
+        raise CheckpointShapeError(n_c, grid, "stacked states/grid mismatch")
+    w = jnp.arange(n_c, dtype=jnp.int32)
+    u_row = jnp.broadcast_to((w // grid.g)[:, None], (n_c, u_cap)).reshape(-1)
+    i_col = jnp.broadcast_to((w % grid.g)[:, None], (n_c, i_cap)).reshape(-1)
+
+    if isinstance(states, DisgdState):
+        k = states.user_vecs.shape[-1]
+        u_vec = states.user_vecs.reshape(n_c * u_cap, k)
+        i_vec = states.item_vecs.reshape(n_c * i_cap, k)
+        i_cnt = jnp.zeros((n_c * i_cap,), jnp.float32)
+        co = jnp.zeros((n_c, 0, 0), jnp.float32)
+    elif isinstance(states, DicsState):
+        u_vec = jnp.zeros((n_c * u_cap, 0), jnp.float32)
+        i_vec = jnp.zeros((n_c * i_cap, 0), jnp.float32)
+        i_cnt = states.item_cnt.reshape(n_c * i_cap)
+        co = states.co
+    else:
+        raise TypeError(f"unknown state type {type(states)}")
+
+    return LogicalState(
+        u_id=t.user_ids.reshape(-1), u_row=u_row,
+        u_freq=t.user_freq.reshape(-1), u_ts=t.user_ts.reshape(-1),
+        u_vec=u_vec,
+        i_id=t.item_ids.reshape(-1), i_col=i_col,
+        i_freq=t.item_freq.reshape(-1), i_ts=t.item_ts.reshape(-1),
+        i_vec=i_vec, i_cnt=i_cnt,
+        rated=states.rated, co=co,
+        clock=t.clock.reshape(grid.n_i, grid.g),
+    )
+
+
+def _tile_records(ids, axis_coord, gcd_ax, reps):
+    """Replicate records to their destination rows/columns.
+
+    A replica at source coordinate ``a`` re-replicates to every target
+    coordinate ``a' ≡ a (mod gcd)``: ``a' = a % gcd + t * gcd`` for
+    ``t in range(reps)``. Returns flattened (ids-shaped * reps) arrays of
+    the target coordinate, plus an index map back into the source records.
+    """
+    n = ids.shape[0]
+    t = jnp.arange(reps, dtype=jnp.int32)
+    coord = (axis_coord % gcd_ax)[None, :] + (t * gcd_ax)[:, None]  # [reps, N]
+    src_idx = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (reps, n))
+    return coord.reshape(-1), src_idx.reshape(-1)
+
+
+def _scatter_merge(*, ids, ts, freq, dest, n_slots, vec=None, cnt=None,
+                   merge: str):
+    """Winner-take-slot scatter with replica merging.
+
+    ``dest`` is each record's flat destination slot (``n_slots`` = drop).
+    The slot's tenant is the record with the highest ``ts`` (ties: lowest
+    record index). ``ts`` values are per-worker local clocks, so across
+    source workers this is a most-locally-trained heuristic, not a global
+    ordering — exact whenever the slot has one source record. *All*
+    records carrying the tenant's id ("co-tenants", i.e. the id's merged
+    replicas) contribute additively to ``freq`` and ``cnt``; vectors
+    merge per the policy ("fresh" = tenant's vector verbatim, "mean" =
+    frequency-weighted average over co-tenants).
+    """
+    live = ids >= 0
+    dest = jnp.where(live, dest, n_slots)
+    safe = jnp.where(live, dest, 0)           # in-bounds gather address
+    n = ids.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+
+    # Stage 1: freshest ts per slot; stage 2: lowest index among ties.
+    ts_max = jnp.full((n_slots,), -1, ts.dtype).at[dest].max(ts, mode="drop")
+    tied = live & (ts == ts_max[safe])
+    idx_min = jnp.full((n_slots,), n, jnp.int32).at[
+        jnp.where(tied, dest, n_slots)].min(idx, mode="drop")
+    winner = tied & (idx == idx_min[safe])
+
+    win_dest = jnp.where(winner, dest, n_slots)
+    out_ids = jnp.full((n_slots,), -1, ids.dtype).at[win_dest].set(
+        ids, mode="drop")
+    coten = live & (ids == out_ids[safe])
+    cot_dest = jnp.where(coten, dest, n_slots)
+
+    out_freq = jnp.zeros((n_slots,), freq.dtype).at[cot_dest].add(
+        freq, mode="drop")
+    out_ts = jnp.zeros((n_slots,), ts.dtype).at[cot_dest].max(ts, mode="drop")
+
+    out_vec = None
+    if vec is not None and vec.shape[-1]:
+        if merge == "fresh":
+            out_vec = jnp.zeros((n_slots, vec.shape[-1]), vec.dtype).at[
+                win_dest].set(vec, mode="drop")
+        elif merge == "mean":
+            w = jnp.maximum(freq, 1).astype(vec.dtype)
+            num = jnp.zeros((n_slots, vec.shape[-1]), vec.dtype).at[
+                cot_dest].add(vec * w[:, None], mode="drop")
+            den = jnp.zeros((n_slots,), vec.dtype).at[cot_dest].add(
+                w, mode="drop")
+            out_vec = num / jnp.maximum(den, 1.0)[:, None]
+        else:
+            raise ValueError(f"unknown merge policy {merge!r}")
+    elif vec is not None:
+        out_vec = jnp.zeros((n_slots, 0), vec.dtype)
+
+    out_cnt = None
+    if cnt is not None:
+        out_cnt = jnp.zeros((n_slots,), cnt.dtype).at[cot_dest].add(
+            cnt, mode="drop")
+    return out_ids, out_freq, out_ts, out_vec, out_cnt
+
+
+@partial(jax.jit, static_argnames=("src", "dst", "u_cap", "i_cap", "merge"))
+def build_states(logical: LogicalState, *, src: GridSpec, dst: GridSpec,
+                 u_cap: int, i_cap: int, merge: str = "fresh"):
+    """Rebuild stacked ``[dst.n_c, ...]`` worker states from a LogicalState.
+
+    ``u_cap``/``i_cap`` are the *target* per-worker capacities (elastic
+    memory: a scale-out can shrink them, a scale-in can grow them). The
+    algorithm is carried by the logical leaves themselves (zero-width
+    ``co`` means DISGD).
+    """
+    is_disgd = logical.co.shape[-1] == 0
+    n_c = dst.n_c
+    gcd_n = math.gcd(src.n_i, dst.n_i)
+    gcd_g = math.gcd(src.g, dst.g)
+
+    # --- user replicas: split by id % g', re-replicated over dst rows ---
+    rows, u_src = _tile_records(logical.u_id, logical.u_row, gcd_n,
+                                dst.n_i // gcd_n)
+    uid = logical.u_id[u_src]
+    u_dest = ((rows * dst.g + uid % dst.g) * u_cap
+              + state_lib.user_slot(uid, dst, u_cap))
+    user_ids, user_freq, user_ts, user_vecs, _ = _scatter_merge(
+        ids=uid, ts=logical.u_ts[u_src], freq=logical.u_freq[u_src],
+        dest=u_dest, n_slots=n_c * u_cap, vec=logical.u_vec[u_src],
+        merge=merge)
+
+    # --- item replicas: split by id % n_i', re-replicated over dst cols ---
+    cols, i_src = _tile_records(logical.i_id, logical.i_col, gcd_g,
+                                dst.g // gcd_g)
+    iid = logical.i_id[i_src]
+    i_dest = (((iid % dst.n_i) * dst.g + cols) * i_cap
+              + state_lib.item_slot(iid, dst, i_cap))
+    item_ids, item_freq, item_ts, item_vecs, item_cnt = _scatter_merge(
+        ids=iid, ts=logical.i_ts[i_src], freq=logical.i_freq[i_src],
+        dest=i_dest, n_slots=n_c * i_cap, vec=logical.i_vec[i_src],
+        cnt=logical.i_cnt[i_src], merge=merge)
+
+    uid_tab = user_ids.reshape(n_c, u_cap)
+    iid_tab = item_ids.reshape(n_c, i_cap)
+
+    # --- rated pairs: exactly partitioned, each pair has ONE target ---
+    src_nc, s_ucap, s_icap = logical.rated.shape
+    u3 = logical.u_id.reshape(src_nc, s_ucap)[:, :, None]
+    i3 = logical.i_id.reshape(src_nc, s_icap)[:, None, :]
+    on = logical.rated & (u3 >= 0) & (i3 >= 0)
+    pw = (i3 % dst.n_i) * dst.g + (u3 % dst.g)
+    psu = state_lib.user_slot(u3, dst, u_cap)
+    psi = state_lib.item_slot(i3, dst, i_cap)
+    # A pair survives only if both its ids won their target slots
+    # (capacity collisions at the target evict exactly like an insert).
+    keep = on & (uid_tab[pw, psu] == u3) & (iid_tab[pw, psi] == i3)
+    p_dest = jnp.where(keep, (pw * u_cap + psu) * i_cap + psi,
+                       n_c * u_cap * i_cap)
+    rated = jnp.zeros((n_c * u_cap * i_cap,), bool).at[p_dest].set(
+        True, mode="drop").reshape(n_c, u_cap, i_cap)
+
+    # --- DICS co-occurrence blocks: re-partition by the new item splits,
+    # merge across congruent source columns ---
+    if is_disgd:
+        co = jnp.zeros((n_c, 0, 0), logical.co.dtype)
+        dics_cnt = None
+    else:
+        co_flat = jnp.zeros((n_c * i_cap * i_cap,), logical.co.dtype)
+        src_col = (jnp.arange(src_nc, dtype=jnp.int32) % src.g)[:, None, None]
+        p3 = logical.i_id.reshape(src_nc, s_icap)[:, :, None]
+        q3 = logical.i_id.reshape(src_nc, s_icap)[:, None, :]
+        prow = p3 % dst.n_i
+        sp = state_lib.item_slot(p3, dst, i_cap)
+        sq = state_lib.item_slot(q3, dst, i_cap)
+        pair_ok = (p3 >= 0) & (q3 >= 0) & (prow == q3 % dst.n_i)
+        for t in range(dst.g // gcd_g):
+            c_new = src_col % gcd_g + t * gcd_g
+            cw = prow * dst.g + c_new
+            keep_co = (pair_ok & (iid_tab[cw, sp] == p3)
+                       & (iid_tab[cw, sq] == q3))
+            c_dest = jnp.where(keep_co, (cw * i_cap + sp) * i_cap + sq,
+                               n_c * i_cap * i_cap)
+            co_flat = co_flat.at[c_dest].add(logical.co, mode="drop")
+        co = co_flat.reshape(n_c, i_cap, i_cap)
+        dics_cnt = item_cnt
+
+    # --- per-worker clocks: max over the merged source rectangle ---
+    m = logical.clock.reshape(src.n_i // gcd_n, gcd_n,
+                              src.g // gcd_g, gcd_g).max(axis=(0, 2))
+    clock = m[(jnp.arange(dst.n_i) % gcd_n)[:, None],
+              (jnp.arange(dst.g) % gcd_g)[None, :]].reshape(n_c)
+
+    tables = Tables(
+        user_ids=uid_tab, item_ids=iid_tab,
+        user_freq=user_freq.reshape(n_c, u_cap),
+        item_freq=item_freq.reshape(n_c, i_cap),
+        user_ts=user_ts.reshape(n_c, u_cap),
+        item_ts=item_ts.reshape(n_c, i_cap),
+        clock=clock,
+    )
+    if is_disgd:
+        return DisgdState(
+            tables=tables,
+            user_vecs=user_vecs.reshape(n_c, u_cap, -1),
+            item_vecs=item_vecs.reshape(n_c, i_cap, -1),
+            rated=rated,
+        )
+    return DicsState(
+        tables=tables, co=co,
+        item_cnt=dics_cnt.reshape(n_c, i_cap), rated=rated,
+    )
+
+
+def regrid(states, src: GridSpec, dst: GridSpec, *, u_cap: int | None = None,
+           i_cap: int | None = None, merge: str = "fresh"):
+    """Reshape live worker states from grid ``src`` to grid ``dst``.
+
+    ``regrid(states, grid, grid)`` is the identity, bit for bit. Target
+    capacities default to the source's; shrinking them evicts exactly as
+    a slot-table insert would (freshest tenant wins).
+    """
+    t = states.tables
+    if u_cap is None:
+        u_cap = t.user_ids.shape[1]
+    if i_cap is None:
+        i_cap = t.item_ids.shape[1]
+    logical = extract_logical(states, src)
+    return build_states(logical, src=src, dst=dst, u_cap=u_cap, i_cap=i_cap,
+                        merge=merge)

@@ -57,6 +57,12 @@ class GridSpec:
       n_i: number of item splits (replication factor knob of the paper).
       w:   extra user-group width; ``w = 0`` reproduces the paper's
            experimental configuration ``n_c = n_i**2``.
+
+    The paper only instantiates ``w >= 0`` (``g >= n_i``); the S&R routing
+    invariants hold for ANY rectangular ``n_i x g`` grid, and the elastic
+    runtime (``core/regrid.py``) reshapes between arbitrary rectangles, so
+    ``w`` may be negative as long as ``g = n_i + w >= 1``. Use
+    ``GridSpec.rect(n_i, g)`` to name a grid by its shape directly.
     """
 
     n_i: int
@@ -69,11 +75,21 @@ class GridSpec:
 
     @property
     def n_c(self) -> int:
-        """Total number of workers, ``n_i**2 + w * n_i`` (paper constraint)."""
+        """Total number of workers, ``n_i * g`` (paper: n_i**2 + w*n_i)."""
         return self.n_i * self.g
 
+    @property
+    def shape(self) -> tuple[int, int]:
+        """(n_i, g): grid rows x columns."""
+        return (self.n_i, self.g)
+
+    @classmethod
+    def rect(cls, n_i: int, g: int) -> "GridSpec":
+        """A grid named by its (item splits, user groups) shape."""
+        return cls(n_i=n_i, w=g - n_i)
+
     def __post_init__(self):
-        if self.n_i < 1 or self.w < 0:
+        if self.n_i < 1 or self.g < 1:
             raise ValueError(f"invalid grid: n_i={self.n_i}, w={self.w}")
 
 

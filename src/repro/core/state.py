@@ -33,6 +33,8 @@ __all__ = [
     "init_disgd_state",
     "init_dics_state",
     "slot_of",
+    "user_slot",
+    "item_slot",
     "occupancy",
     "item_stats",
 ]
@@ -41,6 +43,22 @@ __all__ = [
 def slot_of(ids, n_splits: int, capacity: int):
     """Map global id(s) to a local table slot."""
     return (jnp.asarray(ids) // n_splits) % capacity
+
+
+def user_slot(ids, grid, capacity: int):
+    """User-table slot(s) on a ``grid``-shaped worker (``GridSpec``).
+
+    Users are split into ``grid.g`` groups, so the slot stride is ``g``.
+    The grid-aware twin of ``slot_of`` — callers that hold a ``GridSpec``
+    (the serving plane, the regrid transform) should use this instead of
+    re-deriving the stride.
+    """
+    return slot_of(ids, grid.g, capacity)
+
+
+def item_slot(ids, grid, capacity: int):
+    """Item-table slot(s) on a ``grid``-shaped worker (stride ``n_i``)."""
+    return slot_of(ids, grid.n_i, capacity)
 
 
 class Tables(NamedTuple):

@@ -113,6 +113,27 @@ class QueryFrontend:
         while len(self._cache) > self.cfg.cache_capacity:
             self._cache.popitem(last=False)
 
+    # -- elasticity ------------------------------------------------------
+
+    def retarget(self, grid, u_cap: int | None = None) -> None:
+        """Point the front-end at a resharded grid (``core/regrid``).
+
+        Swaps the static plane parameters (new jit signature) and drops
+        every cached answer — lists computed against the old shape may
+        disagree with the resharded state's merges. The snapshot store is
+        shape-agnostic, so the same store keeps serving across the
+        rescale; callers publish the first post-regrid snapshot and then
+        retarget.
+        """
+        over = {"grid": grid}
+        if u_cap is not None:
+            over["u_cap"] = u_cap
+        self.cfg = dataclasses.replace(self.cfg, **over)
+        self._cache.clear()
+        self._cache_version = -1
+        self._cache_forgets = -1
+        self.stats["retargets"] += 1
+
     # -- the serving loop -------------------------------------------------
 
     def _compute(self, snap, uids: list[int]) -> dict:
@@ -133,7 +154,7 @@ class QueryFrontend:
             arr[:len(batch)] = batch
             ids, scores, known, served = plane.grid_topn(
                 snap.states, jnp.asarray(arr),
-                algorithm=cfg.algorithm, n_i=cfg.grid.n_i, g=cfg.grid.g,
+                algorithm=cfg.algorithm, grid=cfg.grid,
                 top_n=cfg.top_n, u_cap=cfg.u_cap, qcap=cfg.qcap,
                 k_nn=cfg.k_nn, use_kernel=cfg.use_kernel)
             ids, scores = np.asarray(ids), np.asarray(scores)

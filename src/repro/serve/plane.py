@@ -48,10 +48,11 @@ def query_capacity(batch_size: int, g: int, factor: float = 2.0) -> int:
     return max(8, min(batch_size, int(np.ceil(fair * factor))))
 
 
-@partial(jax.jit, static_argnames=("algorithm", "n_i", "g", "top_n", "u_cap",
+@partial(jax.jit, static_argnames=("algorithm", "grid", "top_n", "u_cap",
                                    "qcap", "k_nn", "use_kernel"))
-def grid_topn(states, user_ids, *, algorithm: str = "disgd", n_i: int = 1,
-              g: int = 1, top_n: int = 10, u_cap: int = 1024, qcap: int = 64,
+def grid_topn(states, user_ids, *, algorithm: str = "disgd",
+              grid: routing.GridSpec = routing.GridSpec(1), top_n: int = 10,
+              u_cap: int = 1024, qcap: int = 64,
               k_nn: int = 10, use_kernel: bool = True):
     """Grid-wide top-N for a batch of users, merged across item splits.
 
@@ -61,8 +62,10 @@ def grid_topn(states, user_ids, *, algorithm: str = "disgd", n_i: int = 1,
         snapshot from ``repro.serve.snapshot``.
       user_ids: i32[Q] global user ids; -1 entries are padding.
       algorithm: "disgd" | "dics" — which serving leaf scores the splits.
-      n_i / g / u_cap / k_nn: grid + hyper parameters (``GridSpec``,
-        ``DisgdHyper`` / ``DicsHyper``).
+      grid: the ``GridSpec`` the states are shaped for (hashable, so a jit
+        key) — serving adapts to whatever grid training (or a regrid)
+        produced; there is no baked-in shape.
+      u_cap / k_nn: hyper parameters (``DisgdHyper`` / ``DicsHyper``).
       qcap: per-column query bucket capacity (``query_capacity``).
       use_kernel: route DISGD scoring through the Pallas kernel.
 
@@ -74,6 +77,7 @@ def grid_topn(states, user_ids, *, algorithm: str = "disgd", n_i: int = 1,
       served bool[Q]: False for -1 padding and for queries that overflowed
         their column's bucket this call (re-queue and retry).
     """
+    n_i, g = grid.n_i, grid.g
     q = user_ids.shape[0]
     user_ids = user_ids.astype(jnp.int32)
     valid = user_ids >= 0

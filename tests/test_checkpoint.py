@@ -1,0 +1,61 @@
+"""Checkpointer round-trips: bf16 view trick, nested containers, steps.
+
+The msgpack checkpointer serializes bfloat16 through a uint16 view (numpy
+cannot parse the ml_dtypes dtype string from ``dtype.str``); these tests
+pin that path, the nested tuple/dict/list structure encoding, and
+``latest_step`` over multi-step directories — the resume primitive the
+elastic rescale driver (``repro.launch.rescale_rs``) leans on.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+
+
+def test_bfloat16_round_trip_is_bit_exact(tmp_path):
+    rng = np.random.default_rng(0)
+    arr = rng.normal(size=(16, 8)).astype(jnp.bfloat16)
+    # Include the values a float detour would mangle: signed zero, inf.
+    arr[0, 0] = np.float32("-0.0")
+    arr[0, 1] = np.float32("inf")
+    save_checkpoint(str(tmp_path), 1, {"w": arr})
+    _, tree = restore_checkpoint(str(tmp_path))
+    out = tree["w"]
+    assert out.dtype == jnp.bfloat16
+    np.testing.assert_array_equal(out.view(np.uint16), arr.view(np.uint16))
+
+
+def test_nested_tuples_and_containers_round_trip(tmp_path):
+    tree = {
+        "opt": (np.arange(5, dtype=np.int32),
+                (np.ones((2, 3), np.float16), "adamw"),
+                {"nu": [np.float64(2.5), 7]}),
+        "flags": [True, None, "x"],
+    }
+    save_checkpoint(str(tmp_path), 3, tree)
+    step, out = restore_checkpoint(str(tmp_path))
+    assert step == 3
+    assert isinstance(out["opt"], tuple)          # tuples stay tuples
+    assert isinstance(out["opt"][1], tuple)
+    np.testing.assert_array_equal(out["opt"][0], tree["opt"][0])
+    np.testing.assert_array_equal(out["opt"][1][0], tree["opt"][1][0])
+    assert out["opt"][1][1] == "adamw"
+    assert out["opt"][2]["nu"][0] == 2.5 and out["opt"][2]["nu"][1] == 7
+    assert out["flags"] == [True, None, "x"]
+
+
+def test_latest_step_over_multi_step_directories(tmp_path):
+    assert latest_step(str(tmp_path / "missing")) is None
+    assert latest_step(str(tmp_path)) is None      # exists but empty
+    for step in (3, 10, 7):
+        save_checkpoint(str(tmp_path), step, {"s": np.asarray([step])})
+    assert latest_step(str(tmp_path)) == 10
+    step, tree = restore_checkpoint(str(tmp_path))       # default = latest
+    assert step == 10 and int(tree["s"][0]) == 10
+    step, tree = restore_checkpoint(str(tmp_path), 3)    # explicit step
+    assert step == 3 and int(tree["s"][0]) == 3
+    with pytest.raises(FileNotFoundError):
+        restore_checkpoint(str(tmp_path / "missing"))

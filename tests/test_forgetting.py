@@ -103,3 +103,121 @@ def test_gradual_forgetting_dics():
                                                 gradual_gamma=0.5))
     np.testing.assert_allclose(np.asarray(st.co), 0.5)
     np.testing.assert_allclose(np.asarray(st.item_cnt), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Forgetting x regrid: evictions survive resharding (ISSUE 3 satellite)
+# ---------------------------------------------------------------------------
+
+
+def _stacked(st):
+    import jax
+
+    return jax.tree.map(lambda x: x[None], st)
+
+
+def test_evict_to_budget_keeps_best_and_clears_state():
+    """Budget eviction keeps exactly the freshest/most-frequent entries
+    and scrubs everything the evicted rows/columns owned."""
+    st = evict_to_budget(_populated(), user_budget=3, item_budget=2,
+                         policy="lru")
+    uids = np.asarray(st.tables.user_ids)
+    iids = np.asarray(st.tables.item_ids)
+    # LRU keeps the 3 freshest users (ts 98, 99, 100) and 2 freshest items.
+    assert np.flatnonzero(uids >= 0).tolist() == [5, 6, 7]
+    assert np.flatnonzero(iids >= 0).tolist() == [0, 1]
+    assert np.all(np.asarray(st.user_vecs)[uids < 0] == 0)
+    assert np.all(np.asarray(st.item_vecs)[iids < 0] == 0)
+    assert np.all(~np.asarray(st.rated)[uids < 0, :])
+    assert np.all(~np.asarray(st.rated)[:, iids < 0])
+
+    st_lfu = evict_to_budget(_populated(), user_budget=4, item_budget=4,
+                             policy="lfu")
+    assert int(state_lib.occupancy(st_lfu.tables)[0]) <= 4
+
+
+def test_evicted_slots_stay_empty_after_regrid():
+    """Resharding must not resurrect forgotten entries: ids evicted before
+    a regrid are absent on every target grid, and their old slots carry
+    -1, not stale tenants."""
+    from repro.core.regrid import regrid
+    from repro.core.routing import GridSpec
+
+    st = evict_to_budget(_populated(), user_budget=3, item_budget=2,
+                         policy="lru")
+    live_u = {int(x) for x in np.asarray(st.tables.user_ids) if x >= 0}
+    live_i = {int(x) for x in np.asarray(st.tables.item_ids) if x >= 0}
+    src = GridSpec.rect(1, 1)
+    for dst in (GridSpec.rect(1, 1), GridSpec.rect(2, 2),
+                GridSpec.rect(1, 4)):
+        out = regrid(_stacked(st), src, dst)
+        uids = np.asarray(out.tables.user_ids).reshape(-1)
+        iids = np.asarray(out.tables.item_ids).reshape(-1)
+        assert {int(x) for x in uids if x >= 0} == live_u, dst
+        assert {int(x) for x in iids if x >= 0} == live_i, dst
+        # Evicted entries leave no orphaned payload anywhere: empty user
+        # slots carry zero vectors and an all-False rated row.
+        vecs = np.asarray(out.user_vecs).reshape(-1, out.user_vecs.shape[-1])
+        assert np.all(vecs[uids < 0] == 0)
+        dead_rows = np.asarray(out.tables.user_ids) < 0
+        assert np.all(~np.asarray(out.rated)[dead_rows])
+
+
+def test_gradual_forgetting_composes_with_regrid():
+    """The gradual policy decays values without evicting; a regrid carries
+    the decayed values verbatim (identity: bit-exact) and replica merges
+    pick decayed replicas, never un-decayed ghosts."""
+    import jax
+
+    from repro.core.regrid import regrid
+    from repro.core.routing import GridSpec
+
+    st0 = _populated()
+    st = apply_forgetting(st0, ForgettingConfig(policy="gradual",
+                                                gradual_gamma=0.5))
+    src = GridSpec.rect(1, 1)
+    stacked = _stacked(st)
+    ident = regrid(stacked, src, src)
+    for a, b in zip(jax.tree.leaves(stacked), jax.tree.leaves(ident)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    out = regrid(stacked, src, GridSpec.rect(2, 2))
+    uids = np.asarray(out.tables.user_ids)
+    for w in range(4):
+        for s in np.flatnonzero(uids[w] >= 0):
+            np.testing.assert_allclose(
+                np.asarray(out.user_vecs[w, s]),
+                0.5 * np.asarray(st0.user_vecs[int(uids[w, s])]))
+
+
+def test_gradual_dics_decay_survives_coarsening():
+    """DICS gradual decay then a split-coarsening regrid: the decayed co
+    mass merges exactly (additivity is decay-agnostic). The source is a
+    (2,1) grid — rows hold even/odd items — coarsened onto one worker."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.regrid import regrid
+    from repro.core.routing import GridSpec
+
+    def worker(row):
+        st = state_lib.init_dics_state(4, 4)
+        return st._replace(
+            tables=st.tables._replace(
+                user_ids=jnp.arange(4, dtype=jnp.int32),
+                item_ids=jnp.int32(row) + 2 * jnp.arange(4, dtype=jnp.int32),
+                clock=jnp.int32(8)),
+            co=jnp.full((4, 4), 2.0 + row), item_cnt=jnp.full((4,), 4.0))
+
+    states = jax.tree.map(lambda *xs: jnp.stack(xs), worker(0), worker(1))
+    decayed = apply_forgetting(states, ForgettingConfig(
+        policy="gradual", gradual_gamma=0.5))
+    out = regrid(decayed, GridSpec.rect(2, 1), GridSpec.rect(1, 1), i_cap=8)
+    assert (float(np.asarray(out.co).sum())
+            == float(np.asarray(decayed.co).sum()))
+    assert (float(np.asarray(out.item_cnt).sum())
+            == float(np.asarray(decayed.item_cnt).sum()))
+    # All 8 items live on the merged worker, counts halved by the decay.
+    iids = np.asarray(out.tables.item_ids).reshape(-1)
+    assert sorted(iids[iids >= 0].tolist()) == list(range(8))
+    assert np.all(np.asarray(out.item_cnt).reshape(-1)[iids >= 0] == 2.0)

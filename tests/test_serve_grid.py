@@ -93,8 +93,8 @@ def test_merge_equals_single_worker_at_ni1(seed):
     states = _random_grid_disgd(seed, 1, 1, u_cap=u_cap, i_cap=i_cap)
     q = _queries(states, 1, 1, np.random.default_rng(seed))
     ids_g, sc_g, known, served = grid_topn(
-        states, q, algorithm="disgd", n_i=1, g=1, top_n=10, u_cap=u_cap,
-        qcap=q.shape[0])
+        states, q, algorithm="disgd", grid=GridSpec.rect(1, 1), top_n=10,
+        u_cap=u_cap, qcap=q.shape[0])
     st_one = jax.tree.map(lambda x: x[0], states)
     ids_s, sc_s = recommend_topn(st_one, q, top_n=10, g=1, u_cap=u_cap)
     np.testing.assert_array_equal(np.asarray(ids_g), np.asarray(ids_s))
@@ -112,8 +112,8 @@ def test_merge_invariant_under_split_permutation(seed, n_i):
     u_cap, i_cap = 24, 16
     states = _random_grid_disgd(seed, n_i, g, u_cap=u_cap, i_cap=i_cap)
     q = _queries(states, n_i, g, np.random.default_rng(seed))
-    kw = dict(algorithm="disgd", n_i=n_i, g=g, top_n=10, u_cap=u_cap,
-              qcap=q.shape[0])
+    kw = dict(algorithm="disgd", grid=GridSpec.rect(n_i, g), top_n=10,
+              u_cap=u_cap, qcap=q.shape[0])
     ids_a, sc_a, known_a, _ = grid_topn(states, q, **kw)
 
     perm = np.random.default_rng(seed + 1).permutation(n_i)
@@ -146,7 +146,8 @@ def test_grid_serving_excludes_rated_pairs_across_splits():
     q_users = np.unique(users)[:64]
     ids, _, known, served = grid_topn(
         res.final_states, jnp.asarray(q_users, jnp.int32),
-        algorithm="disgd", n_i=2, g=2, top_n=10, u_cap=512, qcap=64)
+        algorithm="disgd", grid=GridSpec.rect(2, 2), top_n=10, u_cap=512,
+        qcap=64)
     ids = np.asarray(ids)
     assert np.asarray(served).all()
     assert np.asarray(known).any()
@@ -166,8 +167,8 @@ def test_dics_grid_parity_at_ni1_and_serves_at_ni2():
     res = run_stream(users, items, cfg)
     q = jnp.asarray(np.unique(users)[:32], jnp.int32)
     ids_g, sc_g, known, served = grid_topn(
-        res.final_states, q, algorithm="dics", n_i=1, g=1, top_n=10,
-        u_cap=256, k_nn=hyper.k_nn, qcap=32)
+        res.final_states, q, algorithm="dics", grid=GridSpec.rect(1, 1),
+        top_n=10, u_cap=256, k_nn=hyper.k_nn, qcap=32)
     st_one = jax.tree.map(lambda x: x[0], res.final_states)
     ids_r, sc_r, known_r = dics_partial_topn(
         st_one, q, top_n=10, k_nn=hyper.k_nn, g=1, u_cap=256)
@@ -183,8 +184,8 @@ def test_dics_grid_parity_at_ni1_and_serves_at_ni2():
         cfg, grid=GridSpec(2), hyper=DicsHyper(u_cap=128, i_cap=32))
     res2 = run_stream(users, items, cfg2)
     ids2, _, known2, served2 = grid_topn(
-        res2.final_states, q, algorithm="dics", n_i=2, g=2, top_n=10,
-        u_cap=128, k_nn=hyper.k_nn, qcap=32)
+        res2.final_states, q, algorithm="dics", grid=GridSpec.rect(2, 2),
+        top_n=10, u_cap=128, k_nn=hyper.k_nn, qcap=32)
     assert np.asarray(served2).all()
     assert (np.asarray(ids2)[np.asarray(known2)] >= 0).any()
 
@@ -225,7 +226,8 @@ def test_held_snapshot_unaffected_by_further_training():
     held = {}
     answers = {}
     q = jnp.asarray(np.unique(users)[:16], jnp.int32)
-    kw = dict(algorithm="disgd", n_i=2, g=2, top_n=10, u_cap=256, qcap=16)
+    kw = dict(algorithm="disgd", grid=GridSpec.rect(2, 2), top_n=10,
+              u_cap=256, qcap=16)
 
     def on_publish(ev):
         store.publish(ev.states, ev.events_processed, ev.forgets)
