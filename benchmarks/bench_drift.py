@@ -1,0 +1,179 @@
+"""Closed-loop concept drift: dip depth, recovery time, events/s vs policy.
+
+Claim under test: *reacting* to detected drift beats forgetting on a
+fixed cadence. For each drift scenario (``repro.drift.scenarios``) and
+both algorithms, three policies run the same stream:
+
+  * ``none``     — no forgetting (the open-loop baseline);
+  * ``fixed``    — the paper's cadence forgetting (LRU every
+    ``trigger_every`` events), blind to the drift;
+  * ``adaptive`` — the closed loop: on-device detector + controller
+    (``StreamConfig.drift``), firing an aggressive eviction pass at the
+    detected drift only.
+
+Reported per run: pre-drift windowed recall, post-drift dip, recovery
+time (evaluated events until the curve regains 95% of the pre-drift
+level; censored at the horizon when it never does), detector firings,
+and events/s (the drift runtime must not tax throughput).
+
+``smoke_rows()`` is the CI subset — the abrupt scenario on DICS, fixed
+vs adaptive — appended to ``BENCH_smoke.json`` by ``--smoke`` so CI
+tracks the acceptance bar: adaptive recovery strictly faster than fixed.
+
+  PYTHONPATH=src python -m benchmarks.bench_drift            # full sweep
+  PYTHONPATH=src python -m benchmarks.bench_drift --smoke    # CI rows
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+import numpy as np
+
+# Scenario kwargs place the drift at 30% of the stream so the post-drift
+# runway is long enough for recovery to be observable, not censored.
+SCENARIO_KW = {
+    "abrupt": dict(at=0.3),
+    "gradual": dict(start=0.3, end=0.55),
+}
+EVENTS = 32768
+
+
+def _cfg(algorithm: str, policy: str, micro_batch: int = 256):
+    from repro.core.dics import DicsHyper
+    from repro.core.disgd import DisgdHyper
+    from repro.core.forgetting import ForgettingConfig
+    from repro.core.pipeline import StreamConfig
+    from repro.core.routing import GridSpec
+    from repro.drift import DriftPolicy
+
+    hyper = (DisgdHyper(u_cap=256, i_cap=64) if algorithm == "disgd"
+             else DicsHyper(u_cap=256, i_cap=64))
+    cfg = StreamConfig(algorithm=algorithm, grid=GridSpec(2),
+                       micro_batch=micro_batch, hyper=hyper, backend="scan")
+    if policy == "fixed":
+        cfg = dataclasses.replace(cfg, forgetting=ForgettingConfig(
+            policy="lru", trigger_every=2048, lru_max_age=512))
+    elif policy == "adaptive":
+        cfg = dataclasses.replace(cfg, drift=DriftPolicy())
+    elif policy != "none":
+        raise ValueError(policy)
+    return cfg
+
+
+def _run(scenario: str, algorithm: str, policy: str, events: int,
+         seed: int = 0):
+    from repro.core.pipeline import run_stream
+    from repro.drift import make_scenario, recovery_report
+
+    sc = make_scenario(scenario, events=events, seed=seed,
+                       **SCENARIO_KW.get(scenario, {}))
+    res = run_stream(sc.users, sc.items, _cfg(algorithm, policy))
+    # recovery_report indexes the curve by stream position, which equals
+    # evaluated position only while nothing is dropped.
+    assert res.dropped == 0, f"drift bench overflowed: dropped={res.dropped}"
+    rep = recovery_report(res.recall.bits(), sc.drift_events[0])
+    fires = (int(np.sum(res.drift_flags)) if res.drift_flags is not None
+             else 0)
+    return sc, res, rep, fires
+
+
+def rows(events: int = EVENTS):
+    out = []
+    for scenario in ("abrupt", "gradual"):
+        for algorithm in ("disgd", "dics"):
+            for policy in ("none", "fixed", "adaptive"):
+                _, res, rep, fires = _run(scenario, algorithm, policy, events)
+                rec = (str(rep.recovery_events)
+                       if rep.recovery_events is not None
+                       else f">{rep.horizon}")
+                out.append({
+                    "name": f"drift/{algorithm}/{scenario}/{policy}",
+                    "us_per_call": 1e6 * res.wall_seconds / max(
+                        res.events_processed, 1),
+                    "derived": (
+                        f"pre={rep.pre:.3f} dip={rep.dip:.3f}"
+                        f" recovery={rec}ev fires={fires}"
+                        f" forgets={res.forgets}"
+                        f" events/s={res.throughput:,.0f}"
+                    ),
+                })
+    return out
+
+
+def smoke_rows(events: int = EVENTS):
+    """CI subset: DICS on the abrupt scenario, fixed vs adaptive.
+
+    The acceptance bar rides in the artifact: the adaptive controller's
+    recovery (censored runs count as horizon+1) must beat the
+    fixed-cadence baseline's.
+    """
+    out = []
+    for policy in ("fixed", "adaptive"):
+        _, res, rep, fires = _run("abrupt", "dics", policy, events)
+        out.append({
+            "name": f"drift/dics/abrupt/{policy}",
+            "pre_recall": rep.pre,
+            "dip_recall": rep.dip,
+            "recovery_events": rep.recovery_events,
+            "recovery_or_censored": rep.recovery_or_censored,
+            "post_drift_horizon": rep.horizon,
+            "detector_fires": fires,
+            "forgets": res.forgets,
+            "events_per_sec": res.throughput,
+            "recall": res.recall.mean(),
+        })
+    adaptive, fixed = out[1], out[0]
+    adaptive["beats_fixed"] = bool(
+        adaptive["recovery_or_censored"] < fixed["recovery_or_censored"])
+    return out
+
+
+def append_smoke(out_path: str = "BENCH_smoke.json",
+                 events: int = EVENTS) -> None:
+    """Append the drift rows to the CI smoke artifact (see bench_serve)."""
+    new_rows = smoke_rows(events)
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            payload = json.load(f)
+    else:
+        payload = {"suite": "smoke", "rows": []}
+    payload["rows"] = [r for r in payload["rows"]
+                       if not str(r.get("name", "")).startswith("drift/")]
+    payload["rows"].extend(new_rows)
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    for r in new_rows:
+        rec = (r["recovery_events"] if r["recovery_events"] is not None
+               else f">{r['post_drift_horizon']}")
+        print(f"{r['name']},recovery={rec}ev,dip={r['dip_recall']:.3f},"
+              f"pre={r['pre_recall']:.3f},fires={r['detector_fires']},"
+              f"events/s={r['events_per_sec']:,.0f}")
+    print(f"# appended drift rows to {out_path}")
+    if not new_rows[-1]["beats_fixed"]:
+        raise SystemExit(
+            "drift smoke REGRESSION: adaptive recovery "
+            f"({new_rows[-1]['recovery_or_censored']}ev) did not beat the "
+            f"fixed-cadence baseline ({new_rows[0]['recovery_or_censored']}ev)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: append drift rows to the smoke artifact")
+    ap.add_argument("--smoke-out", default="BENCH_smoke.json")
+    ap.add_argument("--events", type=int, default=EVENTS)
+    args = ap.parse_args()
+    if args.smoke:
+        append_smoke(args.smoke_out, args.events)
+        return
+    print("name,us_per_call,derived")
+    for row in rows(args.events):
+        print(f"{row['name']},{row['us_per_call']:.2f},{row['derived']}")
+
+
+if __name__ == "__main__":
+    main()

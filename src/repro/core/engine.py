@@ -13,7 +13,10 @@ micro-batches:
     (unlike the host loop's unbounded Python queue, buffer overruns are
     dropped and counted in ``StreamResult.dropped`` — backpressure, not
     silent loss);
-  * forgetting triggers evaluated inside the scan (``lax.cond``);
+  * forgetting triggers evaluated inside the scan (``lax.cond``) — the
+    fixed cadence, or, with ``StreamConfig.drift``, the closed-loop
+    drift detector + adaptive controller (``repro.drift``) whose scalar
+    state rides in the scan carry (no per-micro-batch host sync);
   * recall bits scattered back to stream order on device and returned as
     one ``[steps, slots]`` array.
 
@@ -52,6 +55,8 @@ from repro.core import disgd as disgd_lib
 from repro.core import forgetting as forgetting_lib
 from repro.core import routing, state as state_lib
 from repro.core.evaluator import RecallAccumulator
+from repro.drift import controller as controller_lib
+from repro.drift import detector as detector_lib
 from repro.kernels import ops
 
 __all__ = ["make_worker_fn", "make_pallas_worker_fn", "run_stream_device",
@@ -211,6 +216,10 @@ def _resolve_worker_fn(cfg, mesh=None) -> Callable:
     raise ValueError(f"unknown backend {backend!r}")
 
 
+def _adaptive(cfg) -> bool:
+    return cfg.drift is not None and cfg.drift.mode == "adaptive"
+
+
 def _make_batch_step(cfg, worker_fn):
     grid = cfg.grid
     n_c, g, n_i = grid.n_c, grid.g, grid.n_i
@@ -219,15 +228,19 @@ def _make_batch_step(cfg, worker_fn):
     carry_cap = cfg.carry_slots or mb
     layout = carry_cap + mb
 
+    # Closed-loop drift policy replaces the fixed forgetting cadence when
+    # configured (``StreamConfig.drift``, mode "adaptive").
+    adaptive = _adaptive(cfg)
+    controller = controller_lib.make_controller(cfg.drift) if adaptive else None
     forget = None
-    if cfg.forgetting.policy != "none":
+    if not adaptive and cfg.forgetting.policy != "none":
         forget = jax.vmap(
             partial(forgetting_lib.apply_forgetting, cfg=cfg.forgetting)
         )
     occ_fn = jax.vmap(lambda s: state_lib.occupancy(s.tables))
 
     def live(carry, fresh):
-        states, cu, ci, since, processed, dropped, forgets = carry
+        states, cu, ci, since, processed, dropped, forgets, det, boost = carry
         fu, fi = fresh
         bu = jnp.concatenate([cu, fu])
         bi = jnp.concatenate([ci, fi])
@@ -268,20 +281,36 @@ def _make_batch_step(cfg, worker_fn):
         kept_n = jnp.sum(kept.astype(jnp.int32))
         processed = processed + kept_n
         since = since + kept_n
-        if forget is not None:
+        fired = jnp.zeros((), jnp.int32)
+        if adaptive:
+            det = detector_lib.detector_update(
+                det, hits, evaluated, cfg.drift.detector)
+            states, boost = controller(states, det.fired, boost)
+            forgets = forgets + det.fired.astype(jnp.int32)
+            fired = det.fired.astype(jnp.int32)
+        elif forget is not None:
             trigger = since >= cfg.forgetting.trigger_every
             states = jax.lax.cond(trigger, forget, lambda s: s, states)
-            since = jnp.where(trigger, 0, since)
+            # Carry the remainder instead of resetting to zero: a reset
+            # aliases the cadence onto micro-batch boundaries whenever
+            # ``trigger_every`` is not a multiple of the micro-batch
+            # (triggers fire every ceil(te/mb)*mb events instead of every
+            # te) — with the remainder carried, trigger counts match
+            # floor(processed / trigger_every) exactly for mb <= te.
+            since = jnp.where(trigger, since - cfg.forgetting.trigger_every,
+                              since)
             forgets = forgets + trigger.astype(jnp.int32)
 
-        carry = (states, cu_new, ci_new, since, processed, dropped, forgets)
-        return carry, (bits, load, kept_n)
+        carry = (states, cu_new, ci_new, since, processed, dropped, forgets,
+                 det, boost)
+        return carry, (bits, load, kept_n, fired)
 
     def dead(carry, fresh):
         del fresh
         return carry, (
             jnp.full((layout,), jnp.nan, jnp.float32),
             jnp.zeros((n_c,), jnp.int32),
+            jnp.zeros((), jnp.int32),
             jnp.zeros((), jnp.int32),
         )
 
@@ -296,8 +325,9 @@ def _make_batch_step(cfg, worker_fn):
     return batch_step, carry_cap, cap
 
 
-def init_scan_carry(cfg, states=None, carry=(None, None)):
-    """Initial scan carry; ``states``/``carry`` resume from a checkpoint."""
+def init_scan_carry(cfg, states=None, carry=(None, None), detector=None):
+    """Initial scan carry; ``states``/``carry``/``detector`` resume from a
+    checkpoint (``detector`` is a ``DetectorState``-shaped tuple)."""
     from repro.core import pipeline
 
     if states is None:
@@ -316,8 +346,13 @@ def init_scan_carry(cfg, states=None, carry=(None, None)):
         lost = size - m
         cu = cu.at[:m].set(jnp.asarray(carry_u, jnp.int32)[:m])
         ci = ci.at[:m].set(jnp.asarray(carry_i, jnp.int32)[:m])
+    det = detector_lib.detector_init()
+    if detector is not None:
+        det = detector_lib.DetectorState(
+            *(jnp.asarray(leaf) for leaf in detector))
     zero = jnp.zeros((), jnp.int32)
-    return (states, cu, ci, zero, zero, jnp.asarray(lost, jnp.int32), zero)
+    return (states, cu, ci, zero, zero, jnp.asarray(lost, jnp.int32), zero,
+            det, controller_lib.controller_init())
 
 
 @functools.lru_cache(maxsize=16)
@@ -348,12 +383,15 @@ class PublishEvent(NamedTuple):
     forgets: int
     segment: int          # 0-based index of the segment just finished
     steps_done: int       # scan steps completed so far
+    detector: Any = None  # DetectorState at the boundary (adaptive drift
+                          # policy only) — checkpointable alongside states
 
 
 def run_stream_device(users: np.ndarray, items: np.ndarray, cfg,
                       verbose: bool = False, mesh=None,
                       publish_every: int = 0, on_publish=None,
-                      initial_states=None, initial_carry=(None, None)):
+                      initial_states=None, initial_carry=(None, None),
+                      initial_detector=None):
     """Run the whole prequential stream as a jitted scan on device.
 
     With ``publish_every == 0`` (default) the stream is one scan call.
@@ -394,7 +432,8 @@ def run_stream_device(users: np.ndarray, items: np.ndarray, cfg,
     flat_u[:n] = users
     flat_i[:n] = items
 
-    carry0 = init_scan_carry(cfg, states=initial_states, carry=initial_carry)
+    carry0 = init_scan_carry(cfg, states=initial_states, carry=initial_carry,
+                             detector=initial_detector)
     xs = (jnp.asarray(fu, jnp.int32), jnp.asarray(fi, jnp.int32))
 
     # AOT-compile so the wall clock measures steady-state streaming, not
@@ -435,17 +474,18 @@ def run_stream_device(users: np.ndarray, items: np.ndarray, cfg,
                 forgets=int(carry[6]),
                 segment=s,
                 steps_done=(s + 1) * seg,
+                detector=carry[7] if _adaptive(cfg) else None,
             )
             tp = time.perf_counter()
             on_publish(ev)
             publish_time += time.perf_counter() - tp
-    states, cu, ci, _, processed, dropped, _ = carry
+    states, cu, ci, _, processed, dropped, forgets, det, _ = carry
     jax.block_until_ready(states)
     wall = time.perf_counter() - t0 - publish_time
 
-    bits, loads, kept_n, u_occ, i_occ = (
+    bits, loads, kept_n, fired, u_occ, i_occ = (
         np.concatenate([np.asarray(o[j]) for o in seg_outs])
-        for j in range(5)
+        for j in range(6)
     )
     processed = int(processed)
     dropped = int(dropped) + int(np.sum(np.asarray(cu) >= 0))
@@ -456,6 +496,8 @@ def run_stream_device(users: np.ndarray, items: np.ndarray, cfg,
     for s in active:
         acc.add_raw(bits[s])
     load_history = [loads[s] for s in active]
+    drift_flags = (np.asarray([fired[s] for s in active], np.int32)
+                   if _adaptive(cfg) else None)
 
     cum = np.cumsum(kept_n)
     user_occ, item_occ = [], []
@@ -475,4 +517,8 @@ def run_stream_device(users: np.ndarray, items: np.ndarray, cfg,
         wall_seconds=wall,
         load_history=load_history,
         final_states=states,
+        forgets=int(forgets),
+        drift_flags=drift_flags,
+        final_detector=(jax.tree.map(np.asarray, det) if _adaptive(cfg)
+                        else None),
     )

@@ -1,20 +1,29 @@
-"""Forgetting techniques (paper Section 5.2): LRU and LFU state eviction.
+"""Forgetting techniques (paper Section 5.2): state eviction and decay.
 
-The paper bounds unbounded stream state with cache-management policies:
+``ForgettingConfig.policy`` selects one of four policies:
 
-  * **LFU** — triggered every ``c`` processed records; evicts users/items
-    whose request *frequency* is below a controller threshold.
-  * **LRU** — triggered every ``t`` time units; evicts users/items whose
-    *last-touch timestamp* is older than a controller threshold.
+  * **``"lfu"``** — triggered every ``c`` processed records; evicts
+    users/items whose request *frequency* is below a controller threshold.
+  * **``"lru"``** — triggered every ``t`` time units; evicts users/items
+    whose *last-touch timestamp* is older than a controller threshold.
+  * **``"gradual"``** — the paper's stated future-work direction: no hard
+    eviction; every trigger decays all learned state toward the prior by
+    ``gradual_gamma`` (DISGD factor vectors shrink toward 0, DICS
+    co-occurrence counts discount), so stale taste fades smoothly under
+    concept drift while ids and history survive.
+  * **``"none"``** — identity (unbounded state, the paper's baseline).
 
-Both are pure functions over the fixed-capacity tables: an evicted entry's
-id becomes ``-1``, its statistics reset, and — for DICS — the co-occurrence
-rows/columns of evicted items are zeroed (the iteration cost the paper
-calls out as the DICS throughput limiter).
+The eviction policies are pure functions over the fixed-capacity tables:
+an evicted entry's id becomes ``-1``, its statistics reset, and — for
+DICS — the co-occurrence rows/columns of evicted items are zeroed (the
+iteration cost the paper calls out as the DICS throughput limiter).
 
 The event clock doubles as the paper's processing-time: in a stream with
 monotone arrival, "every t seconds" and "every c records" coincide up to
-rate, so both triggers are expressed in events.
+rate, so both triggers are expressed in events. The trigger itself is the
+caller's: the fixed ``trigger_every`` cadence lives in the pipeline/
+engine, and the closed-loop alternative (fire on detected drift) in
+``repro.drift.controller``.
 
 Beyond-paper variant: ``evict_to_budget`` keeps at most ``budget`` live
 entries by evicting the worst under either policy — a bounded-memory
@@ -35,6 +44,11 @@ __all__ = ["ForgettingConfig", "apply_forgetting", "evict_to_budget"]
 
 class ForgettingConfig(NamedTuple):
     policy: str = "none"        # "none" | "lru" | "lfu" | "gradual"
+    # Trigger cadence in processed events. Granularity is one micro-batch
+    # (at most one trigger per batch); the accumulator carries its
+    # remainder across triggers, so for micro_batch <= trigger_every the
+    # count is exactly floor(processed / trigger_every) even when the
+    # cadence is not a multiple of the micro-batch.
     trigger_every: int = 4096   # c records (LFU) / t clock ticks (LRU)
     # Controller parameters:
     lfu_min_freq: int = 2       # evict entries seen fewer than this
@@ -144,13 +158,23 @@ def evict_to_budget(state, user_budget: int, item_budget: int, policy: str = "lr
         raise ValueError(policy)
 
     def mask(score, ids, budget):
-        score = jnp.where(ids >= 0, score, jnp.iinfo(jnp.int32).min)
+        live = ids >= 0
+        if budget <= 0:
+            return live  # zero budget: evict every live entry
+        score = jnp.where(live, score, jnp.iinfo(jnp.int32).min)
         # Threshold = budget-th largest score among live entries.
         kth = jax.lax.top_k(score, min(budget, score.shape[0]))[0][-1]
-        keep = (score >= kth) & (ids >= 0)
-        # Tie-break overflow: keep at most budget via cumsum.
-        overflow = jnp.cumsum(keep.astype(jnp.int32)) > budget
-        return (ids >= 0) & (~keep | overflow)
+        # Anything strictly above the threshold always survives; only
+        # entries *tied at* the threshold compete (in slot order) for the
+        # leftover budget. (A slot-order cumsum over ALL kept entries
+        # would evict an above-threshold entry in a late slot while a
+        # tied entry in an early slot survived.)
+        above = live & (score > kth)
+        tied = live & (score == kth)
+        tied_budget = budget - jnp.sum(above.astype(jnp.int32))
+        tie_rank = jnp.cumsum(tied.astype(jnp.int32))  # 1-based among ties
+        keep = above | (tied & (tie_rank <= tied_budget))
+        return live & ~keep
 
     return _apply_masks(state, mask(u_score, t.user_ids, user_budget),
                         mask(i_score, t.item_ids, item_budget))

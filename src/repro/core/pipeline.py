@@ -55,6 +55,10 @@ class StreamConfig:
     record_every: int = 4                    # occupancy snapshot cadence
     backend: str = "host"                    # "host"|"scan"|"pallas"|"shard_map"
     carry_slots: int = 0                     # overflow re-queue size (0 = micro_batch)
+    # Opt-in closed-loop concept-drift policy (repro.drift.DriftPolicy).
+    # When its mode is "adaptive", the on-device detector + controller
+    # replace the fixed `forgetting.trigger_every` cadence entirely.
+    drift: Any = None
 
     def resolved_hyper(self):
         h = self.hyper
@@ -82,6 +86,14 @@ class StreamResult:
     # to the serving plane (`repro.serve`): publish via SnapshotStore or
     # query directly with `serve.plane.grid_topn`.
     final_states: Any = None
+    # Forgetting passes fired (fixed cadence or adaptive controller).
+    forgets: int = 0
+    # Per-micro-batch detector flags (i32[steps]) when the adaptive drift
+    # policy is active, else None.
+    drift_flags: Any = None
+    # Final DetectorState (host arrays) under the adaptive policy — pass
+    # to save_stream_checkpoint(detector=...) for closed-loop resume.
+    final_detector: Any = None
 
     @property
     def throughput(self) -> float:
@@ -134,7 +146,8 @@ def init_states(cfg: StreamConfig):
 def run_stream(users: np.ndarray, items: np.ndarray, cfg: StreamConfig,
                verbose: bool = False, publish_every: int = 0,
                on_publish=None, initial_states=None,
-               initial_carry=(None, None)) -> StreamResult:
+               initial_carry=(None, None),
+               initial_detector=None) -> StreamResult:
     """Run the full prequential stream; returns curves + paper metrics.
 
     Thin dispatcher: ``cfg.backend`` selects the host reference loop below
@@ -158,7 +171,8 @@ def run_stream(users: np.ndarray, items: np.ndarray, cfg: StreamConfig,
         return engine.run_stream_device(
             users, items, cfg, verbose=verbose,
             publish_every=publish_every, on_publish=on_publish,
-            initial_states=initial_states, initial_carry=initial_carry)
+            initial_states=initial_states, initial_carry=initial_carry,
+            initial_detector=initial_detector)
 
     assert users.shape == items.shape
     n = users.shape[0]
@@ -167,14 +181,30 @@ def run_stream(users: np.ndarray, items: np.ndarray, cfg: StreamConfig,
     step = make_worker_step(cfg)
     states = initial_states if initial_states is not None else init_states(cfg)
 
+    # Closed-loop drift policy replaces the fixed cadence when configured.
+    adaptive = cfg.drift is not None and cfg.drift.mode == "adaptive"
     forget = None
-    if cfg.forgetting.policy != "none":
+    det = det_update = controller = boost = None
+    if adaptive:
+        from repro.drift import controller as controller_lib
+        from repro.drift import detector as detector_lib
+
+        det_update = jax.jit(partial(detector_lib.detector_update,
+                                     cfg=cfg.drift.detector))
+        controller = jax.jit(controller_lib.make_controller(cfg.drift))
+        det = (detector_lib.DetectorState(
+                   *(jnp.asarray(l) for l in initial_detector))
+               if initial_detector is not None
+               else detector_lib.detector_init())
+        boost = controller_lib.controller_init()
+    elif cfg.forgetting.policy != "none":
         forget = jax.jit(
             jax.vmap(partial(forgetting_lib.apply_forgetting, cfg=cfg.forgetting))
         )
 
     acc = RecallAccumulator()
     user_occ, item_occ, loads = [], [], []
+    drift_flags = []
     dropped = 0
     processed = 0
     carry_u, carry_i = (np.asarray(c, np.int64) if c is not None
@@ -188,7 +218,8 @@ def run_stream(users: np.ndarray, items: np.ndarray, cfg: StreamConfig,
 
         return PublishEvent(states=states, events_processed=processed,
                             dropped=dropped, forgets=forgets,
-                            segment=segment, steps_done=steps)
+                            segment=segment, steps_done=steps,
+                            detector=det if adaptive else None)
 
     occ_fn = jax.jit(jax.vmap(lambda s: state_lib.occupancy(s.tables)))
 
@@ -200,6 +231,10 @@ def run_stream(users: np.ndarray, items: np.ndarray, cfg: StreamConfig,
     jax.block_until_ready(occ_fn(states))
     if forget is not None:
         jax.block_until_ready(forget(states))
+    if adaptive:
+        dummy_b = jnp.zeros((grid.n_c, cap), bool)
+        jax.block_until_ready(det_update(det, dummy_b, dummy_b))
+        jax.block_until_ready(controller(states, det.fired, boost)[0])
 
     t0 = time.perf_counter()
     publish_time = 0.0
@@ -246,9 +281,18 @@ def run_stream(users: np.ndarray, items: np.ndarray, cfg: StreamConfig,
         loads.append(load)
 
         events_since_trigger += int(kept.sum())
-        if forget is not None and events_since_trigger >= cfg.forgetting.trigger_every:
+        if adaptive:
+            det = det_update(det, hits, evaluated)
+            states, boost = controller(states, det.fired, boost)
+            fired = bool(det.fired)
+            drift_flags.append(fired)
+            forgets += int(fired)
+        elif (forget is not None
+                and events_since_trigger >= cfg.forgetting.trigger_every):
             states = forget(states)
-            events_since_trigger = 0
+            # Carry the remainder (see engine._make_batch_step): resetting
+            # to zero would alias the cadence onto micro-batch boundaries.
+            events_since_trigger -= cfg.forgetting.trigger_every
             forgets += 1
 
         if publish_every and on_publish is not None and (b + 1) % publish_every == 0:
@@ -301,6 +345,9 @@ def run_stream(users: np.ndarray, items: np.ndarray, cfg: StreamConfig,
         wall_seconds=wall,
         load_history=loads,
         final_states=states,
+        forgets=forgets,
+        drift_flags=(np.asarray(drift_flags, np.int32) if adaptive else None),
+        final_detector=(jax.tree.map(np.asarray, det) if adaptive else None),
     )
 
 
@@ -315,7 +362,8 @@ LOGICAL_FORMAT = "sr-logical-v1"
 
 
 def save_stream_checkpoint(directory: str, events_processed: int, states,
-                           carry=(None, None), grid=None, algorithm=None):
+                           carry=(None, None), grid=None, algorithm=None,
+                           detector=None):
     """Persist worker states (+ the re-queue carry) mid-stream.
 
     With ``grid`` (the ``GridSpec`` the states are shaped for), the
@@ -324,6 +372,11 @@ def save_stream_checkpoint(directory: str, events_processed: int, states,
     ANY ``(n_i, g)`` — ``restore_stream_checkpoint`` rebuilds worker
     tables for the configured grid. Without ``grid``, the legacy
     fixed-shape format is written (restorable only at the same grid).
+
+    ``detector`` (a ``repro.drift.DetectorState``, e.g.
+    ``StreamResult.final_detector`` or ``PublishEvent.detector``) rides
+    along in either format — the detector's scalars are grid-agnostic —
+    so a closed-loop run resumes without re-warming drift detection.
     """
     from repro.checkpoint import save_checkpoint
 
@@ -334,6 +387,8 @@ def save_stream_checkpoint(directory: str, events_processed: int, states,
         "carry_i": np.asarray(carry_i if carry_i is not None else
                               np.empty(0, np.int64)),
     }
+    if detector is not None:
+        tree["detector"] = jax.tree.map(np.asarray, detector)
     if grid is None:
         tree["states"] = jax.tree.map(np.asarray, states)
     else:
@@ -360,12 +415,18 @@ def restore_stream_checkpoint(directory: str, cfg: StreamConfig,
     ``cfg`` configures, regridding on the fly; legacy fixed-shape
     checkpoints must match the configured grid or raise
     ``CheckpointShapeError``.
+
+    Returns ``(events_processed, states, carry, detector)`` — ``detector``
+    is the saved ``DetectorState`` (as a tuple of host arrays, pass it to
+    ``run_stream(initial_detector=...)``) or ``None`` for checkpoints
+    written without one.
     """
     from repro.checkpoint import restore_checkpoint
     from repro.core import regrid as regrid_lib
 
     events_processed, tree = restore_checkpoint(directory, step)
     carry = (tree["carry_u"], tree["carry_i"])
+    detector = tree.get("detector")
     hyper = cfg.resolved_hyper()
 
     fmt = tree.get("format")
@@ -383,7 +444,7 @@ def restore_stream_checkpoint(directory: str, cfg: StreamConfig,
         states = regrid_lib.build_states(
             logical, src=src, dst=cfg.grid,
             u_cap=hyper.u_cap, i_cap=hyper.i_cap)
-        return events_processed, states, carry
+        return events_processed, states, carry, detector
 
     template = init_states(cfg)
     flat_t, treedef = jax.tree.flatten(template)
@@ -403,4 +464,4 @@ def restore_stream_checkpoint(directory: str, cfg: StreamConfig,
         treedef,
         [jnp.asarray(s, t.dtype) for s, t in zip(flat_s, flat_t)],
     )
-    return events_processed, states, carry
+    return events_processed, states, carry, detector

@@ -13,7 +13,13 @@ generated to match Table 1's post-filtering statistics *shape-wise*:
     phenomenon the paper's forgetting techniques target.
 
 Streams are deduplicated per (user, item) pair, matching the filtered
-explicit-feedback datasets.
+explicit-feedback datasets. Dedupe scope matters under drift: a global
+first-occurrence dedupe would silently delete post-drift re-ratings of
+pre-drift pairs, thinning the later segments and muting the very drift
+signal ``drift_points`` exists to create. The ``dedupe`` knob therefore
+defaults to *per-drift-segment* dedupe whenever ``drift_points`` is set
+(and global otherwise); pass ``"global"``/``"segment"`` to force a scope,
+or ``False`` to keep duplicates.
 """
 
 from __future__ import annotations
@@ -22,7 +28,8 @@ import dataclasses
 
 import numpy as np
 
-__all__ = ["StreamProfile", "MOVIELENS_25M", "NETFLIX", "synth_stream", "scaled"]
+__all__ = ["StreamProfile", "MOVIELENS_25M", "NETFLIX", "synth_stream",
+           "scaled", "segment_dedupe_mask"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,6 +65,24 @@ def scaled(profile: StreamProfile, factor: float, **overrides) -> StreamProfile:
     return dataclasses.replace(profile, **fields)
 
 
+def segment_dedupe_mask(users: np.ndarray, items: np.ndarray, n_items: int,
+                        segments) -> np.ndarray:
+    """Keep-mask of first (u, i) occurrences within each index segment.
+
+    Explicit feedback is unique *per concept*: a post-drift re-rating of
+    a pre-drift pair is fresh evidence, not a duplicate, so dedupe scopes
+    are the drift segments (one full-stream segment = global dedupe).
+    Shared by ``synth_stream`` and the drift scenario generator
+    (``repro.drift.scenarios``).
+    """
+    pair = users.astype(np.int64) * n_items + items
+    keep = np.zeros(users.shape[0], dtype=bool)
+    for seg in segments:
+        _, first = np.unique(pair[seg], return_index=True)
+        keep[seg[first]] = True
+    return keep
+
+
 def _zipf_weights(n: int, a: float, rng: np.random.Generator) -> np.ndarray:
     ranks = np.arange(1, n + 1, dtype=np.float64)
     w = ranks ** (-a)
@@ -65,13 +90,18 @@ def _zipf_weights(n: int, a: float, rng: np.random.Generator) -> np.ndarray:
     return w / w.sum()
 
 
-def synth_stream(profile: StreamProfile, seed: int = 0, dedupe: bool = True):
+def synth_stream(profile: StreamProfile, seed: int = 0,
+                 dedupe: bool | str = True):
     """Generate a (users, items, timestamps) stream matching ``profile``.
 
     Returns int64 arrays sorted by timestamp. User taste is modeled by a
     small latent mixture so collaborative structure exists for the
     recommenders to learn (pure independence would cap recall at the
     popularity baseline).
+
+    ``dedupe``: ``True`` (default) dedupes (u, i) pairs per drift segment
+    when ``profile.drift_points`` is set and globally otherwise;
+    ``"global"``/``"segment"`` force a scope; ``False`` keeps duplicates.
     """
     rng = np.random.default_rng(seed)
     n = profile.n_ratings
@@ -103,11 +133,15 @@ def synth_stream(profile: StreamProfile, seed: int = 0, dedupe: bool = True):
                 )
 
     if dedupe:
-        # Keep first occurrence of each (u, i): explicit feedback is unique.
-        pair = users.astype(np.int64) * profile.n_items + items
-        _, first = np.unique(pair, return_index=True)
-        keep = np.zeros(n, dtype=bool)
-        keep[first] = True
+        if dedupe is True:
+            mode = "segment" if drift_at else "global"
+        elif dedupe in ("global", "segment"):
+            mode = dedupe
+        else:
+            raise ValueError(f"dedupe must be bool/'global'/'segment', "
+                             f"got {dedupe!r}")
+        scopes = segments if mode == "segment" else [np.arange(n)]
+        keep = segment_dedupe_mask(users, items, profile.n_items, scopes)
         users, items = users[keep], items[keep]
 
     ts = np.arange(users.shape[0], dtype=np.int64)

@@ -1,0 +1,27 @@
+"""Closed-loop concept-drift runtime for the streaming recommender.
+
+Three pieces, wired through the device-resident engine:
+
+  * ``scenarios`` — named, seeded drift stream shapes (abrupt, gradual,
+    incremental, recurring, cluster-migration, cold-start);
+  * ``detector`` — on-device two-window / Page–Hinkley-style recall-drop
+    detection, carried inside the engine's scan (no host sync);
+  * ``controller`` — maps detector firings to forgetting actions
+    (eviction pass + temporary gradual-decay boost), replacing the fixed
+    ``trigger_every`` cadence when ``StreamConfig.drift`` opts in.
+"""
+
+from repro.drift.controller import DriftPolicy, controller_init, make_controller
+from repro.drift.detector import (DetectorConfig, DetectorState,
+                                  detector_init, detector_update)
+from repro.drift.metrics import DriftReport, recovery_report
+from repro.drift.scenarios import (DEFAULT_PROFILE, SCENARIOS, DriftStream,
+                                   list_scenarios, make_scenario)
+
+__all__ = [
+    "DriftPolicy", "make_controller", "controller_init",
+    "DetectorConfig", "DetectorState", "detector_init", "detector_update",
+    "DriftReport", "recovery_report",
+    "DriftStream", "SCENARIOS", "make_scenario", "list_scenarios",
+    "DEFAULT_PROFILE",
+]

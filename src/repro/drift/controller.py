@@ -1,0 +1,98 @@
+"""Adaptive forgetting controller: detector flags -> forgetting actions.
+
+Closes the loop the paper leaves open: instead of a fixed ``every c
+records`` forgetting cadence (``ForgettingConfig.trigger_every``), the
+controller reacts to the drift detector (``repro.drift.detector``):
+
+  * on a detector firing, run one **eviction pass** immediately
+    (``policy.eviction`` — by default LRU, clearing entries whose taste
+    predates the drift), and
+  * enter a **boost window**: for the next ``boost_batches`` micro-batches
+    apply gradual decay with ``boost_gamma`` (temporarily *lower* than any
+    steady-state ``gradual_gamma``), shrinking stale learned state so the
+    post-drift signal dominates sooner; then relax to doing nothing.
+
+Both actions are ``lax.cond``-gated pure functions over the worker-state
+pytree, so the controller runs inside the engine's jitted scan with no
+host involvement; its only carry is one ``i32`` (batches of boost left).
+
+The policy is opt-in via ``StreamConfig.drift``; when its ``mode`` is
+``"adaptive"`` it *replaces* the fixed cadence (``cfg.forgetting`` is not
+consulted — the controller owns forgetting entirely).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import forgetting as forgetting_lib
+from repro.drift.detector import DetectorConfig
+
+__all__ = ["DriftPolicy", "make_controller", "controller_init"]
+
+
+class DriftPolicy(NamedTuple):
+    """Opt-in closed-loop drift policy (``StreamConfig.drift``).
+
+    ``mode``:
+      * ``"none"`` — drift runtime off (same as ``StreamConfig.drift is
+        None``): the fixed-cadence ``cfg.forgetting`` trigger applies.
+      * ``"adaptive"`` — detector + controller replace the fixed cadence.
+    """
+
+    mode: str = "adaptive"
+    detector: DetectorConfig = DetectorConfig()
+    # Eviction pass fired once per detection; ``trigger_every`` is unused
+    # (the detector IS the trigger). The default is deliberately more
+    # aggressive than any sane *cadence* policy: evict everything not
+    # touched in the last ~64 per-worker events — a hard refocus on the
+    # post-drift concept. Affordable exactly because it only fires on a
+    # detected drift; on a fixed cadence the same action would shred
+    # steady-state recall (which is the point of closing the loop).
+    eviction: forgetting_lib.ForgettingConfig = forgetting_lib.ForgettingConfig(
+        policy="lru", lru_max_age=64)
+    # Optional post-detection boost window: gradual decay applied every
+    # micro-batch for ``boost_batches`` batches, then relaxed. Off by
+    # default — decay barely moves DICS (uniform co/cnt decay is nearly
+    # cosine-invariant) and the eviction pass carries the recovery win.
+    boost_batches: int = 0
+    boost_gamma: float = 0.90
+
+
+def controller_init() -> jnp.ndarray:
+    """Initial controller carry: boost batches remaining."""
+    return jnp.int32(0)
+
+
+def make_controller(policy: DriftPolicy):
+    """Build the jittable per-micro-batch controller step.
+
+    Returns ``step(states, fired, boost) -> (states, boost)`` where
+    ``states`` is the stacked ``[n_c, ...]`` worker-state pytree,
+    ``fired`` the detector flag, and ``boost`` the controller carry.
+    """
+    evict = None
+    if policy.eviction.policy != "none":
+        evict = jax.vmap(
+            partial(forgetting_lib.apply_forgetting, cfg=policy.eviction))
+    decay = None
+    if policy.boost_batches > 0:
+        boost_cfg = forgetting_lib.ForgettingConfig(
+            policy="gradual", gradual_gamma=policy.boost_gamma)
+        decay = jax.vmap(
+            partial(forgetting_lib.apply_forgetting, cfg=boost_cfg))
+
+    def step(states, fired, boost):
+        if evict is not None:
+            states = jax.lax.cond(fired, evict, lambda s: s, states)
+        boost = jnp.where(fired, jnp.int32(policy.boost_batches), boost)
+        if decay is not None:
+            states = jax.lax.cond(boost > 0, decay, lambda s: s, states)
+        boost = jnp.maximum(boost - 1, 0)
+        return states, boost
+
+    return step

@@ -1,0 +1,174 @@
+"""On-device concept-drift detection from the prequential recall signal.
+
+The paper names *handling concept drift* as one of the three requirements
+of a streaming recommender but only reacts to it open-loop (fixed-cadence
+forgetting, Section 5.2). This module closes the loop: a detector watches
+the stream's own prequential Recall@N bits — the one supervision signal a
+deployed recommender gets for free — and raises a flag when the signal
+degrades in a way consistent with drift.
+
+Two statistics are fused (either can fire):
+
+  * **Two-window recall drop** — exponentially-weighted fast and slow
+    recall means (bias-corrected, so they are unbiased from batch one);
+    a flag when the fast window falls more than ``drop_frac`` below the
+    *tracked peak* of the fast mean. Peak-relative (rather than
+    slow-relative) because prequential recall *rises* through warm-up —
+    a lagging slow mean sits below the current level and would mask the
+    post-drift collapse entirely.
+  * **Page–Hinkley-style CUSUM** — a one-sided cumulative sum of how far
+    each micro-batch's recall runs below the slow mean (minus a drift
+    allowance ``ph_delta``); a flag when the accumulated deficit exceeds
+    ``ph_lambda``. Catches slow/gradual degradation the peak ratio
+    misses.
+
+Everything is a handful of ``f32``/``i32`` scalars updated from the
+micro-batch's *integer* hit/evaluated counts, so the state rides in the
+engine's scan carry and never syncs to the host (acceptance: no
+per-micro-batch host round-trip). Because the update consumes exact
+integer counts and does identical scalar arithmetic, the host and scan
+backends produce bit-identical flag sequences whenever their recall bits
+agree (which the engine's parity tests already pin).
+
+On a firing the detector *re-baselines*: the slow mean is snapped down to
+the fast mean and the CUSUM resets, so one drift produces one flag (plus
+a ``cooldown``), not a flag per micro-batch until recovery.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+__all__ = ["DetectorConfig", "DetectorState", "detector_init",
+           "detector_update"]
+
+
+class DetectorConfig(NamedTuple):
+    """Static detector knobs (hashable; part of ``StreamConfig.drift``)."""
+
+    alpha_fast: float = 0.30   # fast EW window (~1/alpha micro-batches)
+    alpha_slow: float = 0.05   # slow EW window
+    drop_frac: float = 0.25    # fire when fast < (1 - drop_frac) * peak
+    min_slow: float = 0.02     # slow mean below this = no signal yet
+    warmup: int = 2048         # evaluated events before flags may fire
+    ph_delta: float = 0.01     # CUSUM drift allowance per micro-batch
+    ph_lambda: float = 0.30    # CUSUM firing threshold
+    cooldown: int = 8          # micro-batches suppressed after a firing
+
+
+class DetectorState(NamedTuple):
+    """Scan-carry detector state (all scalars, device-resident).
+
+    ``fast``/``slow`` are *uncorrected* EW accumulators together with the
+    bias corrections ``fast_c``/``slow_c`` (the running ``1 - (1-a)^t``
+    denominators, Adam-style), so the means are unbiased from the first
+    batch instead of needing ~1/alpha batches of warm-up.
+    """
+
+    fast: jnp.ndarray    # f32 fast EW recall accumulator
+    slow: jnp.ndarray    # f32 slow EW recall accumulator
+    fast_c: jnp.ndarray  # f32 bias correction for ``fast``
+    slow_c: jnp.ndarray  # f32 bias correction for ``slow``
+    peak: jnp.ndarray    # f32 tracked peak of the fast mean
+    seen: jnp.ndarray    # i32 evaluated events so far
+    ph: jnp.ndarray      # f32 one-sided CUSUM deficit
+    cool: jnp.ndarray    # i32 micro-batches of cooldown remaining
+    fired: jnp.ndarray   # bool flag emitted by the last update
+    fires: jnp.ndarray   # i32 total firings
+
+    @property
+    def fast_mean(self):
+        """Bias-corrected fast-window recall mean."""
+        return self.fast / jnp.maximum(self.fast_c, 1e-9)
+
+    @property
+    def slow_mean(self):
+        """Bias-corrected slow-window recall mean."""
+        return self.slow / jnp.maximum(self.slow_c, 1e-9)
+
+
+def detector_init() -> DetectorState:
+    return DetectorState(
+        fast=jnp.float32(0.0),
+        slow=jnp.float32(0.0),
+        fast_c=jnp.float32(0.0),
+        slow_c=jnp.float32(0.0),
+        peak=jnp.float32(0.0),
+        seen=jnp.int32(0),
+        ph=jnp.float32(0.0),
+        cool=jnp.int32(0),
+        fired=jnp.asarray(False),
+        fires=jnp.int32(0),
+    )
+
+
+def detector_update(state: DetectorState, hits, evaluated,
+                    cfg: DetectorConfig) -> DetectorState:
+    """One micro-batch of detector time; pure jnp, scan-safe.
+
+    Args:
+      state: carry state.
+      hits: bool[...] recall bits for this micro-batch's bucket slots.
+      evaluated: bool[...] validity mask (same shape as ``hits``).
+      cfg: static config.
+
+    Returns the updated state; ``state.fired`` is the drift flag for this
+    micro-batch. Batches with zero evaluated events leave the means and
+    the CUSUM untouched (drain steps must not look like recall collapse).
+    """
+    n_eval = jnp.sum(evaluated.astype(jnp.int32))
+    n_hits = jnp.sum((hits & evaluated).astype(jnp.int32))
+    has = n_eval > 0
+    hasf = has.astype(jnp.float32)
+    r = n_hits.astype(jnp.float32) / jnp.maximum(n_eval, 1).astype(jnp.float32)
+
+    fast = jnp.where(has, (1 - cfg.alpha_fast) * state.fast
+                     + cfg.alpha_fast * r, state.fast)
+    slow = jnp.where(has, (1 - cfg.alpha_slow) * state.slow
+                     + cfg.alpha_slow * r, state.slow)
+    fast_c = state.fast_c + hasf * cfg.alpha_fast * (1 - state.fast_c)
+    slow_c = state.slow_c + hasf * cfg.alpha_slow * (1 - state.slow_c)
+    fast_hat = fast / jnp.maximum(fast_c, 1e-9)
+    slow_hat = slow / jnp.maximum(slow_c, 1e-9)
+    seen = state.seen + n_eval
+    ph = jnp.where(
+        has,
+        jnp.maximum(0.0, state.ph + (slow_hat - r - cfg.ph_delta)),
+        state.ph,
+    )
+
+    armed = ((seen >= cfg.warmup) & (state.cool <= 0)
+             & (slow_hat > cfg.min_slow))
+    window_drop = fast_hat < (1.0 - cfg.drop_frac) * state.peak
+    cusum = ph > cfg.ph_lambda
+    fired = armed & has & (window_drop | cusum)
+
+    # Re-baseline on firing AND throughout the cooldown window: the slow
+    # mean, peak and CUSUM chase the (still falling) fast mean, so one
+    # drift produces one flag — when the cooldown expires the reference
+    # level is the post-drift trough, not the pre-drift peak. A drift
+    # that keeps deepening *after* the window re-arms and fires again,
+    # which is the desired repeated-intervention behavior for long
+    # gradual drifts. The peak only tracks once warm: prequential recall
+    # starts with a cold-start transient (near-empty tables make
+    # trivially easy top-N hits) that would otherwise seed a bogus
+    # reference level.
+    warm = seen >= cfg.warmup
+    cooling = state.cool > 0
+    slow = jnp.where(fired | cooling, fast_hat * slow_c, slow)
+    peak = jnp.where(
+        fired, fast_hat,
+        jnp.where(cooling, jnp.minimum(state.peak, fast_hat),
+                  jnp.where(warm, jnp.maximum(state.peak, fast_hat),
+                            state.peak)))
+    ph = jnp.where(fired | cooling, 0.0, ph)
+    cool = jnp.where(fired, jnp.int32(cfg.cooldown),
+                     jnp.maximum(state.cool - has.astype(jnp.int32), 0))
+
+    return DetectorState(
+        fast=fast, slow=slow, fast_c=fast_c, slow_c=slow_c, peak=peak,
+        seen=seen, ph=ph, cool=cool, fired=fired,
+        fires=state.fires + fired.astype(jnp.int32),
+    )

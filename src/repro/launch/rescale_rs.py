@@ -118,8 +118,8 @@ def main(argv=None):
     cfg_b = dataclasses.replace(cfg_a, grid=args.to_grid)
     step = latest_step(ckpt_dir)
     t0 = time.perf_counter()
-    events_done, states, carry = restore_stream_checkpoint(ckpt_dir, cfg_b,
-                                                           step)
+    events_done, states, carry, _ = restore_stream_checkpoint(ckpt_dir, cfg_b,
+                                                              step)
     restore_s = time.perf_counter() - t0
     print(f"[rescale_rs] restored step {step} at {args.to_grid.shape} "
           f"({cfg_b.grid.n_c} workers) in {restore_s * 1e3:.1f}ms")

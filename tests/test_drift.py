@@ -1,0 +1,301 @@
+"""Closed-loop concept-drift runtime: scenarios, detector, controller.
+
+Pins the ISSUE 4 acceptance criteria: every scenario is bit-reproducible
+from its seed; the detector/controller run inside the jitted scan and
+produce identical flags on the host and scan backends; the scan backend
+stays recall-parity with host on drift scenarios; and on the abrupt
+smoke scenario the adaptive controller's recovery beats the fixed
+cadence.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import state as state_lib
+from repro.core.dics import DicsHyper
+from repro.core.disgd import DisgdHyper
+from repro.core.forgetting import ForgettingConfig
+from repro.core.pipeline import (StreamConfig, restore_stream_checkpoint,
+                                 run_stream, save_stream_checkpoint)
+from repro.core.routing import GridSpec
+from repro.data.stream import MOVIELENS_25M, scaled, synth_stream
+from repro.drift import (DetectorConfig, DriftPolicy, detector_init,
+                         detector_update, list_scenarios, make_controller,
+                         make_scenario, recovery_report)
+
+# ---------------------------------------------------------------------------
+# Scenario library
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", list_scenarios())
+def test_scenario_bit_reproducible_from_seed(name):
+    a = make_scenario(name, events=4096, seed=7)
+    b = make_scenario(name, events=4096, seed=7)
+    np.testing.assert_array_equal(a.users, b.users)
+    np.testing.assert_array_equal(a.items, b.items)
+    np.testing.assert_array_equal(a.ts, b.ts)
+    assert a.drift_events == b.drift_events
+    # A different seed produces a different stream.
+    c = make_scenario(name, events=4096, seed=8)
+    assert not (np.array_equal(a.users, c.users)
+                and np.array_equal(a.items, c.items))
+
+
+@pytest.mark.parametrize("name", list_scenarios())
+def test_scenario_dedupe_is_per_drift_segment(name):
+    sc = make_scenario(name, events=4096, seed=0)
+    bounds = [0, *sc.drift_events, sc.n]
+    for lo, hi in zip(bounds[:-1], bounds[1:]):
+        pairs = sc.users[lo:hi] * sc.n_items + sc.items[lo:hi]
+        assert np.unique(pairs).size == pairs.size, (name, lo, hi)
+    assert np.all(np.diff(sc.ts) > 0)
+    assert all(0 < d < sc.n for d in sc.drift_events)
+
+
+def test_abrupt_changes_the_item_distribution():
+    sc = make_scenario("abrupt", events=8192, seed=0)
+    d = sc.drift_events[0]
+    pre = np.bincount(sc.items[:d], minlength=sc.n_items) / d
+    post = np.bincount(sc.items[d:], minlength=sc.n_items) / (sc.n - d)
+    # Total-variation distance between pre/post popularity is substantial.
+    assert 0.5 * np.abs(pre - post).sum() > 0.3
+
+
+def test_cold_start_floods_unseen_items():
+    sc = make_scenario("cold-start", events=8192, seed=0)
+    d = sc.drift_events[0]
+    pre_items = set(sc.items[:d].tolist())
+    post = sc.items[d:]
+    flood = [i for i in post if i not in pre_items]
+    # A substantial share of post-drift traffic goes to never-seen items.
+    assert len(flood) / post.size > 0.2
+
+
+def test_recurring_revisits_the_first_concept():
+    sc = make_scenario("recurring", events=8192, seed=0, periods=4)
+    assert len(sc.drift_events) == 3
+    d1, d2, d3 = sc.drift_events
+    seg = lambda lo, hi: np.bincount(sc.items[lo:hi], minlength=sc.n_items)
+    a0, b0, a1 = seg(0, d1), seg(d1, d2), seg(d2, d3)
+    tv = lambda p, q: 0.5 * np.abs(p / p.sum() - q / q.sum()).sum()
+    # Segment 3 re-runs concept A: closer to segment 1 than to segment 2.
+    assert tv(a0, a1) < tv(a0, b0)
+
+
+# ---------------------------------------------------------------------------
+# synth_stream dedupe x drift (the satellite bugfix)
+# ---------------------------------------------------------------------------
+
+
+def test_synth_stream_segment_dedupe_counts():
+    """Per-segment dedupe keeps exactly the per-segment unique pairs;
+    global dedupe (the old behavior) thins the post-drift segment."""
+    prof = dataclasses.replace(scaled(MOVIELENS_25M, 0.003),
+                               drift_points=(0.5,))
+    u_raw, i_raw, _ = synth_stream(prof, seed=0, dedupe=False)
+    n = u_raw.size
+    cut = n // 2
+    pair = u_raw * prof.n_items + i_raw
+    uniq = lambda p: np.unique(p).size
+    seg_expected = uniq(pair[:cut]) + uniq(pair[cut:])
+
+    u_seg, i_seg, _ = synth_stream(prof, seed=0)  # default: per-segment
+    assert u_seg.size == seg_expected
+
+    u_glob, i_glob, _ = synth_stream(prof, seed=0, dedupe="global")
+    assert u_glob.size == uniq(pair)
+    # The bug being fixed: global dedupe silently deletes post-drift
+    # re-ratings of pre-drift pairs.
+    assert u_glob.size < seg_expected
+
+    with pytest.raises(ValueError):
+        synth_stream(prof, seed=0, dedupe="bogus")
+
+
+# ---------------------------------------------------------------------------
+# Detector unit behavior
+# ---------------------------------------------------------------------------
+
+
+def _feed(det, recall, cfg, batches=1, n=256):
+    """Drive the detector with synthetic recall bits."""
+    hits = jnp.arange(n) < int(round(recall * n))
+    ev = jnp.ones(n, bool)
+    for _ in range(batches):
+        det = detector_update(det, hits, ev, cfg)
+    return det
+
+
+def test_detector_silent_on_stable_recall():
+    cfg = DetectorConfig(warmup=1024)
+    det = detector_init()
+    for _ in range(40):
+        det = _feed(det, 0.4, cfg)
+        assert not bool(det.fired)
+    assert int(det.fires) == 0
+
+
+def test_detector_fires_on_recall_collapse_then_rebaselines():
+    cfg = DetectorConfig(warmup=1024)
+    det = _feed(detector_init(), 0.4, cfg, batches=20)
+    fired_at = None
+    for t in range(12):
+        det = _feed(det, 0.1, cfg)
+        if bool(det.fired):
+            fired_at = t
+            break
+    assert fired_at is not None and fired_at <= 6
+    assert int(det.fires) == 1
+    # Re-baselined: the post-drift level is the new normal — staying at
+    # 0.1 does not retrigger once the cooldown has expired.
+    for _ in range(cfg.cooldown + 10):
+        det = _feed(det, 0.1, cfg)
+    assert int(det.fires) == 1
+
+
+def test_detector_ignores_empty_batches():
+    cfg = DetectorConfig(warmup=1024)
+    det = _feed(detector_init(), 0.4, cfg, batches=20)
+    before = det
+    none = jnp.zeros(256, bool)
+    det = detector_update(det, none, none, cfg)
+    assert float(det.fast) == float(before.fast)
+    assert float(det.ph) == float(before.ph)
+    assert not bool(det.fired)
+
+
+def test_detector_warmup_blocks_early_flags():
+    cfg = DetectorConfig(warmup=10_000)
+    det = _feed(detector_init(), 0.4, cfg, batches=20)
+    det = _feed(det, 0.0, cfg, batches=10)
+    assert int(det.fires) == 0
+
+
+# ---------------------------------------------------------------------------
+# Controller unit behavior
+# ---------------------------------------------------------------------------
+
+
+def _populated_grid(n_c=1, u_cap=8, i_cap=8, k=4):
+    st = state_lib.init_disgd_state(u_cap, i_cap, k)
+    t = st.tables._replace(
+        user_ids=jnp.arange(u_cap, dtype=jnp.int32),
+        item_ids=jnp.arange(i_cap, dtype=jnp.int32),
+        user_ts=jnp.asarray([1, 2, 3, 4, 97, 98, 99, 100], jnp.int32),
+        item_ts=jnp.asarray([100, 99, 98, 97, 4, 3, 2, 1], jnp.int32),
+        clock=jnp.int32(100),
+    )
+    st = st._replace(tables=t, user_vecs=jnp.ones_like(st.user_vecs),
+                     item_vecs=jnp.ones_like(st.item_vecs))
+    return jax.tree.map(lambda x: jnp.broadcast_to(x, (n_c,) + x.shape), st)
+
+
+def test_controller_evicts_on_fire_and_boosts_then_relaxes():
+    policy = DriftPolicy(
+        eviction=ForgettingConfig(policy="lru", lru_max_age=50),
+        boost_batches=2, boost_gamma=0.5)
+    step = make_controller(policy)
+    states = _populated_grid()
+    # No fire: identity.
+    idle, boost = step(states, jnp.asarray(False), jnp.int32(0))
+    for a, b in zip(jax.tree.leaves(states), jax.tree.leaves(idle)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(boost) == 0
+    # Fire: stale entries evicted, boost window opens, decay applies.
+    out, boost = step(states, jnp.asarray(True), jnp.int32(0))
+    uids = np.asarray(out.tables.user_ids[0])
+    assert (uids >= 0).tolist() == [False] * 4 + [True] * 4
+    live_vecs = np.asarray(out.user_vecs[0])[uids >= 0]
+    np.testing.assert_allclose(live_vecs, 0.5)       # boost decay applied
+    assert int(boost) == policy.boost_batches - 1
+    # Boost window continues without a fire, then relaxes.
+    out2, boost = step(out, jnp.asarray(False), boost)
+    np.testing.assert_allclose(
+        np.asarray(out2.user_vecs[0])[uids >= 0], 0.25)
+    assert int(boost) == 0
+    out3, boost = step(out2, jnp.asarray(False), boost)
+    np.testing.assert_allclose(
+        np.asarray(out3.user_vecs[0])[uids >= 0], 0.25)  # relaxed
+    assert int(boost) == 0
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: host/scan parity and the closed-loop acceptance bar
+# ---------------------------------------------------------------------------
+
+
+def _clean(res):
+    bits = res.recall.bits()
+    return bits[~np.isnan(bits)]
+
+
+def test_adaptive_flags_and_recall_parity_host_vs_scan():
+    """Acceptance: detector/controller flags are identical on host and
+    scan, and the scan backend stays recall-parity on drift scenarios."""
+    sc = make_scenario("abrupt", events=16384, seed=0)
+    cfg = StreamConfig(algorithm="dics", grid=GridSpec(2), micro_batch=256,
+                       hyper=DicsHyper(u_cap=256, i_cap=64),
+                       drift=DriftPolicy())
+    host = run_stream(sc.users, sc.items, cfg)
+    scan = run_stream(sc.users, sc.items,
+                      dataclasses.replace(cfg, backend="scan"))
+    assert host.drift_flags is not None and scan.drift_flags is not None
+    np.testing.assert_array_equal(host.drift_flags, scan.drift_flags)
+    np.testing.assert_array_equal(_clean(host), _clean(scan))
+    assert host.forgets == scan.forgets
+    # The detector actually fired on this scenario (non-vacuous parity).
+    assert int(np.sum(scan.drift_flags)) >= 1
+
+
+def test_scan_recall_parity_on_drift_scenario_without_policy():
+    sc = make_scenario("gradual", events=8192, seed=1)
+    cfg = StreamConfig(algorithm="disgd", grid=GridSpec(2), micro_batch=256,
+                       hyper=DisgdHyper(u_cap=128, i_cap=64))
+    host = run_stream(sc.users, sc.items, cfg)
+    scan = run_stream(sc.users, sc.items,
+                      dataclasses.replace(cfg, backend="scan"))
+    np.testing.assert_array_equal(_clean(host), _clean(scan))
+
+
+def test_adaptive_recovery_beats_fixed_cadence():
+    """The ISSUE 4 acceptance bar, pinned at the smoke scenario's scale."""
+    sc = make_scenario("abrupt", events=32768, seed=0, at=0.3)
+    d = sc.drift_events[0]
+    base = StreamConfig(algorithm="dics", grid=GridSpec(2), micro_batch=256,
+                        hyper=DicsHyper(u_cap=256, i_cap=64), backend="scan")
+    fixed = run_stream(sc.users, sc.items, dataclasses.replace(
+        base, forgetting=ForgettingConfig(policy="lru", trigger_every=2048,
+                                          lru_max_age=512)))
+    adaptive = run_stream(sc.users, sc.items,
+                          dataclasses.replace(base, drift=DriftPolicy()))
+    rep_f = recovery_report(fixed.recall.bits(), d)
+    rep_a = recovery_report(adaptive.recall.bits(), d)
+    assert int(np.sum(adaptive.drift_flags)) >= 1
+    assert rep_a.recovery_or_censored < rep_f.recovery_or_censored
+
+
+def test_adaptive_detector_checkpoint_roundtrip(tmp_path):
+    sc = make_scenario("abrupt", events=16384, seed=0)
+    cfg = StreamConfig(algorithm="dics", grid=GridSpec(2), micro_batch=256,
+                       hyper=DicsHyper(u_cap=256, i_cap=64), backend="scan",
+                       drift=DriftPolicy())
+    res = run_stream(sc.users, sc.items, cfg)
+    assert res.final_detector is not None
+    save_stream_checkpoint(str(tmp_path), res.events_processed,
+                           res.final_states, grid=cfg.grid,
+                           detector=res.final_detector)
+    n, states, carry, det = restore_stream_checkpoint(str(tmp_path), cfg)
+    assert n == res.events_processed
+    assert det is not None
+    for a, b in zip(res.final_detector, det):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # Resume accepts the restored detector on both backends.
+    more = run_stream(sc.users[:512], sc.items[:512], cfg,
+                      initial_states=states, initial_detector=det)
+    assert more.events_processed == 512

@@ -112,6 +112,27 @@ def test_scan_matches_host_with_forgetting():
     np.testing.assert_array_equal(_clean_bits(scan), _clean_bits(host))
 
 
+def test_forgetting_trigger_not_aliased_to_micro_batch():
+    """ISSUE 4 satellite: with ``trigger_every`` not a multiple of the
+    micro-batch, the old reset-to-zero accumulator aliased the cadence to
+    every ceil(te/mb)*mb events (triggers skipped). With the remainder
+    carried, counts are exact on both backends and they agree."""
+    users, items = _stream(n=960)
+    cfg = StreamConfig(
+        algorithm="disgd", grid=GridSpec(2), micro_batch=64,
+        hyper=DisgdHyper(u_cap=128, i_cap=32),
+        forgetting=ForgettingConfig(policy="gradual", trigger_every=96,
+                                    gradual_gamma=0.999),
+    )
+    host = run_stream(users, items, cfg)
+    scan = run_stream(users, items, dataclasses.replace(cfg, backend="scan"))
+    assert host.dropped == scan.dropped == 0
+    assert host.forgets == scan.forgets
+    # Exact cadence: one trigger per trigger_every processed events.
+    assert host.forgets == host.events_processed // 96
+    np.testing.assert_array_equal(_clean_bits(scan), _clean_bits(host))
+
+
 def test_scan_matches_host_dics():
     users, items = _stream(n=800)
     cfg = StreamConfig(algorithm="dics", grid=GridSpec(2), micro_batch=256,

@@ -3,6 +3,8 @@
 import jax.numpy as jnp
 import numpy as np
 
+from tests.prop import given, settings, st
+
 from repro.core import state as state_lib
 from repro.core.forgetting import (ForgettingConfig, apply_forgetting,
                                    evict_to_budget)
@@ -78,6 +80,69 @@ def test_evict_to_budget_bounds_occupancy():
     u_occ, i_occ = state_lib.occupancy(st.tables)
     assert int(u_occ) <= 3
     assert int(i_occ) <= 2
+
+
+def _scored(u_scores, i_scores):
+    """DISGD state with live entries carrying the given LRU timestamps."""
+    u_cap, i_cap = len(u_scores), len(i_scores)
+    s = state_lib.init_disgd_state(u_cap, i_cap, 4)
+    t = s.tables._replace(
+        user_ids=jnp.arange(u_cap, dtype=jnp.int32),
+        item_ids=jnp.arange(i_cap, dtype=jnp.int32),
+        user_ts=jnp.asarray(u_scores, jnp.int32),
+        item_ts=jnp.asarray(i_scores, jnp.int32),
+        user_freq=jnp.asarray(u_scores, jnp.int32),
+        item_freq=jnp.asarray(i_scores, jnp.int32),
+        clock=jnp.int32(1000),
+    )
+    return s._replace(tables=t)
+
+
+def test_evict_to_budget_tie_break_keeps_strictly_better_entries():
+    """ISSUE 4 regression: with ties at the k-th score, the old slot-order
+    cumsum evicted an entry *strictly above* the threshold sitting in a
+    late slot (budget=2, scores [9, 9, 10] evicted the 10)."""
+    st = evict_to_budget(_scored([9, 9, 10], [9, 9, 10]), user_budget=2,
+                         item_budget=2, policy="lru")
+    uids = np.asarray(st.tables.user_ids)
+    assert uids[2] == 2                       # the 10 must survive
+    assert (uids >= 0).sum() == 2
+    assert uids[0] == 0 and uids[1] < 0       # earliest tied slot wins
+    iids = np.asarray(st.tables.item_ids)
+    assert iids[2] == 2 and (iids >= 0).sum() == 2
+
+
+def test_evict_to_budget_zero_budget_evicts_everything():
+    """ISSUE 4 regression: budget=0 crashed on top_k(score, 0)[0][-1]."""
+    st = evict_to_budget(_populated(), user_budget=0, item_budget=0,
+                         policy="lru")
+    u_occ, i_occ = state_lib.occupancy(st.tables)
+    assert int(u_occ) == 0 and int(i_occ) == 0
+    assert np.all(np.asarray(st.user_vecs) == 0)
+    assert np.all(~np.asarray(st.rated))
+
+
+@given(
+    st.lists(st.integers(0, 30), min_size=1, max_size=12),
+    st.integers(0, 14),
+    st.sampled_from(["lru", "lfu"]),
+)
+@settings(max_examples=100, deadline=None)
+def test_evict_to_budget_never_evicts_better_than_survivor(scores, budget,
+                                                           policy):
+    """Property (ISSUE 4): no evicted entry's score strictly exceeds any
+    survivor's, and occupancy lands at min(budget, live)."""
+    n = len(scores)
+    state = _scored(scores, scores)
+    out = evict_to_budget(state, user_budget=budget, item_budget=budget,
+                          policy=policy)
+    for ids in (out.tables.user_ids, out.tables.item_ids):
+        ids = np.asarray(ids)
+        arr = np.asarray(scores)
+        kept, gone = arr[ids >= 0], arr[ids < 0]
+        if kept.size and gone.size:
+            assert gone.max() <= kept.min()
+        assert (ids >= 0).sum() == min(budget, n)
 
 
 def test_gradual_forgetting_decays_state():

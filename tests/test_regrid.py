@@ -262,11 +262,11 @@ def test_checkpoint_restores_at_a_different_grid(algorithm, tmp_path):
                            res.final_states, grid=G22)
     for dst in TARGETS:
         cfg_dst = _cfg(algorithm, grid=dst)
-        n, states, _ = restore_stream_checkpoint(str(tmp_path), cfg_dst)
+        n, states, _, _ = restore_stream_checkpoint(str(tmp_path), cfg_dst)
         assert n == res.events_processed
         _assert_trees_equal(states, rg.regrid(res.final_states, G22, dst))
     # Same-grid logical restore is the identity.
-    n, states, _ = restore_stream_checkpoint(str(tmp_path), cfg)
+    n, states, _, _ = restore_stream_checkpoint(str(tmp_path), cfg)
     _assert_trees_equal(states, res.final_states)
 
 
@@ -283,7 +283,7 @@ def test_legacy_checkpoint_restores_and_mismatch_is_actionable(tmp_path):
     cfg = _cfg("disgd")
     res = run_stream(users, items, cfg)
     save_stream_checkpoint(str(tmp_path), 512, res.final_states)  # legacy
-    n, states, _ = restore_stream_checkpoint(str(tmp_path), cfg)
+    n, states, _, _ = restore_stream_checkpoint(str(tmp_path), cfg)
     assert n == 512
     _assert_trees_equal(states, res.final_states)
 
