@@ -43,15 +43,14 @@ EVENTS = 32768
 
 
 def _cfg(algorithm: str, policy: str, micro_batch: int = 256):
-    from repro.core.dics import DicsHyper
-    from repro.core.disgd import DisgdHyper
+    from repro.core.algorithm import get_algorithm
     from repro.core.forgetting import ForgettingConfig
     from repro.core.pipeline import StreamConfig
     from repro.core.routing import GridSpec
     from repro.drift import DriftPolicy
 
-    hyper = (DisgdHyper(u_cap=256, i_cap=64) if algorithm == "disgd"
-             else DicsHyper(u_cap=256, i_cap=64))
+    hyper = get_algorithm(algorithm).default_hyper()._replace(
+        u_cap=256, i_cap=64)
     cfg = StreamConfig(algorithm=algorithm, grid=GridSpec(2),
                        micro_batch=micro_batch, hyper=hyper, backend="scan")
     if policy == "fixed":

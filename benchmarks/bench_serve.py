@@ -84,14 +84,16 @@ def _measure(states, pool, cfg, batch: int, use_kernel: bool,
 
 
 def rows(events: int = 4096):
+    from repro.core.algorithm import get_algorithm
+
     rng = np.random.default_rng(0)
     out = []
     for algorithm in ("disgd", "dics"):
         for n_i in (1, 4):
             cfg, states, pool = _trained(algorithm, n_i, events)
             backends = [(True, "kernel"), (False, "oracle")]
-            if algorithm == "dics":       # DICS scoring has no kernel path
-                backends = [(False, "oracle")]
+            if not get_algorithm(algorithm).supports_serve_kernel:
+                backends = [(False, "oracle")]  # no kernel scoring path
             for use_kernel, blabel in backends:
                 for batch in (1, 16, 64):
                     qps, p50, p99 = _measure(

@@ -26,12 +26,18 @@ MICRO_BATCH = 128
 REPEATS = 3
 
 
+# Stream-length divisor per algorithm (data, not dispatch): DICS's
+# O(i_cap^2) co updates run at roughly half the factor models' rate.
+EVENT_DIVISOR = {"dics": 2}
+
+
 def rows(events: int = 12_288):
     from benchmarks.common import LFU, LRU, run
+    from repro.core.algorithm import get_algorithm
 
     out = []
     for algorithm in ("disgd", "dics"):
-        ev = events if algorithm == "disgd" else events // 2
+        ev = events // EVENT_DIVISOR.get(algorithm, 1)
         for dataset in ("movielens",):
             base = None
             plans = [
@@ -42,7 +48,7 @@ def rows(events: int = 12_288):
                 (4, LFU, "n_i=4+lfu", "host"),
                 (4, None, "n_i=4+scan", "scan"),
             ]
-            if algorithm == "disgd":
+            if get_algorithm(algorithm).supports_pallas:
                 plans.append((4, None, "n_i=4+pallas", "pallas"))
             for n_i, forget, label, backend in plans:
                 res = run(algorithm, dataset, n_i, ev, forget,

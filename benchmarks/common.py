@@ -4,8 +4,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.dics import DicsHyper
-from repro.core.disgd import DisgdHyper
+from repro.core.algorithm import get_algorithm
 from repro.core.forgetting import ForgettingConfig
 from repro.core.pipeline import StreamConfig, run_stream
 from repro.core.routing import GridSpec
@@ -40,8 +39,8 @@ def make_cfg(algorithm: str, dataset: str, n_i: int,
     u_cap0, i_cap0 = CAPS[dataset]
     u_cap = max(64, u_cap0 // grid.g)
     i_cap = max(16, i_cap0 // grid.n_i)
-    hyper = (DisgdHyper(u_cap=u_cap, i_cap=i_cap) if algorithm == "disgd"
-             else DicsHyper(u_cap=u_cap, i_cap=i_cap))
+    hyper = get_algorithm(algorithm).default_hyper()._replace(
+        u_cap=u_cap, i_cap=i_cap)
     return StreamConfig(
         algorithm=algorithm, grid=grid, micro_batch=micro_batch, hyper=hyper,
         forgetting=forgetting or ForgettingConfig(), backend=backend,

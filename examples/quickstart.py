@@ -1,44 +1,61 @@
-"""Quickstart: distributed streaming recommendation in ~40 lines.
+"""Quickstart: the public StreamSession API in ~30 lines.
 
-Streams synthetic MovieLens-like ratings through DISGD on a 2x2 S&R worker
-grid (the paper's n_i=2 configuration), with prequential Recall@10 — the
-paper's Algorithm 1+2+4 end to end.
+Streams synthetic MovieLens-like ratings through a registered algorithm
+on an S&R worker grid (the paper's Algorithm 1+2+4 end to end), then
+serves grid-wide top-N recommendations from the trained snapshot —
+train, evaluate and serve through ONE object, ``repro.StreamSession``.
 
-  PYTHONPATH=src python examples/quickstart.py
+Install the package first (no sys.path tricks needed):
+
+  pip install -e .
+  python examples/quickstart.py [--events 2000] [--algorithm bpr]
 """
 
-import sys
-sys.path.insert(0, "src")
+import argparse
 
 import numpy as np
 
-from repro.core.disgd import DisgdHyper
-from repro.core.pipeline import StreamConfig, run_stream
-from repro.core.routing import GridSpec
+import repro
 from repro.data.stream import MOVIELENS_25M, scaled, synth_stream
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--events", type=int, default=0, help="0 = full stream")
+    ap.add_argument("--algorithm", default="disgd", choices=repro.registered())
+    args = ap.parse_args()
+
     profile = scaled(MOVIELENS_25M, 0.003)
     users, items, _ = synth_stream(profile, seed=0)
+    if args.events:
+        users, items = users[:args.events], items[:args.events]
     print(f"stream: {users.size} ratings, "
           f"{users.max()+1} users, {items.max()+1} items")
 
-    for n_i in (1, 2):  # n_i=1 == the paper's central ISGD baseline
-        grid = GridSpec(n_i)
-        cfg = StreamConfig(
-            algorithm="disgd",
+    algo = repro.get_algorithm(args.algorithm)
+    for n_i in (1, 2):  # n_i=1 == the paper's central (single-worker) baseline
+        grid = repro.GridSpec(n_i)
+        cfg = repro.StreamConfig(
+            algorithm=args.algorithm,
             grid=grid,
             micro_batch=1024,
-            hyper=DisgdHyper(u_cap=1024 // grid.g, i_cap=128 // grid.n_i),
+            hyper=algo.default_hyper()._replace(u_cap=1024 // grid.g,
+                                                i_cap=128 // grid.n_i),
         )
-        res = run_stream(users, items, cfg)
+        session = repro.StreamSession(cfg)
+        res = session.ingest(users, items)
         occ = res.occupancy_summary()
-        label = "central ISGD" if n_i == 1 else f"DISGD n_i={n_i}"
+        label = "central" if n_i == 1 else f"{args.algorithm} n_i={n_i}"
         print(f"{label:14s} recall@10={res.recall.mean():.4f} "
               f"throughput={res.throughput:,.0f} ev/s "
               f"mean state/worker: users={occ['user_mean']:.0f} "
               f"items={occ['item_mean']:.0f}")
+
+    # Serve a few grid-wide top-N queries from the last session's snapshot.
+    resp = session.recommend(np.unique(users)[:4])
+    print(f"sample recommendations (known={resp.known.tolist()}):")
+    for row in resp.ids:
+        print("  ", [int(i) for i in row if i >= 0])
 
 
 if __name__ == "__main__":

@@ -1,40 +1,34 @@
 """End-to-end driver: the paper's full experimental pipeline, reduced.
 
 Reproduces the shape of the paper's Section 5 on a synthetic stream
-matched to the MovieLens-25M profile: central baseline vs DISGD/DICS for
-n_i in {2, 4}, with and without LRU/LFU forgetting — reporting
+matched to the MovieLens-25M profile: central baseline vs the S&R grid
+for n_i in {2, 4}, with and without LRU/LFU forgetting — reporting
 prequential Recall@10 (Fig. 3/9), per-worker state occupancy (Fig. 4/10),
-and throughput (Fig. 8/14).
+and throughput (Fig. 8/14) — for every registered algorithm (the paper's
+DISGD/DICS pair plus any plugin, e.g. BPR-MF), through the public
+``repro.StreamSession`` facade.
 
-  PYTHONPATH=src python examples/streaming_recsys.py [--events 20000]
+  pip install -e .
+  python examples/streaming_recsys.py [--events 20000]
 """
-
-import sys
-sys.path.insert(0, "src")
 
 import argparse
 
-import numpy as np
-
-from repro.core.dics import DicsHyper
-from repro.core.disgd import DisgdHyper
-from repro.core.forgetting import ForgettingConfig
-from repro.core.pipeline import StreamConfig, run_stream
-from repro.core.routing import GridSpec
+import repro
 from repro.data.stream import MOVIELENS_25M, scaled, synth_stream
 
 
 def run(algorithm, users, items, n_i, forgetting=None, caps=(1024, 128)):
-    grid = GridSpec(n_i)
+    grid = repro.GridSpec(n_i)
     u_cap = max(64, caps[0] // grid.g)
     i_cap = max(16, caps[1] // grid.n_i)
-    hyper = (DisgdHyper(u_cap=u_cap, i_cap=i_cap) if algorithm == "disgd"
-             else DicsHyper(u_cap=u_cap, i_cap=i_cap))
-    cfg = StreamConfig(
+    hyper = repro.get_algorithm(algorithm).default_hyper()._replace(
+        u_cap=u_cap, i_cap=i_cap)
+    cfg = repro.StreamConfig(
         algorithm=algorithm, grid=grid, micro_batch=1024, hyper=hyper,
-        forgetting=forgetting or ForgettingConfig(),
+        forgetting=forgetting or repro.ForgettingConfig(),
     )
-    return run_stream(users, items, cfg)
+    return repro.StreamSession(cfg).ingest(users, items)
 
 
 def main():
@@ -42,6 +36,9 @@ def main():
     ap.add_argument("--events", type=int, default=20_000)
     ap.add_argument("--drift", action="store_true",
                     help="inject a concept-drift point mid-stream")
+    ap.add_argument("--algorithms", default="disgd,dics",
+                    help="comma-separated registry keys "
+                         f"(registered: {','.join(repro.registered())})")
     args = ap.parse_args()
 
     profile = scaled(MOVIELENS_25M, 0.004)
@@ -53,12 +50,14 @@ def main():
     print(f"stream: {users.size} ratings, {users.max()+1} users, "
           f"{items.max()+1} items | drift={args.drift}\n")
 
-    lru = ForgettingConfig(policy="lru", trigger_every=2048, lru_max_age=3000)
-    lfu = ForgettingConfig(policy="lfu", trigger_every=2048, lfu_min_freq=2)
+    lru = repro.ForgettingConfig(policy="lru", trigger_every=2048,
+                                 lru_max_age=3000)
+    lfu = repro.ForgettingConfig(policy="lfu", trigger_every=2048,
+                                 lfu_min_freq=2)
 
     header = (f"{'algorithm':10s} {'config':12s} {'recall@10':>9s} "
               f"{'ev/s':>9s} {'users/w':>8s} {'items/w':>8s}")
-    for algorithm in ("disgd", "dics"):
+    for algorithm in args.algorithms.split(","):
         print(header)
         for n_i, forget, label in [
             (1, None, "central"),

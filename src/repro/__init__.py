@@ -1,0 +1,73 @@
+"""Public API of the S&R streaming-recommender reproduction.
+
+This is the supported import surface (pinned by
+``tests/test_api_surface.py``):
+
+  * **Session facade** — :class:`StreamSession` wraps the whole
+    lifecycle (ingest / recommend / checkpoint / restore / rescale) over
+    any registered algorithm; :class:`RestoredCheckpoint` names what a
+    checkpoint restore returns.
+  * **Algorithm registry** — :class:`Algorithm`, :func:`register`,
+    :func:`get_algorithm`, :func:`registered`: plug a new incremental
+    recommender into the engine, serving plane, elastic regrid and
+    drivers without touching any of them (``repro/algos/bpr.py`` is the
+    worked example).
+  * **Configuration** — :class:`StreamConfig` (``algorithm`` is a
+    registry key), :class:`GridSpec`, :class:`ForgettingConfig`,
+    :class:`DriftPolicy`, and the built-in hyper tuples.
+  * **Streaming / serving primitives** — for power users composing the
+    layers directly.
+
+Deep-module imports (``repro.core.pipeline``, ``repro.serve.plane``, …)
+keep working — they are the implementation, and internal layout may
+shift between releases; new code should import from ``repro``.
+"""
+
+from repro.core.algorithm import (Algorithm, get_algorithm, register,
+                                  registered)
+from repro.core.dics import DicsHyper
+from repro.core.disgd import DisgdHyper
+from repro.core.forgetting import ForgettingConfig
+from repro.core.pipeline import (RestoredCheckpoint, StreamConfig,
+                                 StreamResult, restore_stream_checkpoint,
+                                 run_stream, save_stream_checkpoint)
+from repro.core.routing import GridSpec
+from repro.drift import DriftPolicy
+from repro.serve import (QueryFrontend, ServeConfig, ServeResponse,
+                         SnapshotStore, StaleSnapshotError, grid_topn)
+from repro.session import StreamSession
+
+# Importing the in-tree plugin package registers its algorithms, so the
+# full registry is live as soon as `import repro` runs.
+from repro.algos import BprHyper
+
+__all__ = [
+    # algorithm registry
+    "Algorithm",
+    "register",
+    "get_algorithm",
+    "registered",
+    # configuration
+    "StreamConfig",
+    "GridSpec",
+    "ForgettingConfig",
+    "DriftPolicy",
+    "DisgdHyper",
+    "DicsHyper",
+    "BprHyper",
+    # session facade
+    "StreamSession",
+    "RestoredCheckpoint",
+    # streaming primitives
+    "run_stream",
+    "StreamResult",
+    "save_stream_checkpoint",
+    "restore_stream_checkpoint",
+    # serving plane
+    "ServeConfig",
+    "ServeResponse",
+    "QueryFrontend",
+    "SnapshotStore",
+    "StaleSnapshotError",
+    "grid_topn",
+]

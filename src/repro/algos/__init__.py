@@ -1,0 +1,17 @@
+"""First-party algorithm plugins for the S&R streaming runtime.
+
+Importing this package registers every in-tree plugin with
+``repro.core.algorithm``. The top-level ``repro`` package imports it
+eagerly (and every ``repro.*`` import executes that ``__init__`` first),
+so ``StreamConfig(algorithm="bpr")`` works without an explicit import —
+keep that eager import if you slim the top-level surface, or plugin
+keys stop resolving. Each module here is written **entirely against the
+public protocol** (``Algorithm`` + the public state containers); none
+of them touches the engine, pipeline, serving plane, or regrid
+internals.
+"""
+
+from repro.algos import bpr  # noqa: F401  (registers "bpr")
+from repro.algos.bpr import BprHyper
+
+__all__ = ["bpr", "BprHyper"]

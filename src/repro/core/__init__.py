@@ -1,3 +1,12 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""Core S&R streaming runtime (the paper's primary contribution).
+
+Modules: ``routing`` (Alg. 1 + capacity-bucketed dispatch), ``disgd`` /
+``dics`` (Alg. 2/3 worker steps), ``algorithm`` (the pluggable protocol
++ registry every dispatch site resolves through), ``state`` (public
+fixed-capacity worker-state containers), ``evaluator`` (Alg. 4
+prequential recall), ``forgetting``, ``pipeline`` (host reference loop +
+config/checkpoints), ``engine`` (device-resident scanned loop),
+``distributed`` (shard_map worker grid), ``serve`` (single-worker query
+leaf) and ``regrid`` (elastic grid transform). The supported public
+surface is the top-level ``repro`` package.
+"""

@@ -1,0 +1,301 @@
+"""Pluggable streaming-recommender algorithms: protocol + registry.
+
+The paper's Splitting & Replication machinery is algorithm-agnostic — it
+routes events, buckets them, and hands each worker's bucket to *some*
+incremental recommender (Alg. 2 DISGD, Alg. 3 DICS). This module is the
+seam that keeps it that way in code: everything the runtime used to
+switch on ``cfg.algorithm == "..."`` strings is a method or capability
+flag on an :class:`Algorithm`, and ``StreamConfig.algorithm`` is a key
+into the registry below.
+
+An algorithm plugs in by subclassing :class:`Algorithm` and calling
+:func:`register` — no edits to the engine, pipeline, serving plane,
+regrid transform, or drivers. The contract:
+
+  * ``default_hyper()`` — a ``NamedTuple`` of hyperparameters. Required
+    fields (the runtime ``_replace``s / reads them): ``u_cap``, ``i_cap``,
+    ``top_n``, ``n_i``, ``g``.
+  * ``init_state(hyper)`` — ONE worker's state pytree. State containers
+    from ``core/state.py`` (``DisgdState``/``DicsState``) are public and
+    reusable: any factor-model algorithm that adopts ``DisgdState``
+    inherits forgetting, regrid, checkpointing and popularity stats for
+    free (the BPR plugin in ``repro/algos/bpr.py`` does exactly this).
+  * ``make_worker_step(hyper, key)`` — the micro-batch worker update:
+    ``step(state, (ev_u, ev_i)) -> (state, hits, evaluated)`` with
+    ``ev_*`` int32[capacity], ``-1`` padded. Must be jit/vmap/scan-safe;
+    the engine traces it once, so registry dispatch adds zero
+    per-micro-batch overhead.
+  * ``make_serve_leaf(...)`` — one worker's read-only partial top-N,
+    merged across item splits by ``repro.serve.plane.grid_topn``.
+  * regrid / checkpoint hooks — ``extract_logical`` / ``build_states``
+    default to the shared ``core/regrid`` leaf ops (which understand the
+    public state containers); override only for custom state pytrees.
+    ``state_template(hyper)`` is the single-worker checkpoint schema
+    (shapes/dtypes) used to validate legacy fixed-shape checkpoints.
+  * capabilities — ``supports_scan`` / ``supports_pallas``. Backend
+    selection *negotiates* against these (``negotiated_backend``): a
+    backend the algorithm cannot run falls back, with one warning,
+    instead of raising mid-run.
+"""
+
+from __future__ import annotations
+
+import warnings
+from typing import Any, Callable
+
+import jax
+
+from repro.core import dics as dics_lib
+from repro.core import disgd as disgd_lib
+from repro.core import serve as serve_lib
+from repro.core import state as state_lib
+
+__all__ = [
+    "Algorithm",
+    "register",
+    "get_algorithm",
+    "registered",
+    "infer_algorithm",
+    "negotiated_backend",
+]
+
+
+class Algorithm:
+    """Base class / protocol for a pluggable streaming recommender.
+
+    Subclass, set ``name`` and the capability flags, implement the four
+    abstract hooks, and :func:`register` an instance. Everything else
+    (engine scan, shard_map placement, forgetting, drift control, grid
+    serving, elastic regrid, checkpoints, the ``StreamSession`` facade)
+    is inherited from the runtime.
+    """
+
+    #: Registry key (``StreamConfig.algorithm`` / ``ServeConfig.algorithm``).
+    name: str = ""
+    #: The worker step is jit/scan-safe (device-resident backends legal).
+    supports_scan: bool = True
+    #: A Pallas fast-path *training* worker exists
+    #: (``make_pallas_worker_step``).
+    supports_pallas: bool = False
+    #: The serve leaf distinguishes kernel vs oracle scoring
+    #: (``use_kernel`` is meaningful, not ignored). Independent of
+    #: ``supports_pallas``: BPR serves through the scoring kernel but has
+    #: no fast-path trainer.
+    supports_serve_kernel: bool = False
+
+    # -- training ---------------------------------------------------------
+
+    def default_hyper(self) -> Any:
+        """Hyperparameter ``NamedTuple`` with u_cap/i_cap/top_n/n_i/g."""
+        raise NotImplementedError
+
+    def init_state(self, hyper) -> Any:
+        """One worker's zero state (the pipeline broadcasts over n_c)."""
+        raise NotImplementedError
+
+    def make_worker_step(self, hyper, key) -> Callable:
+        """``step(state, (ev_u, ev_i)) -> (state, hits, evaluated)``."""
+        raise NotImplementedError
+
+    def make_pallas_worker_step(self, hyper, key) -> Callable:
+        """Pallas fast-path worker (same signature as the reference step).
+
+        Only called when ``supports_pallas``; the default raises so a
+        direct request for an impossible fast path stays a loud error
+        (backend *negotiation* checks the flag first and never gets here).
+        """
+        if self.supports_pallas:
+            raise NotImplementedError(
+                f"algorithm {self.name!r} sets supports_pallas=True but "
+                "does not override make_pallas_worker_step")
+        raise ValueError(
+            f"backend='pallas' is not supported by algorithm "
+            f"{self.name!r} (supports_pallas=False)")
+
+    # -- serving ----------------------------------------------------------
+
+    def make_serve_leaf(self, *, top_n: int, g: int, u_cap: int,
+                        k_nn: int, use_kernel: bool) -> Callable:
+        """``leaf(state, user_ids) -> (item_ids, scores, known)``.
+
+        One worker's partial top-N over its local item split, as global
+        item ids — the unit ``serve.plane.grid_topn`` merges across the
+        ``n_i`` split axis. Receives every static serving knob; each
+        algorithm reads the ones it understands.
+        """
+        raise NotImplementedError
+
+    # -- elasticity / checkpoint schema -----------------------------------
+
+    def extract_logical(self, states, grid):
+        """Stacked ``[n_c, ...]`` states -> grid-portable ``LogicalState``."""
+        from repro.core import regrid as regrid_lib
+
+        return regrid_lib.extract_logical(states, grid)
+
+    def build_states(self, logical, *, src, dst, u_cap: int, i_cap: int,
+                     merge: str = "fresh"):
+        """``LogicalState`` -> stacked states for the target grid."""
+        from repro.core import regrid as regrid_lib
+
+        return regrid_lib.build_states(logical, src=src, dst=dst,
+                                       u_cap=u_cap, i_cap=i_cap, merge=merge)
+
+    def state_template(self, hyper):
+        """Single-worker checkpoint schema (ShapeDtypeStruct pytree)."""
+        return jax.eval_shape(lambda: self.init_state(hyper))
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, Algorithm] = {}
+
+
+def register(algo: Algorithm) -> Algorithm:
+    """Register an :class:`Algorithm` instance under ``algo.name``.
+
+    Re-registering a name replaces the previous entry (latest wins), so
+    notebooks can iterate on a plugin without restarting. Returns the
+    instance, so it can be used as a decorator-ish one-liner.
+    """
+    if not algo.name:
+        raise ValueError(f"{type(algo).__name__} has no name")
+    _REGISTRY[algo.name] = algo
+    return algo
+
+
+def get_algorithm(name: str) -> Algorithm:
+    """Resolve a registry key to the registered :class:`Algorithm`.
+
+    In-tree plugins (``repro/algos/``) are always present: importing any
+    ``repro.*`` module executes the package ``__init__``, which loads
+    them eagerly — no lazy discovery needed here, and a broken plugin
+    fails loudly at import time instead of surfacing as a KeyError.
+    """
+    algo = _REGISTRY.get(name)
+    if algo is None:
+        raise KeyError(
+            f"no registered algorithm {name!r}; registered: "
+            f"{sorted(_REGISTRY)}. Plug one in via "
+            "repro.core.algorithm.register(...)")
+    return algo
+
+
+def registered() -> tuple[str, ...]:
+    """Registered algorithm names (in-tree plugins included), sorted."""
+    return tuple(sorted(_REGISTRY))
+
+
+def infer_algorithm(states) -> str:
+    """Best-effort registry key for a bare state pytree (legacy saves).
+
+    State containers are shared between algorithms (that is the point),
+    so this maps a container to the *canonical* algorithm of that family
+    — callers that know better (the session facade does) pass
+    ``algorithm=`` explicitly instead.
+    """
+    if isinstance(states, state_lib.DicsState):
+        return "dics"
+    if isinstance(states, state_lib.DisgdState):
+        return "disgd"
+    raise TypeError(f"cannot infer an algorithm for {type(states)}; "
+                    "pass algorithm=... explicitly")
+
+
+def negotiated_backend(cfg) -> str:
+    """The backend ``cfg`` actually runs, after capability negotiation.
+
+    ``backend="pallas"`` with an algorithm that has no Pallas fast path
+    degrades to ``"scan"`` (same results, reference worker); a
+    ``supports_scan=False`` algorithm degrades any device backend to
+    ``"host"``. Each degradation warns once instead of raising mid-run.
+    """
+    algo = get_algorithm(cfg.algorithm)
+    backend = cfg.backend
+    if backend == "pallas" and not algo.supports_pallas:
+        warnings.warn(
+            f"algorithm {cfg.algorithm!r} has no Pallas fast path "
+            "(supports_pallas=False); falling back to backend='scan'",
+            RuntimeWarning)
+        backend = "scan"
+    if backend in ("scan", "pallas", "shard_map") and not algo.supports_scan:
+        warnings.warn(
+            f"algorithm {cfg.algorithm!r} is not scan-safe "
+            "(supports_scan=False); falling back to backend='host'",
+            RuntimeWarning)
+        backend = "host"
+    return backend
+
+
+# ---------------------------------------------------------------------------
+# The paper's two algorithms, as registry entries
+# ---------------------------------------------------------------------------
+
+
+class DisgdAlgorithm(Algorithm):
+    """DISGD — distributed incremental SGD matrix factorization (Alg. 2)."""
+
+    name = "disgd"
+    supports_pallas = True
+    supports_serve_kernel = True
+
+    def default_hyper(self):
+        return disgd_lib.DisgdHyper()
+
+    def init_state(self, hyper):
+        return state_lib.init_disgd_state(hyper.u_cap, hyper.i_cap, hyper.k)
+
+    def make_worker_step(self, hyper, key):
+        def step(state, events):
+            return disgd_lib.disgd_worker_step(state, events, hyper, key)
+
+        return step
+
+    def make_pallas_worker_step(self, hyper, key):
+        return disgd_lib.make_pallas_worker(hyper, key)
+
+    def make_serve_leaf(self, *, top_n, g, u_cap, k_nn, use_kernel):
+        del k_nn  # neighborhood size is a DICS knob
+
+        def leaf(state, user_ids):
+            return serve_lib.partial_topn(
+                state, user_ids, top_n=top_n, g=g, u_cap=u_cap,
+                use_kernel=use_kernel)
+
+        return leaf
+
+
+class DicsAlgorithm(Algorithm):
+    """DICS — distributed incremental item-based cosine CF (Alg. 3)."""
+
+    name = "dics"
+    supports_pallas = False  # Eq. 6/7 scoring has no kernel fast path
+
+    def default_hyper(self):
+        return dics_lib.DicsHyper()
+
+    def init_state(self, hyper):
+        return state_lib.init_dics_state(hyper.u_cap, hyper.i_cap)
+
+    def make_worker_step(self, hyper, key):
+        del key  # DICS state init is deterministic (counts)
+
+        def step(state, events):
+            return dics_lib.dics_worker_step(state, events, hyper)
+
+        return step
+
+    def make_serve_leaf(self, *, top_n, g, u_cap, k_nn, use_kernel):
+        del use_kernel  # Pallas scoring is a factor-model path
+
+        def leaf(state, user_ids):
+            return dics_lib.dics_partial_topn(
+                state, user_ids, top_n=top_n, k_nn=k_nn, g=g, u_cap=u_cap)
+
+        return leaf
+
+
+register(DisgdAlgorithm())
+register(DicsAlgorithm())

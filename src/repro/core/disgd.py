@@ -34,7 +34,8 @@ import jax.numpy as jnp
 from repro.core import state as state_lib
 from repro.core.state import DisgdState, Tables
 
-__all__ = ["DisgdHyper", "disgd_worker_step", "init_vector", "score_items"]
+__all__ = ["DisgdHyper", "disgd_worker_step", "make_pallas_worker",
+           "init_vector", "score_items"]
 
 
 class DisgdHyper(NamedTuple):
@@ -183,3 +184,103 @@ def disgd_worker_step(state: DisgdState, events, hyper: DisgdHyper, key: jax.Arr
         body, state, (u_ids, i_ids, init_us, init_is)
     )
     return state, hits, evaluated
+
+
+def make_pallas_worker(hyper: DisgdHyper, key: jax.Array):
+    """DISGD worker step built on the Pallas kernels (fast path).
+
+    Scoring for the whole bucket is one masked-matmul kernel call against
+    the state at bucket start (instead of ``capacity`` sequential top-k
+    passes); training applies the fused sequential ISGD kernel
+    (``kernels/isgd.py``), which is exact — factors match the reference
+    step whenever ids do not collide in the slot tables. *Recommendation*
+    is evaluated against the state at bucket start, so recall bits may
+    differ within a bucket when one user rates several items in the same
+    micro-batch.
+
+    Returns ``step(state, (ev_u, ev_i)) -> (state, hits, evaluated)`` —
+    the same per-worker signature as ``disgd_worker_step`` partial-
+    applied, which is what the engine vmaps over the worker axis.
+    """
+    from repro.kernels import ops
+
+    u_cap, i_cap, k = hyper.u_cap, hyper.i_cap, hyper.k
+
+    init_batch = jax.vmap(
+        lambda ident: init_vector(key, ident, k, hyper.init_scale)
+    )
+
+    def step(st: DisgdState, events):
+        ev_u, ev_i = events
+        valid = ev_u >= 0
+        t = st.tables
+        u_slot = state_lib.slot_of(ev_u, hyper.g, u_cap)
+        i_slot = state_lib.slot_of(ev_i, hyper.n_i, i_cap)
+        # "Known at bucket start": the slot already holds this exact id.
+        known_u = t.user_ids[u_slot] == ev_u
+        known_i = t.item_ids[i_slot] == ev_i
+
+        init_u = init_batch(ev_u)                       # [cap, k]
+        init_i = init_batch(ev_i)
+
+        # --- recommend (batched Pallas masked scoring) ---
+        u_vecs_b = jnp.where(known_u[:, None], st.user_vecs[u_slot], init_u)
+        rated_rows = jnp.where(known_u[:, None], st.rated[u_slot], False)
+        cand = (t.item_ids >= 0)[None, :] & ~rated_rows & valid[:, None]
+        scores = ops.masked_scores(u_vecs_b, st.item_vecs, cand)
+        top_scores, top_idx = jax.lax.top_k(
+            scores, min(hyper.top_n, scores.shape[-1])
+        )
+        hits = jnp.any(
+            (t.item_ids[top_idx] == ev_i[:, None]) & jnp.isfinite(top_scores),
+            axis=-1,
+        ) & valid & known_i
+
+        # --- train (fused sequential ISGD kernel) ---
+        # Seed unseen ids first so the kernel's gather reads the same init
+        # the reference uses at the id's first event.
+        seed_u = valid & ~known_u
+        seed_i = valid & ~known_i
+        uv = st.user_vecs.at[jnp.where(seed_u, u_slot, u_cap)].set(
+            init_u, mode="drop")
+        iv = st.item_vecs.at[jnp.where(seed_i, i_slot, i_cap)].set(
+            init_i, mode="drop")
+        uv, iv = ops.isgd_update(
+            uv, iv, u_slot, i_slot, valid, eta=hyper.eta, lam=hyper.lam
+        )
+
+        # --- bookkeeping (batched; matches the reference modulo slot
+        # collisions, which the fast path resolves last-writer-wins) ---
+        vslot_u = jnp.where(valid, u_slot, u_cap)
+        vslot_i = jnp.where(valid, i_slot, i_cap)
+        user_ids = t.user_ids.at[vslot_u].set(ev_u, mode="drop")
+        item_ids = t.item_ids.at[vslot_i].set(ev_i, mode="drop")
+        event_clock = t.clock + jnp.cumsum(valid.astype(jnp.int32))
+        clock = t.clock + jnp.sum(valid.astype(jnp.int32))
+        user_ts = t.user_ts.at[vslot_u].max(event_clock, mode="drop")
+        item_ts = t.item_ts.at[vslot_i].max(event_clock, mode="drop")
+
+        u_touch = jnp.zeros((u_cap,), jnp.int32).at[vslot_u].add(
+            valid.astype(jnp.int32), mode="drop")
+        i_touch = jnp.zeros((i_cap,), jnp.int32).at[vslot_i].add(
+            valid.astype(jnp.int32), mode="drop")
+        u_evicted = user_ids != t.user_ids    # tenant changed this batch
+        i_evicted = item_ids != t.item_ids
+        user_freq = jnp.where(u_evicted, 0, t.user_freq) + u_touch
+        item_freq = jnp.where(i_evicted, 0, t.item_freq) + i_touch
+
+        rated = st.rated & ~u_evicted[:, None] & ~i_evicted[None, :]
+        flat = jnp.where(valid, u_slot * i_cap + i_slot, u_cap * i_cap)
+        rated = rated.reshape(-1).at[flat].set(True, mode="drop").reshape(
+            u_cap, i_cap)
+
+        tables = t._replace(
+            user_ids=user_ids, item_ids=item_ids,
+            user_freq=user_freq, item_freq=item_freq,
+            user_ts=user_ts, item_ts=item_ts, clock=clock,
+        )
+        new_st = DisgdState(
+            tables=tables, user_vecs=uv, item_vecs=iv, rated=rated)
+        return new_st, hits, valid
+
+    return step

@@ -24,9 +24,7 @@ try:  # jax >= 0.5 exposes shard_map at top level
 except ImportError:  # jax 0.4.x
     from jax.experimental.shard_map import shard_map
 
-from repro.core import dics as dics_lib
-from repro.core import disgd as disgd_lib
-from repro.core import state as state_lib
+from repro.core import algorithm as algorithm_lib
 from repro.core.pipeline import StreamConfig
 from repro.core.routing import GridSpec
 
@@ -72,13 +70,10 @@ def grid_from_mesh(mesh) -> GridSpec:
 
 def init_grid_states(cfg: StreamConfig, mesh):
     """Stacked worker states shaped (n_i, g, ...) for the mesh grid."""
-    hyper = cfg.resolved_hyper()
     n_i, g = grid_from_mesh(mesh).shape
     assert cfg.grid.shape == (n_i, g), (cfg.grid, n_i, g)
-    if cfg.algorithm == "disgd":
-        one = state_lib.init_disgd_state(hyper.u_cap, hyper.i_cap, hyper.k)
-    else:
-        one = state_lib.init_dics_state(hyper.u_cap, hyper.i_cap)
+    one = algorithm_lib.get_algorithm(cfg.algorithm).init_state(
+        cfg.resolved_hyper())
     return jax.tree.map(
         lambda x: jnp.broadcast_to(x, (n_i, g) + x.shape), one
     )
@@ -99,20 +94,14 @@ def _make_grid_step_unjitted(cfg: StreamConfig, mesh):
       ev_u, ev_i: int32[n_i, g, capacity] pre-bucketed events (-1 pad).
     Returns: (new_states, hits, evaluated) with the same grid layout.
     """
-    hyper = cfg.resolved_hyper()
-    key = jax.random.key(cfg.seed)
     item_ax, user_axes = grid_axes(mesh)
     user = user_axes if len(user_axes) > 1 else user_axes[0]
     state_spec = jax.tree.map(lambda _: P(item_ax, user),
                               init_grid_states(cfg, mesh))
     ev_spec = P(item_ax, user, None)
 
-    if cfg.algorithm == "disgd":
-        def one(st, ev):
-            return disgd_lib.disgd_worker_step(st, ev, hyper, key)
-    else:
-        def one(st, ev):
-            return dics_lib.dics_worker_step(st, ev, hyper)
+    one = algorithm_lib.get_algorithm(cfg.algorithm).make_worker_step(
+        cfg.resolved_hyper(), jax.random.key(cfg.seed))
 
     def local(states, ev_u, ev_i):
         st = jax.tree.map(lambda x: x[0, 0], states)

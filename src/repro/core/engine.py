@@ -26,12 +26,11 @@ execution modes share the loop:
   * ``"reference"`` — ``vmap`` over the worker axis of the per-event
     ``lax.scan`` step (bit-identical to the host path; the interpretable
     reference).
-  * ``"pallas"`` — DISGD fast path: micro-batch scoring through the
-    Pallas masked-scoring kernel (``kernels/scoring.py``) and the fused
-    sequential ISGD update kernel (``kernels/isgd.py``). Training is
-    exactly sequential; *recommendation* is evaluated against the state
-    at bucket start, so recall bits may differ within a bucket when one
-    user rates several items in the same micro-batch.
+  * ``"pallas"`` — kernel fast path for algorithms that advertise
+    ``supports_pallas`` (DISGD: Pallas masked scoring + fused sequential
+    ISGD, ``core/disgd.make_pallas_worker``). Algorithms without a fast
+    path negotiate down to ``"scan"`` with a warning
+    (``algorithm.negotiated_backend``) instead of failing mid-run.
   * ``"shard_map"`` — each S&R worker placed at a mesh coordinate
     (``core/distributed.py``) instead of a ``vmap`` lane.
 
@@ -50,14 +49,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import dics as dics_lib
-from repro.core import disgd as disgd_lib
+from repro.core import algorithm as algorithm_lib
 from repro.core import forgetting as forgetting_lib
 from repro.core import routing, state as state_lib
 from repro.core.evaluator import RecallAccumulator
 from repro.drift import controller as controller_lib
 from repro.drift import detector as detector_lib
-from repro.kernels import ops
 
 __all__ = ["make_worker_fn", "make_pallas_worker_fn", "run_stream_device",
            "PublishEvent"]
@@ -68,19 +65,12 @@ def make_worker_fn(cfg) -> Callable:
 
     Returns ``worker(states, ev_u, ev_i) -> (states, hits, evaluated)``
     with everything laid out ``[n_c, ...]``. ``pipeline.make_worker_step``
-    jits this directly; the engine inlines it into its scan body.
+    jits this directly; the engine inlines it into its scan body. The
+    per-worker step comes from the registered :class:`~repro.core.
+    algorithm.Algorithm` — the engine never dispatches on names.
     """
-    hyper = cfg.resolved_hyper()
-    key = jax.random.key(cfg.seed)
-
-    if cfg.algorithm == "disgd":
-        def one(state, ev):
-            return disgd_lib.disgd_worker_step(state, ev, hyper, key)
-    elif cfg.algorithm == "dics":
-        def one(state, ev):
-            return dics_lib.dics_worker_step(state, ev, hyper)
-    else:
-        raise ValueError(cfg.algorithm)
+    algo = algorithm_lib.get_algorithm(cfg.algorithm)
+    one = algo.make_worker_step(cfg.resolved_hyper(), jax.random.key(cfg.seed))
 
     stepped = jax.vmap(one, in_axes=(0, 0))
 
@@ -90,106 +80,25 @@ def make_worker_fn(cfg) -> Callable:
     return worker
 
 
-# ---------------------------------------------------------------------------
-# Pallas fast-path worker (DISGD)
-# ---------------------------------------------------------------------------
-
-
 def make_pallas_worker_fn(cfg) -> Callable:
-    """DISGD worker step built on the Pallas kernels.
+    """Pallas fast-path worker for algorithms that advertise one.
 
-    Scoring for the whole bucket is one masked-matmul kernel call against
-    the state at bucket start (instead of ``capacity`` sequential top-k
-    passes); training applies the fused sequential ISGD kernel, which is
-    exact — factors match the reference step whenever ids do not collide
-    in the slot tables. DICS has no kernel fast path.
+    An explicit request for an impossible fast path raises (the
+    ``supports_pallas`` capability flag is the contract); backend
+    *negotiation* (``algorithm.negotiated_backend``) checks the flag
+    first and silently degrades to the reference scan worker instead.
     """
-    if cfg.algorithm != "disgd":
-        raise ValueError("backend='pallas' supports algorithm='disgd' only")
-    hyper = cfg.resolved_hyper()
-    key = jax.random.key(cfg.seed)
-    u_cap, i_cap, k = hyper.u_cap, hyper.i_cap, hyper.k
-
-    init_batch = jax.vmap(
-        lambda ident: disgd_lib.init_vector(key, ident, k, hyper.init_scale)
-    )
-
-    def worker_one(st, ev_u, ev_i):
-        valid = ev_u >= 0
-        t = st.tables
-        u_slot = state_lib.slot_of(ev_u, hyper.g, u_cap)
-        i_slot = state_lib.slot_of(ev_i, hyper.n_i, i_cap)
-        # "Known at bucket start": the slot already holds this exact id.
-        known_u = t.user_ids[u_slot] == ev_u
-        known_i = t.item_ids[i_slot] == ev_i
-
-        init_u = init_batch(ev_u)                       # [cap, k]
-        init_i = init_batch(ev_i)
-
-        # --- recommend (batched Pallas masked scoring) ---
-        u_vecs_b = jnp.where(known_u[:, None], st.user_vecs[u_slot], init_u)
-        rated_rows = jnp.where(known_u[:, None], st.rated[u_slot], False)
-        cand = (t.item_ids >= 0)[None, :] & ~rated_rows & valid[:, None]
-        scores = ops.masked_scores(u_vecs_b, st.item_vecs, cand)
-        top_scores, top_idx = jax.lax.top_k(
-            scores, min(hyper.top_n, scores.shape[-1])
-        )
-        hits = jnp.any(
-            (t.item_ids[top_idx] == ev_i[:, None]) & jnp.isfinite(top_scores),
-            axis=-1,
-        ) & valid & known_i
-
-        # --- train (fused sequential ISGD kernel) ---
-        # Seed unseen ids first so the kernel's gather reads the same init
-        # the reference uses at the id's first event.
-        seed_u = valid & ~known_u
-        seed_i = valid & ~known_i
-        uv = st.user_vecs.at[jnp.where(seed_u, u_slot, u_cap)].set(
-            init_u, mode="drop")
-        iv = st.item_vecs.at[jnp.where(seed_i, i_slot, i_cap)].set(
-            init_i, mode="drop")
-        uv, iv = ops.isgd_update(
-            uv, iv, u_slot, i_slot, valid, eta=hyper.eta, lam=hyper.lam
-        )
-
-        # --- bookkeeping (batched; matches the reference modulo slot
-        # collisions, which the fast path resolves last-writer-wins) ---
-        vslot_u = jnp.where(valid, u_slot, u_cap)
-        vslot_i = jnp.where(valid, i_slot, i_cap)
-        user_ids = t.user_ids.at[vslot_u].set(ev_u, mode="drop")
-        item_ids = t.item_ids.at[vslot_i].set(ev_i, mode="drop")
-        event_clock = t.clock + jnp.cumsum(valid.astype(jnp.int32))
-        clock = t.clock + jnp.sum(valid.astype(jnp.int32))
-        user_ts = t.user_ts.at[vslot_u].max(event_clock, mode="drop")
-        item_ts = t.item_ts.at[vslot_i].max(event_clock, mode="drop")
-
-        u_touch = jnp.zeros((u_cap,), jnp.int32).at[vslot_u].add(
-            valid.astype(jnp.int32), mode="drop")
-        i_touch = jnp.zeros((i_cap,), jnp.int32).at[vslot_i].add(
-            valid.astype(jnp.int32), mode="drop")
-        u_evicted = user_ids != t.user_ids    # tenant changed this batch
-        i_evicted = item_ids != t.item_ids
-        user_freq = jnp.where(u_evicted, 0, t.user_freq) + u_touch
-        item_freq = jnp.where(i_evicted, 0, t.item_freq) + i_touch
-
-        rated = st.rated & ~u_evicted[:, None] & ~i_evicted[None, :]
-        flat = jnp.where(valid, u_slot * i_cap + i_slot, u_cap * i_cap)
-        rated = rated.reshape(-1).at[flat].set(True, mode="drop").reshape(
-            u_cap, i_cap)
-
-        tables = t._replace(
-            user_ids=user_ids, item_ids=item_ids,
-            user_freq=user_freq, item_freq=item_freq,
-            user_ts=user_ts, item_ts=item_ts, clock=clock,
-        )
-        new_st = state_lib.DisgdState(
-            tables=tables, user_vecs=uv, item_vecs=iv, rated=rated)
-        return new_st, hits, valid
-
-    stepped = jax.vmap(worker_one, in_axes=(0, 0, 0))
+    algo = algorithm_lib.get_algorithm(cfg.algorithm)
+    if not algo.supports_pallas:
+        raise ValueError(
+            f"backend='pallas' is not supported by algorithm "
+            f"{cfg.algorithm!r} (supports_pallas=False)")
+    one = algo.make_pallas_worker_step(cfg.resolved_hyper(),
+                                       jax.random.key(cfg.seed))
+    stepped = jax.vmap(one, in_axes=(0, 0))
 
     def worker(states, ev_u, ev_i):
-        return stepped(states, ev_u, ev_i)
+        return stepped(states, (ev_u, ev_i))
 
     return worker
 
@@ -200,7 +109,7 @@ def make_pallas_worker_fn(cfg) -> Callable:
 
 
 def _resolve_worker_fn(cfg, mesh=None) -> Callable:
-    backend = cfg.backend
+    backend = algorithm_lib.negotiated_backend(cfg)
     if backend in ("scan", "host"):
         return make_worker_fn(cfg)
     if backend == "pallas":

@@ -31,21 +31,22 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import dics as dics_lib
-from repro.core import disgd as disgd_lib
+from repro.core import algorithm as algorithm_lib
 from repro.core import forgetting as forgetting_lib
 from repro.core import routing, state as state_lib
 from repro.core.evaluator import RecallAccumulator
 from repro.core.regrid import CheckpointShapeError
 
-__all__ = ["StreamConfig", "StreamResult", "run_stream", "make_worker_step",
+__all__ = ["StreamConfig", "StreamResult", "RestoredCheckpoint", "run_stream",
+           "make_worker_step", "init_states",
            "save_stream_checkpoint", "restore_stream_checkpoint",
            "CheckpointShapeError", "LOGICAL_FORMAT"]
 
 
 @dataclasses.dataclass(frozen=True)
 class StreamConfig:
-    algorithm: str = "disgd"                 # "disgd" | "dics"
+    # Registry key into repro.core.algorithm ("disgd", "dics", plugins…).
+    algorithm: str = "disgd"
     grid: routing.GridSpec = routing.GridSpec(1, 0)
     micro_batch: int = 2048
     capacity_factor: float = 2.0             # bucket capacity vs fair share
@@ -63,8 +64,7 @@ class StreamConfig:
     def resolved_hyper(self):
         h = self.hyper
         if h is None:
-            h = (disgd_lib.DisgdHyper() if self.algorithm == "disgd"
-                 else dics_lib.DicsHyper())
+            h = algorithm_lib.get_algorithm(self.algorithm).default_hyper()
         return h._replace(n_i=self.grid.n_i, g=self.grid.g)
 
     @property
@@ -134,11 +134,8 @@ def _make_worker_step_cached(cfg: StreamConfig) -> Callable:
 
 
 def init_states(cfg: StreamConfig):
-    hyper = cfg.resolved_hyper()
-    if cfg.algorithm == "disgd":
-        one = state_lib.init_disgd_state(hyper.u_cap, hyper.i_cap, hyper.k)
-    else:
-        one = state_lib.init_dics_state(hyper.u_cap, hyper.i_cap)
+    one = algorithm_lib.get_algorithm(cfg.algorithm).init_state(
+        cfg.resolved_hyper())
     n_c = cfg.grid.n_c
     return jax.tree.map(lambda x: jnp.broadcast_to(x, (n_c,) + x.shape), one)
 
@@ -165,7 +162,10 @@ def run_stream(users: np.ndarray, items: np.ndarray, cfg: StreamConfig,
     the configured grid) or call ``regrid.regrid`` first.
     ``events_processed``/recall in the result cover the resumed segment.
     """
-    if cfg.backend != "host":
+    # Backend selection negotiates against the algorithm's capability
+    # flags (e.g. pallas without a fast path degrades to scan, with one
+    # warning) instead of raising mid-run.
+    if algorithm_lib.negotiated_backend(cfg) != "host":
         from repro.core import engine
 
         return engine.run_stream_device(
@@ -392,12 +392,13 @@ def save_stream_checkpoint(directory: str, events_processed: int, states,
     if grid is None:
         tree["states"] = jax.tree.map(np.asarray, states)
     else:
-        from repro.core import regrid as regrid_lib
-        from repro.core.state import DicsState
-
         if algorithm is None:
-            algorithm = "dics" if isinstance(states, DicsState) else "disgd"
-        logical = regrid_lib.extract_logical(states, grid)
+            # Best-effort: state containers are shared across algorithms,
+            # so callers that know the registry key (StreamSession does)
+            # pass it explicitly.
+            algorithm = algorithm_lib.infer_algorithm(states)
+        logical = algorithm_lib.get_algorithm(algorithm).extract_logical(
+            states, grid)
         tree.update({
             "format": LOGICAL_FORMAT,
             "algorithm": algorithm,
@@ -407,19 +408,44 @@ def save_stream_checkpoint(directory: str, events_processed: int, states,
     return save_checkpoint(directory, events_processed, tree)
 
 
+@dataclasses.dataclass
+class RestoredCheckpoint:
+    """What ``restore_stream_checkpoint`` hands back, by name.
+
+    ``states`` are shaped for the restoring config's grid; ``carry`` is
+    the ``(carry_u, carry_i)`` overflow re-queue; ``detector`` is the
+    saved drift ``DetectorState`` (a tuple of host arrays for
+    ``run_stream(initial_detector=...)``) or ``None`` for checkpoints
+    written without one.
+
+    Iterating yields the legacy
+    ``(events_processed, states, carry, detector)`` 4-tuple so existing
+    unpack sites keep working for one release — new code should use the
+    named fields (or the ``StreamSession.restore`` facade).
+    """
+
+    events_processed: int
+    states: Any
+    carry: tuple
+    detector: Any = None
+
+    def __iter__(self):
+        return iter((self.events_processed, self.states, self.carry,
+                     self.detector))
+
+
 def restore_stream_checkpoint(directory: str, cfg: StreamConfig,
-                              step: int | None = None):
+                              step: int | None = None) -> RestoredCheckpoint:
     """Restore worker states shaped like ``init_states(cfg)``.
 
     Grid-portable (logical-format) checkpoints restore at whatever grid
-    ``cfg`` configures, regridding on the fly; legacy fixed-shape
-    checkpoints must match the configured grid or raise
-    ``CheckpointShapeError``.
+    ``cfg`` configures, regridding on the fly through the algorithm's
+    ``build_states`` hook; legacy fixed-shape checkpoints must match the
+    configured grid (validated against the algorithm's
+    ``state_template`` schema) or raise ``CheckpointShapeError``.
 
-    Returns ``(events_processed, states, carry, detector)`` — ``detector``
-    is the saved ``DetectorState`` (as a tuple of host arrays, pass it to
-    ``run_stream(initial_detector=...)``) or ``None`` for checkpoints
-    written without one.
+    Returns a :class:`RestoredCheckpoint` (iterable as the legacy
+    4-tuple for one release of back-compat).
     """
     from repro.checkpoint import restore_checkpoint
     from repro.core import regrid as regrid_lib
@@ -428,6 +454,7 @@ def restore_stream_checkpoint(directory: str, cfg: StreamConfig,
     carry = (tree["carry_u"], tree["carry_i"])
     detector = tree.get("detector")
     hyper = cfg.resolved_hyper()
+    algo = algorithm_lib.get_algorithm(cfg.algorithm)
 
     fmt = tree.get("format")
     if fmt is not None:
@@ -441,13 +468,18 @@ def restore_stream_checkpoint(directory: str, cfg: StreamConfig,
         src = routing.GridSpec.rect(n_i, g)
         logical = regrid_lib.LogicalState(
             *(jnp.asarray(leaf) for leaf in tree["logical"]))
-        states = regrid_lib.build_states(
+        states = algo.build_states(
             logical, src=src, dst=cfg.grid,
             u_cap=hyper.u_cap, i_cap=hyper.i_cap)
-        return events_processed, states, carry, detector
+        return RestoredCheckpoint(events_processed, states, carry, detector)
 
-    template = init_states(cfg)
-    flat_t, treedef = jax.tree.flatten(template)
+    # Legacy fixed-shape payload: validate against the algorithm's
+    # checkpoint schema (single-worker template stacked over the grid).
+    one = algo.state_template(hyper)
+    n_c = cfg.grid.n_c
+    flat_one, treedef = jax.tree.flatten(one)
+    flat_t = [jax.ShapeDtypeStruct((n_c,) + s.shape, s.dtype)
+              for s in flat_one]
     flat_s = jax.tree.leaves(tree["states"])
     ckpt_workers = flat_s[0].shape[0] if flat_s and flat_s[0].ndim else "?"
     if len(flat_t) != len(flat_s):
@@ -464,4 +496,4 @@ def restore_stream_checkpoint(directory: str, cfg: StreamConfig,
         treedef,
         [jnp.asarray(s, t.dtype) for s, t in zip(flat_s, flat_t)],
     )
-    return events_processed, states, carry, detector
+    return RestoredCheckpoint(events_processed, states, carry, detector)

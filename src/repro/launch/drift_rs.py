@@ -24,8 +24,7 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.dics import DicsHyper
-from repro.core.disgd import DisgdHyper
+from repro.core.algorithm import get_algorithm, registered
 from repro.core.forgetting import ForgettingConfig
 from repro.core.pipeline import (StreamConfig, restore_stream_checkpoint,
                                  run_stream, save_stream_checkpoint)
@@ -36,7 +35,7 @@ from repro.drift import DriftPolicy, list_scenarios, make_scenario, recovery_rep
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--scenario", default="abrupt", choices=list_scenarios())
-    ap.add_argument("--algorithm", default="dics", choices=("disgd", "dics"))
+    ap.add_argument("--algorithm", default="dics", choices=registered())
     ap.add_argument("--policy", default="adaptive",
                     choices=("none", "fixed", "adaptive"))
     ap.add_argument("--events", type=int, default=32768,
@@ -55,9 +54,8 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     sc = make_scenario(args.scenario, events=args.events, seed=args.seed)
-    hyper = (DisgdHyper(u_cap=args.u_cap, i_cap=args.i_cap)
-             if args.algorithm == "disgd"
-             else DicsHyper(u_cap=args.u_cap, i_cap=args.i_cap))
+    hyper = get_algorithm(args.algorithm).default_hyper()._replace(
+        u_cap=args.u_cap, i_cap=args.i_cap)
     cfg = StreamConfig(algorithm=args.algorithm, grid=GridSpec(args.n_i),
                        micro_batch=args.micro_batch, hyper=hyper,
                        backend=args.backend)
@@ -92,10 +90,11 @@ def main(argv=None):
     if args.ckpt_dir:
         save_stream_checkpoint(args.ckpt_dir, res.events_processed,
                                res.final_states, grid=cfg.grid,
+                               algorithm=args.algorithm,
                                detector=res.final_detector)
-        _, _, _, det = restore_stream_checkpoint(args.ckpt_dir, cfg)
+        ck = restore_stream_checkpoint(args.ckpt_dir, cfg)
         state = ("restored with detector state"
-                 if det is not None else "restored (no detector)")
+                 if ck.detector is not None else "restored (no detector)")
         print(f"[drift_rs] checkpoint @ {res.events_processed} events -> "
               f"{args.ckpt_dir}: {state}")
     return res

@@ -33,7 +33,6 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import ARCH_IDS, SHAPES, get_config
 from repro.configs.shapes import microbatches_for, plan_for
 from repro.core import routing
-from repro.core.disgd import DisgdHyper
 from repro.core.pipeline import StreamConfig
 from repro.launch.mesh import make_production_mesh
 from repro.models import flags
@@ -367,20 +366,27 @@ def lower_combo(arch_id: str, shape_name: str, *, multi_pod: bool = False,
     return report
 
 
+# Production-scale capacity presets per algorithm (data, not dispatch):
+# factor models afford big tables; DICS carries an O(i_cap^2) co matrix.
+RECSYS_HYPER_PRESETS = {
+    "disgd": dict(k=32, u_cap=4096, i_cap=2048),
+    "bpr": dict(k=32, u_cap=4096, i_cap=2048),
+    "dics": dict(u_cap=1024, i_cap=512),
+}
+
+
 def lower_recsys(*, multi_pod: bool = False, algorithm: str = "disgd") -> dict:
     """Lower+compile the paper's S&R grid step under shard_map."""
     from repro.core import distributed as dist
-    from repro.core.dics import DicsHyper
+    from repro.core.algorithm import get_algorithm
 
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_i = mesh.shape["model"]
     g = int(np.prod([mesh.shape[a] for a in ("pod", "data")
                      if a in mesh.shape]))
     grid = routing.GridSpec(n_i, g - n_i)
-    if algorithm == "disgd":
-        hyper = DisgdHyper(k=32, u_cap=4096, i_cap=2048)
-    else:
-        hyper = DicsHyper(u_cap=1024, i_cap=512)
+    hyper = get_algorithm(algorithm).default_hyper()._replace(
+        **RECSYS_HYPER_PRESETS.get(algorithm, {}))
     cfg = StreamConfig(algorithm=algorithm, grid=grid, micro_batch=65536,
                        hyper=hyper)
     cap = cfg.bucket_capacity

@@ -28,8 +28,7 @@ import time
 import numpy as np
 
 from repro.checkpoint import latest_step
-from repro.core.dics import DicsHyper
-from repro.core.disgd import DisgdHyper
+from repro.core.algorithm import get_algorithm, registered
 from repro.core.pipeline import (StreamConfig, restore_stream_checkpoint,
                                  run_stream, save_stream_checkpoint)
 from repro.core.routing import GridSpec
@@ -45,7 +44,7 @@ def parse_grid(spec: str) -> GridSpec:
 
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--algorithm", default="disgd", choices=("disgd", "dics"))
+    ap.add_argument("--algorithm", default="disgd", choices=registered())
     ap.add_argument("--from-grid", default="2x2", type=parse_grid,
                     help="initial n_i x g worker grid")
     ap.add_argument("--to-grid", default="4x4", type=parse_grid,
@@ -67,12 +66,8 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    if args.algorithm == "disgd":
-        hyper = DisgdHyper(u_cap=args.u_cap, i_cap=args.i_cap,
-                           top_n=args.top_n)
-    else:
-        hyper = DicsHyper(u_cap=args.u_cap, i_cap=args.i_cap,
-                          top_n=args.top_n)
+    hyper = get_algorithm(args.algorithm).default_hyper()._replace(
+        u_cap=args.u_cap, i_cap=args.i_cap, top_n=args.top_n)
     cfg_a = StreamConfig(algorithm=args.algorithm, grid=args.from_grid,
                          micro_batch=args.micro_batch, hyper=hyper,
                          backend=args.backend)
@@ -110,7 +105,7 @@ def main(argv=None):
     # --- checkpoint in the grid-portable logical format -----------------
     ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="rescale_rs_")
     save_stream_checkpoint(ckpt_dir, res1.events_processed, res1.final_states,
-                           grid=args.from_grid)
+                           grid=args.from_grid, algorithm=args.algorithm)
     print(f"[rescale_rs] logical checkpoint @ {res1.events_processed} "
           f"events -> {ckpt_dir}")
 
@@ -118,8 +113,8 @@ def main(argv=None):
     cfg_b = dataclasses.replace(cfg_a, grid=args.to_grid)
     step = latest_step(ckpt_dir)
     t0 = time.perf_counter()
-    events_done, states, carry, _ = restore_stream_checkpoint(ckpt_dir, cfg_b,
-                                                              step)
+    ck = restore_stream_checkpoint(ckpt_dir, cfg_b, step)
+    events_done, states, carry = ck.events_processed, ck.states, ck.carry
     restore_s = time.perf_counter() - t0
     print(f"[rescale_rs] restored step {step} at {args.to_grid.shape} "
           f"({cfg_b.grid.n_c} workers) in {restore_s * 1e3:.1f}ms")

@@ -21,8 +21,7 @@ import time
 
 import numpy as np
 
-from repro.core.dics import DicsHyper
-from repro.core.disgd import DisgdHyper
+from repro.core.algorithm import registered, get_algorithm
 from repro.core.pipeline import StreamConfig, run_stream
 from repro.core.routing import GridSpec
 from repro.data.stream import MOVIELENS_25M, scaled, synth_stream
@@ -31,7 +30,7 @@ from repro.serve import QueryFrontend, ServeConfig, SnapshotStore
 
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--algorithm", default="disgd", choices=("disgd", "dics"))
+    ap.add_argument("--algorithm", default="disgd", choices=registered())
     ap.add_argument("--n-i", type=int, default=2, help="item splits (grid)")
     ap.add_argument("--events", type=int, default=8192)
     ap.add_argument("--micro-batch", type=int, default=256)
@@ -50,12 +49,8 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     grid = GridSpec(args.n_i)
-    if args.algorithm == "disgd":
-        hyper = DisgdHyper(u_cap=args.u_cap, i_cap=args.i_cap,
-                           top_n=args.top_n)
-    else:
-        hyper = DicsHyper(u_cap=args.u_cap, i_cap=args.i_cap,
-                          top_n=args.top_n)
+    hyper = get_algorithm(args.algorithm).default_hyper()._replace(
+        u_cap=args.u_cap, i_cap=args.i_cap, top_n=args.top_n)
     cfg = StreamConfig(algorithm=args.algorithm, grid=grid,
                        micro_batch=args.micro_batch, hyper=hyper,
                        backend=args.backend)

@@ -40,7 +40,7 @@ __all__ = ["ServeConfig", "ServeResponse", "QueryFrontend"]
 class ServeConfig:
     """Static parameters of the serving plane (jit keys + knobs)."""
 
-    algorithm: str = "disgd"              # "disgd" | "dics"
+    algorithm: str = "disgd"              # registry key (core/algorithm.py)
     grid: routing.GridSpec = routing.GridSpec(1)
     u_cap: int = 1024
     top_n: int = 10

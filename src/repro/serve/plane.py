@@ -28,9 +28,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import dics as dics_lib
+from repro.core import algorithm as algorithm_lib
 from repro.core import routing
-from repro.core import serve as serve_lib
 from repro.kernels import ops
 
 __all__ = ["grid_topn", "query_capacity"]
@@ -61,7 +60,8 @@ def grid_topn(states, user_ids, *, algorithm: str = "disgd",
         layout, worker key = row * g + col) — typically a read-only
         snapshot from ``repro.serve.snapshot``.
       user_ids: i32[Q] global user ids; -1 entries are padding.
-      algorithm: "disgd" | "dics" — which serving leaf scores the splits.
+      algorithm: registry key (``repro.core.algorithm``) — the registered
+        algorithm's serve leaf scores the splits.
       grid: the ``GridSpec`` the states are shaped for (hashable, so a jit
         key) — serving adapts to whatever grid training (or a regrid)
         produced; there is no baked-in shape.
@@ -93,16 +93,11 @@ def grid_topn(states, user_ids, *, algorithm: str = "disgd",
     grid_states = jax.tree.map(
         lambda x: x.reshape((n_i, g) + x.shape[1:]), states)
 
-    if algorithm == "disgd":
-        def leaf(st, uq):
-            return serve_lib.partial_topn(
-                st, uq, top_n=top_n, g=g, u_cap=u_cap, use_kernel=use_kernel)
-    elif algorithm == "dics":
-        def leaf(st, uq):
-            return dics_lib.dics_partial_topn(
-                st, uq, top_n=top_n, k_nn=k_nn, g=g, u_cap=u_cap)
-    else:
-        raise ValueError(f"unknown serving algorithm {algorithm!r}")
+    # Registry dispatch happens at trace time (``algorithm`` is a static
+    # jit key), so the per-call cost is identical to the old hard-coded
+    # branches.
+    leaf = algorithm_lib.get_algorithm(algorithm).make_serve_leaf(
+        top_n=top_n, g=g, u_cap=u_cap, k_nn=k_nn, use_kernel=use_kernel)
 
     per_col = jax.vmap(leaf, in_axes=(0, 0))        # over the g columns
     per_grid = jax.vmap(per_col, in_axes=(0, None))  # over the n_i rows

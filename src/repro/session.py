@@ -1,0 +1,189 @@
+"""StreamSession — one public facade over train / serve / rescale / drift.
+
+The runtime grew organically: ``run_stream`` / ``run_stream_device`` for
+training, ``SnapshotStore`` + ``QueryFrontend`` + ``grid_topn`` for
+serving, ``regrid`` + ``retarget`` for elasticity, a growing positional
+tuple out of ``restore_stream_checkpoint``, and detector state threaded
+by hand for closed-loop drift. This module collapses those entry points
+into one object with a five-verb lifecycle:
+
+    cfg = repro.StreamConfig(algorithm="disgd", grid=repro.GridSpec(2))
+    session = repro.StreamSession(cfg)
+    session.ingest(users, items)        # incremental; call repeatedly
+    session.recommend(user_ids)         # snapshot-backed grid top-N
+    session.checkpoint(directory)       # grid-portable, detector included
+    session = repro.StreamSession.restore(directory, cfg)
+    session.rescale(repro.GridSpec.rect(4, 2))   # elastic regrid + serve
+
+Everything underneath stays available for power users; the facade only
+owns the *plumbing* — carrying states, the overflow re-queue, the drift
+detector, and the serving snapshot across calls — never the math.
+Algorithms resolve through the registry (``repro.core.algorithm``), so a
+session drives any registered plugin (e.g. ``algorithm="bpr"``)
+identically to the paper's pair.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+from repro.core import algorithm as algorithm_lib
+from repro.core import pipeline as pipeline_lib
+from repro.core.pipeline import (RestoredCheckpoint, StreamConfig,
+                                 StreamResult, restore_stream_checkpoint,
+                                 run_stream, save_stream_checkpoint)
+from repro.core.routing import GridSpec
+from repro.serve import (QueryFrontend, ServeConfig, ServeResponse,
+                         SnapshotStore)
+
+__all__ = ["StreamSession", "RestoredCheckpoint"]
+
+
+class StreamSession:
+    """A live streaming-recommender: state + serving plane + drift loop.
+
+    Construction is cheap (zero states for ``cfg.grid``); all heavy work
+    happens in the verbs. The session is single-writer: ``ingest`` /
+    ``rescale`` mutate it, ``recommend`` reads the last published
+    snapshot (so it can safely run from other threads between writes,
+    the same contract as ``SnapshotStore``).
+    """
+
+    def __init__(self, cfg: StreamConfig, *, serve: ServeConfig | None = None,
+                 snapshot_slots: int = 2):
+        self.cfg = cfg
+        self.algorithm = algorithm_lib.get_algorithm(cfg.algorithm)
+        self.store = SnapshotStore(slots=snapshot_slots)
+        # The frontend owns the serving config (`self._frontend.cfg`);
+        # retarget/recommend mutate it there, never a mirror here.
+        self._frontend = QueryFrontend(
+            self.store,
+            serve if serve is not None else ServeConfig.from_stream(cfg))
+        self._states = pipeline_lib.init_states(cfg)
+        self._carry: tuple = (None, None)
+        self._detector: Any = None
+        self.events_processed = 0
+        self.forgets = 0
+
+    # -- introspection ----------------------------------------------------
+
+    @property
+    def states(self):
+        """Current stacked ``[n_c, ...]`` worker-state pytree (read-only)."""
+        return self._states
+
+    @property
+    def grid(self) -> GridSpec:
+        return self.cfg.grid
+
+    # -- train ------------------------------------------------------------
+
+    def ingest(self, users, items, *, publish_every: int = 0,
+               verbose: bool = False) -> StreamResult:
+        """Stream a batch of ``<user, item>`` events through the engine.
+
+        Incremental and resumable: each call continues from the states,
+        overflow carry, and drift-detector baseline the previous call
+        (or ``restore``) left behind. With ``publish_every > 0`` the
+        engine additionally publishes mid-run snapshots into this
+        session's store every that many micro-batches (bounded serving
+        staleness while a long ingest is in flight); the final state is
+        always published. Returns the segment's ``StreamResult``.
+        """
+        res = run_stream(
+            np.asarray(users), np.asarray(items), self.cfg, verbose=verbose,
+            publish_every=publish_every,
+            on_publish=(self._on_publish if publish_every else None),
+            initial_states=self._states, initial_carry=self._carry,
+            initial_detector=self._detector)
+        self._states = res.final_states
+        # run_stream drains the re-queue before returning (flushed or
+        # counted in res.dropped), so the carry is consumed.
+        self._carry = (None, None)
+        if res.final_detector is not None:
+            self._detector = res.final_detector
+        self.events_processed += res.events_processed
+        self.forgets += res.forgets
+        self._publish()
+        return res
+
+    def _on_publish(self, ev) -> None:
+        self.store.publish(ev.states, self.events_processed + ev.events_processed,
+                           self.forgets + ev.forgets)
+
+    def _publish(self) -> None:
+        self.store.publish(self._states, self.events_processed, self.forgets)
+
+    # -- serve ------------------------------------------------------------
+
+    def recommend(self, user_ids, n: int | None = None) -> ServeResponse:
+        """Grid-wide top-N for a batch of users, from the last snapshot.
+
+        Runs the full serving plane: column fan-out + cross-split merge
+        (``grid_topn``), LRU response cache, and the popularity fallback
+        for unknown users. ``n`` overrides the list length (a new jit
+        signature, so prefer a fixed ``n``); default is the serving
+        config's ``top_n``.
+        """
+        if self.store.latest_version == 0:
+            self._publish()     # cold session: serve the zero state
+        if n is not None and n != self._frontend.cfg.top_n:
+            self._frontend = QueryFrontend(
+                self.store, dataclasses.replace(self._frontend.cfg, top_n=n))
+        return self._frontend.serve(user_ids)
+
+    # -- checkpoint / restore ---------------------------------------------
+
+    def checkpoint(self, directory: str) -> str:
+        """Write a grid-portable checkpoint (detector state included)."""
+        return save_stream_checkpoint(
+            directory, self.events_processed, self._states,
+            carry=self._carry, grid=self.cfg.grid,
+            algorithm=self.cfg.algorithm, detector=self._detector)
+
+    @classmethod
+    def restore(cls, directory: str, cfg: StreamConfig,
+                step: int | None = None, *,
+                serve: ServeConfig | None = None) -> "StreamSession":
+        """Resume a session from ``checkpoint`` output, at ``cfg.grid``.
+
+        Grid-portable checkpoints regrid to the configured shape on the
+        fly, so restoring at a different ``(n_i, g)`` than the save IS
+        the scale-out path (see also :meth:`rescale` for live states).
+        """
+        ck: RestoredCheckpoint = restore_stream_checkpoint(directory, cfg, step)
+        session = cls(cfg, serve=serve)
+        session._states = ck.states
+        session._carry = ck.carry
+        session._detector = ck.detector
+        session.events_processed = int(ck.events_processed)
+        session._publish()
+        return session
+
+    # -- elasticity -------------------------------------------------------
+
+    def rescale(self, grid: GridSpec, *, u_cap: int | None = None,
+                i_cap: int | None = None, merge: str = "fresh") -> None:
+        """Reshape the live worker grid to ``grid`` (elastic S&R).
+
+        Runs the algorithm's regrid hooks (logical extract + rebuild),
+        swaps the session config to the new shape (optionally with new
+        per-worker capacities), publishes the resharded snapshot, and
+        retargets the query front-end — queries served right after this
+        call already answer from the new grid, before any retraining.
+        """
+        hyper = self.cfg.resolved_hyper()
+        new_u = u_cap if u_cap is not None else hyper.u_cap
+        new_i = i_cap if i_cap is not None else hyper.i_cap
+        logical = self.algorithm.extract_logical(self._states, self.cfg.grid)
+        self._states = self.algorithm.build_states(
+            logical, src=self.cfg.grid, dst=grid,
+            u_cap=new_u, i_cap=new_i, merge=merge)
+        self.cfg = dataclasses.replace(
+            self.cfg, grid=grid,
+            hyper=hyper._replace(u_cap=new_u, i_cap=new_i))
+        self._publish()
+        self._frontend.retarget(grid, u_cap=u_cap)

@@ -1,0 +1,297 @@
+"""Public API surface + algorithm-protocol conformance (ISSUE 5).
+
+Pins three contracts:
+
+  * ``repro.__all__`` is the stable import surface — additions and
+    removals must be deliberate (update the snapshot below with the
+    README's Public API section);
+  * every registered algorithm satisfies the :class:`~repro.core.
+    algorithm.Algorithm` protocol: hyper / state / worker / serve /
+    regrid hooks present and shape-consistent at a tiny grid;
+  * the third algorithm (BPR-MF, ``repro/algos/bpr.py``) — written
+    entirely against the public protocol, with zero engine edits —
+    passes the same suites the paper's pair does: engine host/scan
+    parity, grid-serve merge invariance, identity-regrid bit-exactness,
+    closed-loop drift, and the full session lifecycle.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro
+from repro.core import serve as serve_lib
+from repro.core.pipeline import StreamConfig, init_states, run_stream
+from repro.core.routing import GridSpec
+
+G22 = GridSpec.rect(2, 2)
+
+# The stable public surface. Changing this set is an API decision:
+# update the snapshot AND the README "Public API" section together.
+EXPECTED_ALL = {
+    "Algorithm", "register", "get_algorithm", "registered",
+    "StreamConfig", "GridSpec", "ForgettingConfig", "DriftPolicy",
+    "DisgdHyper", "DicsHyper", "BprHyper",
+    "StreamSession", "RestoredCheckpoint",
+    "run_stream", "StreamResult",
+    "save_stream_checkpoint", "restore_stream_checkpoint",
+    "ServeConfig", "ServeResponse", "QueryFrontend",
+    "SnapshotStore", "StaleSnapshotError", "grid_topn",
+}
+
+
+def _stream(n=1200, seed=0):
+    from repro.data.stream import MOVIELENS_25M, scaled, synth_stream
+
+    users, items, _ = synth_stream(scaled(MOVIELENS_25M, 0.002), seed=seed)
+    return users[:n], items[:n]
+
+
+def _cfg(algorithm, grid=G22, u_cap=128, i_cap=32, **over):
+    hyper = repro.get_algorithm(algorithm).default_hyper()._replace(
+        u_cap=u_cap, i_cap=i_cap)
+    return StreamConfig(algorithm=algorithm, grid=grid, micro_batch=256,
+                        hyper=hyper, **over)
+
+
+def _clean_bits(result):
+    bits = result.recall.bits()
+    return bits[~np.isnan(bits)]
+
+
+def _assert_trees_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# __all__ snapshot + registry
+# ---------------------------------------------------------------------------
+
+
+def test_public_all_is_pinned():
+    assert set(repro.__all__) == EXPECTED_ALL
+    for name in repro.__all__:
+        assert getattr(repro, name, None) is not None, name
+
+
+def test_builtin_algorithms_registered():
+    assert {"disgd", "dics", "bpr"} <= set(repro.registered())
+
+
+def test_unknown_algorithm_error_names_the_registry():
+    with pytest.raises(KeyError, match="registered"):
+        repro.get_algorithm("svdpp")
+
+
+# ---------------------------------------------------------------------------
+# Protocol conformance for EVERY registered algorithm
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", repro.registered())
+def test_algorithm_protocol_conformance(name):
+    algo = repro.get_algorithm(name)
+    assert algo.name == name
+    assert isinstance(algo.supports_scan, bool)
+    assert isinstance(algo.supports_pallas, bool)
+    assert isinstance(algo.supports_serve_kernel, bool)
+
+    # Hyper contract: the fields the runtime _replaces / reads.
+    hyper = algo.default_hyper()
+    for field in ("u_cap", "i_cap", "top_n", "n_i", "g"):
+        assert field in hyper._fields, field
+    hyper = hyper._replace(n_i=2, g=2, u_cap=16, i_cap=8)
+
+    # State + checkpoint schema agree.
+    state = algo.init_state(hyper)
+    template = algo.state_template(hyper)
+    assert jax.tree.structure(state) == jax.tree.structure(template)
+    for leaf, spec in zip(jax.tree.leaves(state), jax.tree.leaves(template)):
+        assert leaf.shape == spec.shape and leaf.dtype == spec.dtype
+
+    # Worker step: shape contract at a tiny bucket (ids congruent with a
+    # (2, 2) grid's worker (0, 0): u % g == 0, i % n_i == 0).
+    step = jax.jit(algo.make_worker_step(hyper, jax.random.key(0)))
+    ev_u = jnp.asarray([0, 4, 8, -1, 0, 12], jnp.int32)
+    ev_i = jnp.asarray([0, 2, 4, -1, 2, 6], jnp.int32)
+    out, hits, evaluated = step(state, (ev_u, ev_i))
+    assert jax.tree.structure(out) == jax.tree.structure(state)
+    for leaf, spec in zip(jax.tree.leaves(out), jax.tree.leaves(state)):
+        assert leaf.shape == spec.shape and leaf.dtype == spec.dtype
+    assert hits.shape == evaluated.shape == ev_u.shape
+    np.testing.assert_array_equal(np.asarray(evaluated), ev_u >= 0)
+
+    # Serve leaf: partial top-N over the local split, global ids.
+    leaf = algo.make_serve_leaf(top_n=5, g=2, u_cap=16, k_nn=4,
+                                use_kernel=False)
+    ids, scores, known = leaf(out, jnp.asarray([0, 4, 2, -1], jnp.int32))
+    assert ids.shape == scores.shape == (4, 5)
+    assert known.shape == (4,)
+
+    # Regrid hooks: identity rebuild is bit-exact. A single-worker grid
+    # here (a broadcast copy would violate the id-congruence invariants
+    # of a wider grid); the trained-grid identity check runs in
+    # test_bpr_identity_regrid_is_bit_exact / tests/test_regrid.py.
+    hyper1 = hyper._replace(n_i=1, g=1)
+    state1 = algo.init_state(hyper1)
+    step1 = jax.jit(algo.make_worker_step(hyper1, jax.random.key(0)))
+    one1, _, _ = step1(state1, (ev_u, ev_i))
+    g11 = GridSpec.rect(1, 1)
+    stacked = jax.tree.map(lambda x: x[None], one1)
+    logical = algo.extract_logical(stacked, g11)
+    rebuilt = algo.build_states(logical, src=g11, dst=g11,
+                                u_cap=16, i_cap=8)
+    _assert_trees_equal(stacked, rebuilt)
+
+
+# ---------------------------------------------------------------------------
+# The third algorithm through the paper's suites, purely via registration
+# ---------------------------------------------------------------------------
+
+
+def test_bpr_scan_matches_host_bit_for_bit():
+    users, items = _stream()
+    cfg = _cfg("bpr")
+    host = run_stream(users, items, cfg)
+    scan = run_stream(users, items, dataclasses.replace(cfg, backend="scan"))
+    assert scan.events_processed == host.events_processed == users.size
+    assert host.dropped == scan.dropped == 0
+    np.testing.assert_array_equal(_clean_bits(scan), _clean_bits(host))
+    # The pairwise ranking signal is real, not popularity noise.
+    assert host.recall.mean() > 0.1
+
+
+def test_bpr_pallas_negotiates_down_to_scan_with_a_warning():
+    """ISSUE 5 satellite: no mid-run ValueError — the supports_pallas
+    capability negotiates backend='pallas' down to scan, same results."""
+    users, items = _stream(n=600)
+    cfg = _cfg("bpr", backend="scan")
+    with pytest.warns(RuntimeWarning, match="no Pallas fast path"):
+        pal = run_stream(users, items,
+                         dataclasses.replace(cfg, backend="pallas"))
+    scan = run_stream(users, items, cfg)
+    np.testing.assert_array_equal(_clean_bits(pal), _clean_bits(scan))
+
+
+def test_bpr_grid_merge_equals_single_worker_at_ni1():
+    users, items = _stream()
+    cfg = _cfg("bpr", grid=GridSpec.rect(1, 1), backend="scan")
+    res = run_stream(users, items, cfg)
+    q = jnp.asarray(np.unique(users)[:16], jnp.int32)
+    ids_g, sc_g, known_g, served = repro.grid_topn(
+        res.final_states, q, algorithm="bpr", grid=GridSpec.rect(1, 1),
+        top_n=10, u_cap=128, qcap=16)
+    one = jax.tree.map(lambda x: x[0], res.final_states)
+    ids_s, sc_s = serve_lib.recommend_topn(one, q, top_n=10, g=1, u_cap=128)
+    assert np.asarray(served).all()
+    np.testing.assert_array_equal(np.asarray(ids_g), np.asarray(ids_s))
+    np.testing.assert_allclose(np.asarray(sc_g), np.asarray(sc_s), rtol=1e-6)
+
+
+def test_bpr_grid_merge_invariant_under_split_permutation():
+    users, items = _stream()
+    cfg = _cfg("bpr", grid=GridSpec.rect(2, 1), backend="scan")
+    res = run_stream(users, items, cfg)
+    q = jnp.asarray(np.unique(users)[:16], jnp.int32)
+    kw = dict(algorithm="bpr", grid=GridSpec.rect(2, 1), top_n=10,
+              u_cap=128, qcap=16)
+    ids_a, sc_a, known_a, _ = repro.grid_topn(res.final_states, q, **kw)
+    permuted = jax.tree.map(lambda x: x[jnp.asarray([1, 0])],
+                            res.final_states)
+    ids_b, sc_b, known_b, _ = repro.grid_topn(permuted, q, **kw)
+    np.testing.assert_array_equal(np.asarray(ids_a), np.asarray(ids_b))
+    np.testing.assert_array_equal(np.asarray(known_a), np.asarray(known_b))
+
+
+def test_bpr_identity_regrid_is_bit_exact():
+    users, items = _stream()
+    res = run_stream(users, items, _cfg("bpr", backend="scan"))
+    algo = repro.get_algorithm("bpr")
+    logical = algo.extract_logical(res.final_states, G22)
+    rebuilt = algo.build_states(logical, src=G22, dst=G22,
+                                u_cap=128, i_cap=32)
+    _assert_trees_equal(res.final_states, rebuilt)
+
+
+def test_bpr_adaptive_drift_flags_match_host_scan():
+    from repro.drift import make_scenario
+
+    sc = make_scenario("abrupt", events=8192, seed=0)
+    cfg = _cfg("bpr", grid=GridSpec(2), u_cap=256, i_cap=64,
+               drift=repro.DriftPolicy())
+    host = run_stream(sc.users, sc.items, cfg)
+    scan = run_stream(sc.users, sc.items,
+                      dataclasses.replace(cfg, backend="scan"))
+    assert host.drift_flags is not None and scan.drift_flags is not None
+    np.testing.assert_array_equal(host.drift_flags, scan.drift_flags)
+    assert host.forgets == scan.forgets
+
+
+# ---------------------------------------------------------------------------
+# Session facade lifecycle + RestoredCheckpoint
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("algorithm", ["disgd", "bpr"])
+def test_session_lifecycle_end_to_end(algorithm, tmp_path):
+    """ingest → recommend → checkpoint → restore → ingest → rescale →
+    recommend, with the interrupted run bit-exact vs the straight one."""
+    users, items = _stream(n=2048)
+    cfg = _cfg(algorithm, backend="scan", u_cap=512, i_cap=64)
+    cut = 1024  # micro-batch multiple: the split lands on a scan boundary
+
+    s = repro.StreamSession(cfg)
+    s.ingest(users[:cut], items[:cut])
+    resp = s.recommend(users[:16])
+    assert resp.ids.shape == (16, 10)
+    assert resp.known.any()
+
+    s.checkpoint(str(tmp_path))
+    s2 = repro.StreamSession.restore(str(tmp_path), cfg)
+    assert s2.events_processed == s.events_processed == cut
+    s2.ingest(users[cut:], items[cut:])
+
+    straight = repro.StreamSession(cfg)
+    straight.ingest(users, items)
+    assert s2.events_processed == straight.events_processed == users.size
+    _assert_trees_equal(s2.states, straight.states)
+
+    # Elastic rescale: serve the resharded grid before any retraining.
+    s2.rescale(GridSpec.rect(1, 4))
+    assert s2.grid == GridSpec.rect(1, 4)
+    after = s2.recommend(users[:16])
+    assert after.known.any()
+    rated = set(zip(users.tolist(), items.tolist()))
+    for b, u in enumerate(users[:16].tolist()):
+        for iid in after.ids[b]:
+            if iid >= 0 and after.known[b]:
+                assert (u, int(iid)) not in rated
+
+
+def test_session_recommend_before_ingest_serves_popularity_fallback():
+    cfg = _cfg("disgd", grid=GridSpec(1), u_cap=64, i_cap=16)
+    resp = repro.StreamSession(cfg).recommend([3, 5])
+    assert not resp.known.any()          # zero state: nobody is known
+    assert (resp.ids == -1).all()        # and the popularity head is empty
+
+
+def test_restored_checkpoint_is_named_and_iterable(tmp_path):
+    users, items = _stream(n=512)
+    cfg = _cfg("disgd", backend="scan")
+    s = repro.StreamSession(cfg)
+    s.ingest(users, items)
+    s.checkpoint(str(tmp_path))
+
+    ck = repro.restore_stream_checkpoint(str(tmp_path), cfg)
+    assert isinstance(ck, repro.RestoredCheckpoint)
+    assert ck.events_processed == users.size
+    # One-release back-compat: the legacy 4-tuple unpack still works.
+    n, states, carry, det = ck
+    assert n == ck.events_processed
+    _assert_trees_equal(states, ck.states)
+    assert det is ck.detector

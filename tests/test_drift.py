@@ -290,12 +290,12 @@ def test_adaptive_detector_checkpoint_roundtrip(tmp_path):
     save_stream_checkpoint(str(tmp_path), res.events_processed,
                            res.final_states, grid=cfg.grid,
                            detector=res.final_detector)
-    n, states, carry, det = restore_stream_checkpoint(str(tmp_path), cfg)
-    assert n == res.events_processed
-    assert det is not None
-    for a, b in zip(res.final_detector, det):
+    ck = restore_stream_checkpoint(str(tmp_path), cfg)
+    assert ck.events_processed == res.events_processed
+    assert ck.detector is not None
+    for a, b in zip(res.final_detector, ck.detector):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     # Resume accepts the restored detector on both backends.
     more = run_stream(sc.users[:512], sc.items[:512], cfg,
-                      initial_states=states, initial_detector=det)
+                      initial_states=ck.states, initial_detector=ck.detector)
     assert more.events_processed == 512

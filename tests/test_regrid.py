@@ -30,8 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import regrid as rg
-from repro.core.dics import DicsHyper
-from repro.core.disgd import DisgdHyper
+from repro.core.algorithm import get_algorithm
 from repro.core.pipeline import (CheckpointShapeError, StreamConfig,
                                  restore_stream_checkpoint, run_stream,
                                  save_stream_checkpoint)
@@ -50,8 +49,8 @@ def _stream(n=2048, seed=0):
 
 
 def _cfg(algorithm, grid=G22, u_cap=512, i_cap=64, **over):
-    hyper = (DisgdHyper(u_cap=u_cap, i_cap=i_cap) if algorithm == "disgd"
-             else DicsHyper(u_cap=u_cap, i_cap=i_cap))
+    hyper = get_algorithm(algorithm).default_hyper()._replace(
+        u_cap=u_cap, i_cap=i_cap)
     return StreamConfig(algorithm=algorithm, grid=grid, micro_batch=256,
                         hyper=hyper, backend="scan", **over)
 
@@ -262,12 +261,12 @@ def test_checkpoint_restores_at_a_different_grid(algorithm, tmp_path):
                            res.final_states, grid=G22)
     for dst in TARGETS:
         cfg_dst = _cfg(algorithm, grid=dst)
-        n, states, _, _ = restore_stream_checkpoint(str(tmp_path), cfg_dst)
-        assert n == res.events_processed
-        _assert_trees_equal(states, rg.regrid(res.final_states, G22, dst))
+        ck = restore_stream_checkpoint(str(tmp_path), cfg_dst)
+        assert ck.events_processed == res.events_processed
+        _assert_trees_equal(ck.states, rg.regrid(res.final_states, G22, dst))
     # Same-grid logical restore is the identity.
-    n, states, _, _ = restore_stream_checkpoint(str(tmp_path), cfg)
-    _assert_trees_equal(states, res.final_states)
+    ck = restore_stream_checkpoint(str(tmp_path), cfg)
+    _assert_trees_equal(ck.states, res.final_states)
 
 
 def test_checkpoint_algorithm_mismatch_rejected(tmp_path):
@@ -283,9 +282,9 @@ def test_legacy_checkpoint_restores_and_mismatch_is_actionable(tmp_path):
     cfg = _cfg("disgd")
     res = run_stream(users, items, cfg)
     save_stream_checkpoint(str(tmp_path), 512, res.final_states)  # legacy
-    n, states, _, _ = restore_stream_checkpoint(str(tmp_path), cfg)
-    assert n == 512
-    _assert_trees_equal(states, res.final_states)
+    ck = restore_stream_checkpoint(str(tmp_path), cfg)
+    assert ck.events_processed == 512
+    _assert_trees_equal(ck.states, res.final_states)
 
     with pytest.raises(CheckpointShapeError) as ei:
         restore_stream_checkpoint(str(tmp_path),

@@ -42,9 +42,10 @@ def test_checkpoint_resume_bit_exact(tmp_path):
         ev_u, ev_i = _buckets(u, i, grid, 256)
         states2, _, _ = step(states2, ev_u, ev_i)
     save_stream_checkpoint(str(tmp_path), 512, states2)
-    n, states3, carry, det = restore_stream_checkpoint(str(tmp_path), cfg)
-    assert n == 512
-    assert det is None  # saved without a drift detector
+    ck = restore_stream_checkpoint(str(tmp_path), cfg)
+    states3 = ck.states
+    assert ck.events_processed == 512
+    assert ck.detector is None  # saved without a drift detector
     for u, i in batches[2:]:
         ev_u, ev_i = _buckets(u, i, grid, 256)
         states3, hits_res, _ = step(states3, ev_u, ev_i)
