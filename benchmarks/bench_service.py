@@ -1,0 +1,237 @@
+"""Mixed-load service benchmark: tail latency while training at full rate.
+
+Claim under test: the serving plane keeps its tail latency when the
+trainer runs concurrently — the async publish path keeps snapshot
+rotation off the scan's critical path, and the lazy generation-stamped
+cache means a publish never charges an O(cache) flush to the next query.
+The numbers a deployment actually cares about:
+
+  * p50/p99 query-batch latency *under load* (trainer ingesting at full
+    rate) vs the same path *isolated* (no concurrent ingest);
+  * max sustainable combined events+queries/sec (closed-loop arrivals);
+  * the staleness-at-answer distribution against the publish cadence's
+    bound (``PublishPolicy.staleness_bound_events``);
+  * ingest throughput with serving active vs ingest-only (the write
+    path must not fall over because reads showed up).
+
+``--smoke`` appends a ``service/...`` row to ``BENCH_smoke.json`` and
+**fails (exit 2)** if p99-under-load exceeds 2x the isolated p99
+measured in the same run — the regression gate CI enforces.
+
+  PYTHONPATH=src python -m benchmarks.bench_service            # sweep
+  PYTHONPATH=src python -m benchmarks.bench_service --smoke    # CI gate
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+WARMUP_EVENTS = 512
+WARMUP_QUERIES = 5
+
+
+def _session(algorithm: str, n_i: int, micro_batch: int, every: int,
+             mode: str, query_batch: int):
+    from benchmarks.common import make_cfg
+    from repro.serve import PublishPolicy, ServeConfig
+    from repro.session import StreamSession
+
+    cfg = make_cfg(algorithm, "movielens", n_i, backend="scan",
+                   micro_batch=micro_batch)
+    policy = PublishPolicy(every=every, mode=mode)
+    serve = ServeConfig.from_stream(cfg, batch_size=query_batch,
+                                    publish=policy)
+    return StreamSession(cfg, serve=serve, publish=policy)
+
+
+def _warm(session, users, items, pool, query_batch: int):
+    """Compile both paths so measurements exclude tracing/lowering."""
+    session.ingest(users[:WARMUP_EVENTS], items[:WARMUP_EVENTS])
+    rng = np.random.default_rng(7)
+    for _ in range(WARMUP_QUERIES):
+        session.recommend(rng.choice(pool, size=query_batch))
+    return users[WARMUP_EVENTS:], items[WARMUP_EVENTS:]
+
+
+def _isolated_serve_p99(session, pool, query_batch: int,
+                        repeats: int = 100) -> tuple[float, float]:
+    """(p50_ms, p99_ms) of the same serve path with no concurrent ingest.
+
+    Fresh user draws each call (cache misses dominate, like mixed load).
+    """
+    rng = np.random.default_rng(11)
+    times = np.empty(repeats)
+    for i in range(repeats):
+        q = rng.choice(pool, size=query_batch)
+        t0 = time.perf_counter()
+        session.recommend(q)
+        times[i] = time.perf_counter() - t0
+    return (float(np.percentile(times, 50) * 1e3),
+            float(np.percentile(times, 99) * 1e3))
+
+
+def _ingest_only_rate(session, users, items, chunk: int | None = None) -> float:
+    """Events/sec with no query traffic, through the same harness shape
+    as the mixed run: one call for threaded mode, ``chunk``-sized
+    ``session.ingest`` calls for interleaved mode (so the ratio isolates
+    the cost of *serving*, not of chunking)."""
+    t0 = time.perf_counter()
+    if chunk:
+        for pos in range(0, len(users), chunk):
+            session.ingest(users[pos:pos + chunk], items[pos:pos + chunk])
+    else:
+        session.ingest(users, items)
+    return len(users) / max(time.perf_counter() - t0, 1e-9)
+
+
+def _mixed(algorithm: str, n_i: int, events: int, *, micro_batch: int = 256,
+           every: int = 4, mode: str = "async", arrival: str = "closed",
+           rate_qps: float = 500.0, query_batch: int = 16,
+           query_batches: int = 60, svc_mode: str = "threaded",
+           events_per_chunk: int = 512):
+    """One full mixed-load measurement; returns a metrics dict."""
+    from benchmarks.common import stream_for
+    from repro.serve.loadgen import LoadConfig
+    from repro.serve.service import ServiceConfig, run_service
+
+    users, items = stream_for("movielens", events + WARMUP_EVENTS)
+    pool = np.unique(users)
+
+    # Ingest-only rate on an identical twin session (same warmup). The
+    # first pass is a priming run: stream-length-dependent programs
+    # compile there, so neither the timed twin pass nor the mixed run
+    # below (jit caches are process-wide) pays compilation.
+    chunk = events_per_chunk if svc_mode == "interleaved" else None
+    twin = _session(algorithm, n_i, micro_batch, every, mode, query_batch)
+    tu, ti = _warm(twin, users, items, pool, query_batch)
+    _ingest_only_rate(twin, tu, ti, chunk)
+    ingest_only = _ingest_only_rate(twin, tu, ti, chunk)
+
+    session = _session(algorithm, n_i, micro_batch, every, mode, query_batch)
+    mu, mi = _warm(session, users, items, pool, query_batch)
+    iso_p50, iso_p99 = _isolated_serve_p99(session, pool, query_batch)
+
+    load = LoadConfig(n_users=int(users.max()) + 1, seed=1,
+                      query_batch=query_batch, arrival=arrival,
+                      rate_qps=rate_qps)
+    svc = ServiceConfig(mode=svc_mode, query_batches=query_batches,
+                        events_per_chunk=events_per_chunk)
+    report = run_service(session, mu, mi, load, svc)
+    s = report.summary()
+    s.update(
+        isolated_p50_ms=round(iso_p50, 3),
+        isolated_p99_ms=round(iso_p99, 3),
+        ingest_only_events_per_s=round(ingest_only, 1),
+        ingest_ratio=round(
+            s["ingest_events_per_s"] / max(ingest_only, 1e-9), 3),
+        load_p99_over_isolated=round(
+            s["p99_ms"] / max(iso_p99, 1e-9), 2),
+    )
+    return s
+
+
+def rows(events: int = 4096):
+    out = []
+    for mode in ("async", "sync"):
+        for arrival in ("closed", "poisson", "bursty"):
+            s = _mixed("disgd", 4, events, mode=mode, arrival=arrival)
+            out.append({
+                "name": f"service/disgd/n_i=4/publish={mode}/{arrival}",
+                "us_per_call": s["p50_ms"] * 1e3,
+                "derived": (f"p99={s['p99_ms']:.2f}ms "
+                            f"(isolated {s['isolated_p99_ms']:.2f}ms) "
+                            f"ops/s={s['combined_ops_per_s']:,.0f} "
+                            f"stale_p95={s['staleness_p95']} "
+                            f"ingest_ratio={s['ingest_ratio']:.2f}"),
+            })
+    return out
+
+
+def smoke_rows(events: int = 32768):
+    """CI subset: one deterministic interleaved mixed-load run (DISGD,
+    n_i=4, async publish every micro-batch, 64-query batches between
+    2048-event ingest chunks).
+
+    Interleaved mode keeps the gate meaningful on any machine: query
+    tails measure the serve path plus the rotation/invalidation churn
+    this PR moved off the read path, not OS thread-scheduling noise —
+    on a single-core CI box the threaded mode's tail is dominated by
+    time-slicing against the trainer, which no publish design can fix.
+    The threaded closed-loop numbers stay in the full ``rows()`` sweep."""
+    s = _mixed("disgd", 4, events, micro_batch=256, every=1, mode="async",
+               svc_mode="interleaved", events_per_chunk=2048,
+               query_batch=64, query_batches=60)
+    return [{
+        "name": "service/disgd/movielens/n_i=4",
+        "p99_under_load_ms": s["p99_ms"],
+        "p50_under_load_ms": s["p50_ms"],
+        "isolated_p99_ms": s["isolated_p99_ms"],
+        "load_p99_over_isolated": s["load_p99_over_isolated"],
+        "combined_ops_per_s": s["combined_ops_per_s"],
+        "ingest_events_per_s": s["ingest_events_per_s"],
+        "ingest_only_events_per_s": s["ingest_only_events_per_s"],
+        "ingest_ratio": s["ingest_ratio"],
+        "staleness_p95": s["staleness_p95"],
+        "staleness_max": s["staleness_max"],
+        "async_rotations": s.get("async_rotations", 0),
+        "coalesced": s.get("coalesced", 0),
+    }]
+
+
+def append_smoke(out_path: str = "BENCH_smoke.json",
+                 events: int = 32768) -> int:
+    """Append the service row to the smoke artifact and enforce the gate:
+    p99-under-load must stay within 2x the isolated-serve p99 measured on
+    the same path in the same run (returns exit status)."""
+    new_rows = smoke_rows(events)
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            payload = json.load(f)
+    else:
+        payload = {"suite": "smoke", "rows": []}
+    payload["rows"] = [r for r in payload["rows"]
+                       if not str(r.get("name", "")).startswith("service/")]
+    payload["rows"].extend(new_rows)
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+
+    r = new_rows[0]
+    print(f"{r['name']},p99_under_load={r['p99_under_load_ms']:.2f}ms,"
+          f"isolated_p99={r['isolated_p99_ms']:.2f}ms,"
+          f"ratio={r['load_p99_over_isolated']:.2f}x,"
+          f"combined_ops={r['combined_ops_per_s']:,.0f}/s,"
+          f"ingest_ratio={r['ingest_ratio']:.2f},"
+          f"stale_p95={r['staleness_p95']}")
+    print(f"# appended service row to {out_path}")
+    if r["load_p99_over_isolated"] > 2.0:
+        print(f"# FAIL: p99 under load is {r['load_p99_over_isolated']:.2f}x "
+              f"the isolated p99 (gate: 2x)", file=sys.stderr)
+        return 2
+    return 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: append the service row + enforce the "
+                         "p99-under-load <= 2x isolated gate")
+    ap.add_argument("--smoke-out", default="BENCH_smoke.json")
+    ap.add_argument("--events", type=int, default=None,
+                    help="event-stream length (default: 32768 smoke, "
+                         "4096 sweep)")
+    args = ap.parse_args()
+    if args.smoke:
+        raise SystemExit(append_smoke(args.smoke_out, args.events or 32768))
+    print("name,us_per_call,derived")
+    for row in rows(args.events or 4096):
+        print(f"{row['name']},{row['us_per_call']:.2f},{row['derived']}")
+
+
+if __name__ == "__main__":
+    main()

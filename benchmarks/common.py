@@ -28,6 +28,13 @@ def stream_for(dataset: str, events: int, seed: int = 0, drift: bool = False):
         import dataclasses
         prof = dataclasses.replace(prof, drift_points=(0.5,))
     users, items, _ = synth_stream(prof, seed=seed)
+    # The scaled profile has a fixed length; tile with fresh seeds rather
+    # than silently truncating when a benchmark asks for a longer window.
+    while len(users) < events:
+        seed += 1
+        u2, i2, _ = synth_stream(prof, seed=seed)
+        users = np.concatenate([users, u2])
+        items = np.concatenate([items, i2])
     return users[:events], items[:events]
 
 

@@ -14,7 +14,7 @@ import sys
 import time
 
 SUITES = ("kernels", "recall", "memory", "forgetting", "throughput", "skew",
-          "serve", "regrid", "drift")
+          "serve", "service", "regrid", "drift")
 
 
 def smoke(out_path: str = "BENCH_smoke.json", events: int = 4096) -> None:
@@ -61,7 +61,8 @@ def main() -> None:
 
     from benchmarks import (bench_drift, bench_forgetting, bench_kernels,
                             bench_memory, bench_recall, bench_regrid,
-                            bench_serve, bench_skew, bench_throughput)
+                            bench_serve, bench_service, bench_skew,
+                            bench_throughput)
 
     scale = 4 if args.fast else 1
     plans = {
@@ -72,6 +73,7 @@ def main() -> None:
         "throughput": lambda: bench_throughput.rows(12_288 // scale),
         "skew": lambda: bench_skew.rows(12_288 // scale),
         "serve": lambda: bench_serve.rows(4_096 // scale),
+        "service": lambda: bench_service.rows(4_096 // scale),
         "regrid": lambda: bench_regrid.rows(8_192 // scale),
         "drift": lambda: bench_drift.rows(32_768 // scale),
     }

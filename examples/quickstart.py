@@ -11,24 +11,20 @@ Install the package first (no sys.path tricks needed):
   python examples/quickstart.py [--events 2000] [--algorithm bpr]
 """
 
-import argparse
-
 import numpy as np
 
 import repro
-from repro.data.stream import MOVIELENS_25M, scaled, synth_stream
+from repro.launch import common
 
 
 def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--events", type=int, default=0, help="0 = full stream")
-    ap.add_argument("--algorithm", default="disgd", choices=repro.registered())
+    # The shared driver flags (--algorithm/--events/--backend/--seed, ...);
+    # the grid is swept below and capacities derive from it.
+    ap = common.base_parser("StreamSession quickstart", grid=False,
+                            caps=False, events=0, micro_batch=1024)
     args = ap.parse_args()
 
-    profile = scaled(MOVIELENS_25M, 0.003)
-    users, items, _ = synth_stream(profile, seed=0)
-    if args.events:
-        users, items = users[:args.events], items[:args.events]
+    users, items = common.demo_stream(args.events, args.seed)
     print(f"stream: {users.size} ratings, "
           f"{users.max()+1} users, {items.max()+1} items")
 
@@ -38,9 +34,10 @@ def main():
         cfg = repro.StreamConfig(
             algorithm=args.algorithm,
             grid=grid,
-            micro_batch=1024,
+            micro_batch=args.micro_batch,
             hyper=algo.default_hyper()._replace(u_cap=1024 // grid.g,
                                                 i_cap=128 // grid.n_i),
+            backend=args.backend,
         )
         session = repro.StreamSession(cfg)
         res = session.ingest(users, items)

@@ -33,8 +33,9 @@ from repro.core.pipeline import (RestoredCheckpoint, StreamConfig,
                                  run_stream, save_stream_checkpoint)
 from repro.core.routing import GridSpec
 from repro.drift import DriftPolicy
-from repro.serve import (QueryFrontend, ServeConfig, ServeResponse,
-                         SnapshotStore, StaleSnapshotError, grid_topn)
+from repro.serve import (PublishPolicy, QueryFrontend, ServeConfig,
+                         ServeResponse, SnapshotStore, StaleSnapshotError,
+                         grid_topn)
 from repro.session import StreamSession
 
 # Importing the in-tree plugin package registers its algorithms, so the
@@ -64,6 +65,7 @@ __all__ = [
     "save_stream_checkpoint",
     "restore_stream_checkpoint",
     # serving plane
+    "PublishPolicy",
     "ServeConfig",
     "ServeResponse",
     "QueryFrontend",

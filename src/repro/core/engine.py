@@ -284,12 +284,18 @@ class PublishEvent(NamedTuple):
     IS a consistent snapshot: later training builds new buffers and can
     never mutate what the subscriber holds. ``forgets`` counts forgetting
     triggers fired so far (serving caches invalidate when it advances).
+
+    ``events_processed`` / ``dropped`` / ``forgets`` are Python ints on
+    the default (blocking) boundary; with ``publish_sync=False`` they are
+    0-d device arrays still attached to the in-flight scan — the
+    subscriber (e.g. ``SnapshotStore.publish_async``) syncs them on its
+    own thread so the trainer never waits at the boundary.
     """
 
     states: Any
-    events_processed: int
-    dropped: int
-    forgets: int
+    events_processed: Any  # int, or 0-d device array when publish_sync=False
+    dropped: Any
+    forgets: Any
     segment: int          # 0-based index of the segment just finished
     steps_done: int       # scan steps completed so far
     detector: Any = None  # DetectorState at the boundary (adaptive drift
@@ -299,6 +305,7 @@ class PublishEvent(NamedTuple):
 def run_stream_device(users: np.ndarray, items: np.ndarray, cfg,
                       verbose: bool = False, mesh=None,
                       publish_every: int = 0, on_publish=None,
+                      publish_sync: bool = True,
                       initial_states=None, initial_carry=(None, None),
                       initial_detector=None):
     """Run the whole prequential stream as a jitted scan on device.
@@ -310,6 +317,14 @@ def run_stream_device(users: np.ndarray, items: np.ndarray, cfg,
     subscribes to (``repro.serve.snapshot``). Worker states stay
     device-resident across segments; the only extra cost per boundary is
     the host sync of two scalars plus whatever the callback does.
+
+    ``publish_sync=False`` removes even that: the boundary hands the
+    0-d device scalars to the subscriber un-synced, so the host loop can
+    dispatch the next segment immediately instead of blocking until the
+    finished segment's compute completes — segments pipeline through the
+    async dispatch queue while an async subscriber (e.g.
+    ``SnapshotStore.publish_async``) syncs and rotates on its own
+    thread. Use only with subscribers that tolerate device scalars.
 
     ``initial_states``/``initial_carry`` resume from a checkpoint or a
     regridded state; shapes must match ``cfg`` (the compiled scan is
@@ -368,19 +383,22 @@ def run_stream_device(users: np.ndarray, items: np.ndarray, cfg,
         carry, outs = compiled(carry, xs_seg)
         seg_outs.append(outs)
         if on_publish is not None:
-            # Publish boundary: sync the progress scalars (states stay on
-            # device) and hand the immutable state tree to the subscriber.
-            # The scalar reads block until the segment's (async-dispatched)
-            # compute finishes — they must complete BEFORE the publish
-            # timer starts, or segment compute would be misattributed to
-            # the subscriber. Only subscriber work (e.g. a serving burst)
-            # is excluded from the training wall clock, keeping throughput
-            # comparable to non-publishing runs.
+            # Publish boundary. Sync mode: read the progress scalars
+            # (states stay on device) and hand the immutable state tree
+            # to the subscriber. The scalar reads block until the
+            # segment's (async-dispatched) compute finishes — they must
+            # complete BEFORE the publish timer starts, or segment
+            # compute would be misattributed to the subscriber. Only
+            # subscriber work (e.g. a serving burst) is excluded from the
+            # training wall clock, keeping throughput comparable to
+            # non-publishing runs. Async mode (publish_sync=False): hand
+            # the un-synced device scalars over and keep dispatching —
+            # the subscriber thread pays the sync instead of this loop.
             ev = PublishEvent(
                 states=carry[0],
-                events_processed=int(carry[4]),
-                dropped=int(carry[5]),
-                forgets=int(carry[6]),
+                events_processed=int(carry[4]) if publish_sync else carry[4],
+                dropped=int(carry[5]) if publish_sync else carry[5],
+                forgets=int(carry[6]) if publish_sync else carry[6],
                 segment=s,
                 steps_done=(s + 1) * seg,
                 detector=carry[7] if _adaptive(cfg) else None,

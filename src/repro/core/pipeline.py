@@ -142,7 +142,8 @@ def init_states(cfg: StreamConfig):
 
 def run_stream(users: np.ndarray, items: np.ndarray, cfg: StreamConfig,
                verbose: bool = False, publish_every: int = 0,
-               on_publish=None, initial_states=None,
+               on_publish=None, publish_sync: bool = True,
+               initial_states=None,
                initial_carry=(None, None),
                initial_detector=None) -> StreamResult:
     """Run the full prequential stream; returns curves + paper metrics.
@@ -154,6 +155,10 @@ def run_stream(users: np.ndarray, items: np.ndarray, cfg: StreamConfig,
     boundaries for the serving plane (``repro.serve.snapshot``): every
     ``publish_every`` micro-batch steps, ``on_publish(PublishEvent)``
     fires with the immutable worker-state tree at that boundary.
+    ``publish_sync=False`` makes the device engine's boundary
+    non-blocking (device scalars handed to an async subscriber — see
+    ``engine.run_stream_device``); the host reference loop is
+    synchronous by construction and ignores it.
 
     ``initial_states``/``initial_carry`` resume mid-stream from a
     checkpoint or a regridded state (``repro.core.regrid``): the states
@@ -171,6 +176,7 @@ def run_stream(users: np.ndarray, items: np.ndarray, cfg: StreamConfig,
         return engine.run_stream_device(
             users, items, cfg, verbose=verbose,
             publish_every=publish_every, on_publish=on_publish,
+            publish_sync=publish_sync,
             initial_states=initial_states, initial_carry=initial_carry,
             initial_detector=initial_detector)
 
@@ -418,20 +424,17 @@ class RestoredCheckpoint:
     ``run_stream(initial_detector=...)``) or ``None`` for checkpoints
     written without one.
 
-    Iterating yields the legacy
-    ``(events_processed, states, carry, detector)`` 4-tuple so existing
-    unpack sites keep working for one release — new code should use the
-    named fields (or the ``StreamSession.restore`` facade).
+    The legacy ``(events_processed, states, carry, detector)`` 4-tuple
+    iteration shipped for one release of back-compat (PR 5) and is now
+    removed: tuple-unpacking a ``RestoredCheckpoint`` raises
+    ``TypeError`` — use the named fields (or the
+    ``StreamSession.restore`` facade).
     """
 
     events_processed: int
     states: Any
     carry: tuple
     detector: Any = None
-
-    def __iter__(self):
-        return iter((self.events_processed, self.states, self.carry,
-                     self.detector))
 
 
 def restore_stream_checkpoint(directory: str, cfg: StreamConfig,
@@ -444,8 +447,9 @@ def restore_stream_checkpoint(directory: str, cfg: StreamConfig,
     configured grid (validated against the algorithm's
     ``state_template`` schema) or raise ``CheckpointShapeError``.
 
-    Returns a :class:`RestoredCheckpoint` (iterable as the legacy
-    4-tuple for one release of back-compat).
+    Returns a :class:`RestoredCheckpoint` (named fields only — the
+    legacy 4-tuple iteration was removed after its one deprecation
+    release).
     """
     from repro.checkpoint import restore_checkpoint
     from repro.core import regrid as regrid_lib

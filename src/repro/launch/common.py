@@ -1,0 +1,97 @@
+"""Shared CLI plumbing for the launch drivers.
+
+Every runtime driver (``serve_rs``, ``drift_rs``, ``rescale_rs``,
+``service_rs``, ``examples/quickstart.py``) takes the same core flags —
+algorithm (registry-backed choices), grid shape, event count,
+micro-batch, per-worker capacities, backend, seed. They used to each
+re-declare them with drifting defaults and help strings; this module is
+the single source:
+
+  * :func:`base_parser` — an ``ArgumentParser`` pre-loaded with the
+    common flags; per-driver defaults are keyword overrides, and the
+    grid / capacity groups can be switched off for drivers that manage
+    those themselves;
+  * :func:`parse_grid` — ``"NxG"`` → ``GridSpec.rect`` (the rescale
+    driver's grid syntax, now shared);
+  * :func:`stream_config` — parsed args → ``StreamConfig`` with the
+    algorithm's default hyper resolved and capacity/top-N overrides
+    applied;
+  * :func:`demo_stream` — the drivers' standard synthetic stream (a
+    MovieLens-25M-shaped profile scaled to laptop size), truncated to
+    ``--events``.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro.core.algorithm import get_algorithm, registered
+from repro.core.pipeline import StreamConfig
+from repro.core.routing import GridSpec
+from repro.data.stream import MOVIELENS_25M, scaled, synth_stream
+
+__all__ = ["base_parser", "parse_grid", "stream_config", "demo_stream",
+           "DEMO_SCALE"]
+
+#: The drivers' shared synthetic-stream scale (of MOVIELENS_25M).
+DEMO_SCALE = 0.003
+
+
+def parse_grid(spec: str) -> GridSpec:
+    """"NxG" -> ``GridSpec.rect(n_i=N, g=G)`` (e.g. "2x2", "4x2", "1x4")."""
+    n_i, g = (int(x) for x in spec.lower().split("x"))
+    return GridSpec.rect(n_i, g)
+
+
+def base_parser(description: str, *, grid: bool = True, caps: bool = True,
+                algorithm: str = "disgd", events: int = 8192,
+                micro_batch: int = 256, n_i: int = 2, u_cap: int = 512,
+                i_cap: int = 64, top_n: int = 10,
+                seed: int = 0) -> argparse.ArgumentParser:
+    """The common driver flags; keyword arguments set per-driver defaults.
+
+    ``grid=False`` omits ``--n-i`` (drivers with their own grid syntax,
+    e.g. rescale's ``--from-grid/--to-grid``, or quickstart's sweep);
+    ``caps=False`` omits ``--u-cap/--i-cap/--top-n`` likewise.
+    """
+    ap = argparse.ArgumentParser(description=description)
+    ap.add_argument("--algorithm", default=algorithm, choices=registered())
+    ap.add_argument("--events", type=int, default=events)
+    ap.add_argument("--micro-batch", type=int, default=micro_batch)
+    if grid:
+        ap.add_argument("--n-i", type=int, default=n_i,
+                        help="item splits (grid)")
+    if caps:
+        ap.add_argument("--u-cap", type=int, default=u_cap)
+        ap.add_argument("--i-cap", type=int, default=i_cap)
+        ap.add_argument("--top-n", type=int, default=top_n)
+    ap.add_argument("--backend", default="scan",
+                    choices=("host", "scan", "pallas"))
+    ap.add_argument("--seed", type=int, default=seed)
+    return ap
+
+
+def stream_config(args, grid: GridSpec | None = None) -> StreamConfig:
+    """Build the ``StreamConfig`` a ``base_parser`` namespace describes."""
+    if grid is None:
+        grid = GridSpec(args.n_i)
+    hyper = get_algorithm(args.algorithm).default_hyper()
+    over = {}
+    for field in ("u_cap", "i_cap", "top_n"):
+        v = getattr(args, field, None)
+        if v is not None:
+            over[field] = v
+    if over:
+        hyper = hyper._replace(**over)
+    return StreamConfig(algorithm=args.algorithm, grid=grid,
+                        micro_batch=args.micro_batch, hyper=hyper,
+                        backend=args.backend)
+
+
+def demo_stream(events: int, seed: int = 0):
+    """The drivers' standard synthetic (users, items) stream."""
+    profile = scaled(MOVIELENS_25M, DEMO_SCALE)
+    users, items, _ = synth_stream(profile, seed=seed)
+    if events:
+        users, items = users[:events], items[:events]
+    return users, items

@@ -19,34 +19,23 @@ re-warming from scratch.
 
 from __future__ import annotations
 
-import argparse
 import dataclasses
 
 import numpy as np
 
-from repro.core.algorithm import get_algorithm, registered
 from repro.core.forgetting import ForgettingConfig
-from repro.core.pipeline import (StreamConfig, restore_stream_checkpoint,
-                                 run_stream, save_stream_checkpoint)
-from repro.core.routing import GridSpec
+from repro.core.pipeline import (restore_stream_checkpoint, run_stream,
+                                 save_stream_checkpoint)
 from repro.drift import DriftPolicy, list_scenarios, make_scenario, recovery_report
+from repro.launch import common
 
 
 def main(argv=None):
-    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap = common.base_parser(__doc__.splitlines()[0], algorithm="dics",
+                            events=32768, u_cap=256)
     ap.add_argument("--scenario", default="abrupt", choices=list_scenarios())
-    ap.add_argument("--algorithm", default="dics", choices=registered())
     ap.add_argument("--policy", default="adaptive",
                     choices=("none", "fixed", "adaptive"))
-    ap.add_argument("--events", type=int, default=32768,
-                    help="raw events generated (pre-dedupe)")
-    ap.add_argument("--micro-batch", type=int, default=256)
-    ap.add_argument("--n-i", type=int, default=2, help="item splits (grid)")
-    ap.add_argument("--backend", default="scan",
-                    choices=("host", "scan", "pallas"))
-    ap.add_argument("--u-cap", type=int, default=256)
-    ap.add_argument("--i-cap", type=int, default=64)
-    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--trigger-every", type=int, default=2048,
                     help="fixed-cadence trigger (policy=fixed)")
     ap.add_argument("--ckpt-dir", default=None,
@@ -54,11 +43,7 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     sc = make_scenario(args.scenario, events=args.events, seed=args.seed)
-    hyper = get_algorithm(args.algorithm).default_hyper()._replace(
-        u_cap=args.u_cap, i_cap=args.i_cap)
-    cfg = StreamConfig(algorithm=args.algorithm, grid=GridSpec(args.n_i),
-                       micro_batch=args.micro_batch, hyper=hyper,
-                       backend=args.backend)
+    cfg = common.stream_config(args)
     if args.policy == "fixed":
         cfg = dataclasses.replace(cfg, forgetting=ForgettingConfig(
             policy="lru", trigger_every=args.trigger_every, lru_max_age=512))

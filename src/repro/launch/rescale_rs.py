@@ -20,7 +20,6 @@ before the first post-rescale micro-batch has even trained.
 
 from __future__ import annotations
 
-import argparse
 import dataclasses
 import tempfile
 import time
@@ -28,53 +27,31 @@ import time
 import numpy as np
 
 from repro.checkpoint import latest_step
-from repro.core.algorithm import get_algorithm, registered
-from repro.core.pipeline import (StreamConfig, restore_stream_checkpoint,
-                                 run_stream, save_stream_checkpoint)
-from repro.core.routing import GridSpec
-from repro.data.stream import MOVIELENS_25M, scaled, synth_stream
+from repro.core.pipeline import (restore_stream_checkpoint, run_stream,
+                                 save_stream_checkpoint)
+from repro.launch import common
+from repro.launch.common import parse_grid
 from repro.serve import QueryFrontend, ServeConfig, SnapshotStore
 
 
-def parse_grid(spec: str) -> GridSpec:
-    """"NxG" -> GridSpec.rect(n_i=N, g=G) (e.g. "2x2", "4x2", "1x4")."""
-    n_i, g = (int(x) for x in spec.lower().split("x"))
-    return GridSpec.rect(n_i, g)
-
-
 def main(argv=None):
-    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--algorithm", default="disgd", choices=registered())
+    ap = common.base_parser(__doc__.splitlines()[0], grid=False)
     ap.add_argument("--from-grid", default="2x2", type=parse_grid,
                     help="initial n_i x g worker grid")
     ap.add_argument("--to-grid", default="4x4", type=parse_grid,
                     help="worker grid after the rescale")
     ap.add_argument("--split", type=float, default=0.5,
                     help="fraction of the stream trained before rescaling")
-    ap.add_argument("--events", type=int, default=8192)
-    ap.add_argument("--micro-batch", type=int, default=256)
     ap.add_argument("--queries", type=int, default=256,
                     help="query burst size at each serving point")
     ap.add_argument("--batch", type=int, default=64, help="query micro-batch")
-    ap.add_argument("--top-n", type=int, default=10)
-    ap.add_argument("--u-cap", type=int, default=512)
-    ap.add_argument("--i-cap", type=int, default=64)
-    ap.add_argument("--backend", default="scan",
-                    choices=("host", "scan", "pallas"))
     ap.add_argument("--ckpt-dir", default=None,
                     help="checkpoint directory (default: a temp dir)")
-    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    hyper = get_algorithm(args.algorithm).default_hyper()._replace(
-        u_cap=args.u_cap, i_cap=args.i_cap, top_n=args.top_n)
-    cfg_a = StreamConfig(algorithm=args.algorithm, grid=args.from_grid,
-                         micro_batch=args.micro_batch, hyper=hyper,
-                         backend=args.backend)
+    cfg_a = common.stream_config(args, grid=args.from_grid)
 
-    profile = scaled(MOVIELENS_25M, 0.003)
-    users, items, _ = synth_stream(profile, seed=args.seed)
-    users, items = users[:args.events], items[:args.events]
+    users, items = common.demo_stream(args.events, args.seed)
     cut = int(args.split * users.size)
 
     store = SnapshotStore()

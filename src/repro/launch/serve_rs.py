@@ -1,11 +1,14 @@
 """Train-and-serve driver for the S&R recommender's query plane.
 
-Runs the streaming trainer (device-resident engine) with snapshot
-publishing every ``--publish-every`` micro-batches, and serves bursts of
-top-N queries against each published snapshot through the micro-batched
-front-end — the single-process simulation of the paper's deployment
-shape: the training stream ingests events while read-only recommendation
-traffic is answered from consistent, bounded-staleness snapshots.
+Runs the streaming trainer through a ``StreamSession`` whose
+``PublishPolicy`` publishes a snapshot every ``--publish-every``
+micro-batches, and serves a burst of top-N queries against each
+published snapshot via a store listener (``SnapshotStore.subscribe``) —
+the single-process simulation of the paper's deployment shape: the
+training stream ingests events while read-only recommendation traffic
+is answered from consistent, bounded-staleness snapshots. For
+*concurrent* (not burst-per-publish) mixed load, see
+``repro.launch.service_rs``.
 
   PYTHONPATH=src python -m repro.launch.serve_rs \\
       --algorithm disgd --n-i 2 --events 8192 --micro-batch 256 \\
@@ -16,81 +19,64 @@ traffic is answered from consistent, bounded-staleness snapshots.
 
 from __future__ import annotations
 
-import argparse
 import time
 
 import numpy as np
 
-from repro.core.algorithm import registered, get_algorithm
-from repro.core.pipeline import StreamConfig, run_stream
-from repro.core.routing import GridSpec
-from repro.data.stream import MOVIELENS_25M, scaled, synth_stream
-from repro.serve import QueryFrontend, ServeConfig, SnapshotStore
+from repro.launch import common
+from repro.serve import ServeConfig
+from repro.serve.policy import PublishPolicy
+from repro.session import StreamSession
 
 
 def main(argv=None):
-    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--algorithm", default="disgd", choices=registered())
-    ap.add_argument("--n-i", type=int, default=2, help="item splits (grid)")
-    ap.add_argument("--events", type=int, default=8192)
-    ap.add_argument("--micro-batch", type=int, default=256)
+    ap = common.base_parser(__doc__.splitlines()[0])
     ap.add_argument("--publish-every", type=int, default=8,
                     help="micro-batches per snapshot publish")
     ap.add_argument("--queries-per-publish", type=int, default=256)
     ap.add_argument("--batch", type=int, default=64, help="query micro-batch")
-    ap.add_argument("--top-n", type=int, default=10)
-    ap.add_argument("--u-cap", type=int, default=512)
-    ap.add_argument("--i-cap", type=int, default=64)
-    ap.add_argument("--backend", default="scan",
-                    choices=("host", "scan", "pallas"))
     ap.add_argument("--max-staleness", type=int, default=None,
                     help="staleness bound in events (default: unbounded)")
-    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    grid = GridSpec(args.n_i)
-    hyper = get_algorithm(args.algorithm).default_hyper()._replace(
-        u_cap=args.u_cap, i_cap=args.i_cap, top_n=args.top_n)
-    cfg = StreamConfig(algorithm=args.algorithm, grid=grid,
-                       micro_batch=args.micro_batch, hyper=hyper,
-                       backend=args.backend)
+    cfg = common.stream_config(args)
+    users, items = common.demo_stream(args.events, args.seed)
 
-    profile = scaled(MOVIELENS_25M, 0.003)
-    users, items, _ = synth_stream(profile, seed=args.seed)
-    users, items = users[:args.events], items[:args.events]
-
-    store = SnapshotStore()
-    serve_cfg = ServeConfig.from_stream(
-        cfg, batch_size=args.batch,
-        max_staleness_events=args.max_staleness)
-    frontend = QueryFrontend(store, serve_cfg)
+    # Sync publishing: each rotation's listener burst runs inline, so a
+    # burst is answered from exactly the snapshot that triggered it.
+    policy = PublishPolicy(every=args.publish_every, mode="sync",
+                           max_staleness_events=args.max_staleness)
+    session = StreamSession(
+        cfg, publish=policy,
+        serve=ServeConfig.from_stream(cfg, batch_size=args.batch,
+                                      publish=policy))
+    frontend = session.frontend
     rng = np.random.default_rng(args.seed + 1)
     pool = np.unique(users)
 
     bursts = []          # (queries, seconds, staleness, cache_hits, fallbacks)
 
-    def on_publish(ev):
-        store.publish(ev.states, ev.events_processed, ev.forgets)
+    def burst(snap):
         q = rng.choice(pool, size=args.queries_per_publish)
         t0 = time.perf_counter()
         resp = frontend.serve(q)
         dt = time.perf_counter() - t0
-        bursts.append((q.size, dt, store.staleness(),
+        bursts.append((q.size, dt, resp.staleness_events,
                        resp.cache_hits, resp.fallbacks))
 
-    res = run_stream(users, items, cfg,
-                     publish_every=args.publish_every, on_publish=on_publish)
+    session.store.subscribe(burst)
+    res = session.ingest(users, items)
 
     total_q = sum(b[0] for b in bursts)
     total_t = sum(b[1] for b in bursts)
     qps = [b[0] / max(b[1], 1e-9) for b in bursts]
     print(f"[serve_rs] trained {res.events_processed} events "
           f"({res.throughput:,.0f} ev/s, backend={args.backend}, "
-          f"n_c={grid.n_c} workers), recall@{args.top_n}="
+          f"n_c={cfg.grid.n_c} workers), recall@{args.top_n}="
           f"{res.recall.mean():.4f}, dropped={res.dropped}")
-    print(f"[serve_rs] {store.latest_version} snapshots published "
+    print(f"[serve_rs] {session.store.latest_version} snapshots published "
           f"(every {args.publish_every} micro-batches -> staleness bound "
-          f"{args.publish_every * args.micro_batch} events)")
+          f"{policy.staleness_bound_events(args.micro_batch)} events)")
     if bursts:
         print(f"[serve_rs] served {total_q} queries in {total_t:.3f}s: "
               f"QPS mean={total_q / max(total_t, 1e-9):,.0f} "

@@ -8,17 +8,27 @@ ingests. This package is that serving plane:
   * ``plane``    — jitted query fan-out over the user's replica column +
     on-device cross-split top-N merge (DISGD and DICS);
   * ``snapshot`` — double-buffered read-only state snapshots published by
-    the engine at micro-batch boundaries, with a bounded-staleness knob;
+    the engine at micro-batch boundaries (synchronously or via the async
+    publisher thread), with a bounded-staleness knob;
+  * ``policy``   — :class:`PublishPolicy`, the one knob surface for
+    publish cadence, sync/async mode, and the staleness bound;
   * ``frontend`` — micro-batched query front-end: LRU response cache
-    (invalidated on snapshot rotation / forgetting) and a popularity
-    fallback for unknown users.
+    (lazily invalidated by snapshot generation) and a popularity
+    fallback for unknown users;
+  * ``loadgen``  — seeded mixed-load traffic generation (Zipf-skewed
+    queries, Poisson/bursty arrivals, events:queries mix);
+  * ``service``  — the mixed-load runner: interleaved ingest + query
+    traffic against one session, with tail-latency and staleness
+    reporting.
 
-Drivers: ``repro.launch.serve_rs`` (train-and-serve loop) and
-``benchmarks.bench_serve`` (QPS / latency).
+Drivers: ``repro.launch.service_rs`` (mixed-load harness),
+``repro.launch.serve_rs`` (train-and-serve loop) and
+``benchmarks.bench_service`` / ``benchmarks.bench_serve``.
 """
 
 from repro.serve.frontend import QueryFrontend, ServeConfig, ServeResponse
 from repro.serve.plane import grid_topn, query_capacity
+from repro.serve.policy import PublishPolicy
 from repro.serve.snapshot import (Snapshot, SnapshotStore, StaleSnapshotError,
                                   popularity_topn)
 
@@ -29,6 +39,7 @@ __all__ = [
     "SnapshotStore",
     "StaleSnapshotError",
     "popularity_topn",
+    "PublishPolicy",
     "QueryFrontend",
     "ServeConfig",
     "ServeResponse",

@@ -4,10 +4,14 @@ Production serving traffic is many small point queries; the grid plane
 wants dense batches. This front-end sits between them:
 
   * incoming user ids are answered from an LRU response cache when the
-    cache entry was computed against the current snapshot — the cache is
-    invalidated whenever the snapshot rotates (new version) or a
-    forgetting pass fired (state was evicted, cached lists may now
-    recommend forgotten items);
+    cache entry was computed against the current snapshot *generation*
+    (snapshot version, forgetting counter). Invalidation is lazy: a
+    rotation or forgetting pass does NOT eagerly flush the cache —
+    each entry is stamped with the generation it was computed under and
+    is simply treated as a miss (and dropped) on its next lookup. The
+    serve path therefore never pays an O(cache) clear when the trainer
+    publishes, which matters exactly when publishes are frequent
+    (the async publish path, ``PublishPolicy(mode="async")``);
   * misses are packed into fixed-size micro-batches for ``grid_topn``;
     queries that overflow their column's bucket capacity come back
     un-served and are re-queued into the next batch (the same
@@ -18,22 +22,28 @@ wants dense batches. This front-end sits between them:
 
 The front-end is synchronous and single-threaded by design: one
 ``serve`` call = one consistent snapshot. Staleness is enforced at
-acquire time via ``ServeConfig.max_staleness_events``.
+acquire time via ``ServeConfig.publish.max_staleness_events``
+(the old ``ServeConfig(max_staleness_events=)`` kwarg still works for
+one release with a ``DeprecationWarning``).
 """
 
 from __future__ import annotations
 
 import collections
 import dataclasses
+import warnings
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import routing
 from repro.serve import plane
+from repro.serve.policy import PublishPolicy
 from repro.serve.snapshot import SnapshotStore
 
 __all__ = ["ServeConfig", "ServeResponse", "QueryFrontend"]
+
+_UNSET = object()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,7 +60,13 @@ class ServeConfig:
     capacity_factor: float = 2.0          # auto qcap vs fair share
     use_kernel: bool = True               # Pallas scoring for DISGD
     cache_capacity: int = 4096            # LRU response-cache entries
-    max_staleness_events: int | None = None
+    # Publish-plane contract (cadence, async/sync, staleness bound).
+    publish: PublishPolicy = PublishPolicy()
+
+    @property
+    def max_staleness_events(self) -> int | None:
+        """The policy's staleness bound (the pre-policy field, read-only)."""
+        return self.publish.max_staleness_events
 
     @property
     def qcap(self) -> int:
@@ -74,6 +90,28 @@ class ServeConfig:
         return cls(**fields)
 
 
+# DEPRECATED (one release): ``ServeConfig(max_staleness_events=...)``.
+# A wrapper rather than a field so ``dataclasses.replace`` on existing
+# configs never re-triggers the shim or clobbers the policy.
+_serveconfig_init = ServeConfig.__init__
+
+
+def _shimmed_init(self, *args, max_staleness_events=_UNSET, **kwargs):
+    if max_staleness_events is not _UNSET:
+        warnings.warn(
+            "ServeConfig(max_staleness_events=...) is deprecated; use "
+            "ServeConfig(publish=PublishPolicy(max_staleness_events=...)) — "
+            "the old kwarg will be removed next release",
+            DeprecationWarning, stacklevel=2)
+        publish = kwargs.get("publish", PublishPolicy())
+        kwargs["publish"] = dataclasses.replace(
+            publish, max_staleness_events=max_staleness_events)
+    _serveconfig_init(self, *args, **kwargs)
+
+
+ServeConfig.__init__ = _shimmed_init
+
+
 @dataclasses.dataclass
 class ServeResponse:
     ids: np.ndarray       # i32[Q, N] global item ids, -1 padded
@@ -82,6 +120,8 @@ class ServeResponse:
     snapshot_version: int
     cache_hits: int       # positions answered without touching the plane
     fallbacks: int        # positions answered by the popularity head
+    staleness_events: int = 0   # events the answering snapshot trailed by
+    snapshot_forgets: int = 0   # forgetting counter of the answering snapshot
 
 
 class QueryFrontend:
@@ -90,25 +130,43 @@ class QueryFrontend:
     def __init__(self, store: SnapshotStore, cfg: ServeConfig):
         self.store = store
         self.cfg = cfg
+        # uid -> (generation, ids, scores, known). Entries from older
+        # generations are lazily dropped at lookup time, never by an
+        # eager flush on rotation.
         self._cache: collections.OrderedDict[int, tuple] = collections.OrderedDict()
-        self._cache_version = -1
-        self._cache_forgets = -1
+        self._seen_gen: tuple = (-1, -1)
         self.stats = collections.Counter()
 
     # -- cache ------------------------------------------------------------
 
-    def _sync_cache_epoch(self, snap) -> None:
-        """Drop every cached answer when the snapshot rotates or forgets."""
-        if (snap.version, snap.forgets) != (self._cache_version,
-                                            self._cache_forgets):
+    @staticmethod
+    def _generation(snap) -> tuple:
+        """Cache-validity epoch: advances on rotation or forgetting."""
+        return (snap.version, snap.forgets)
+
+    def _note_epoch(self, gen: tuple) -> None:
+        """Track epoch transitions for the stats counter only — the cache
+        itself is invalidated lazily, entry by entry, at lookup."""
+        if gen != self._seen_gen:
             if self._cache:
                 self.stats["invalidations"] += 1
-            self._cache.clear()
-            self._cache_version = snap.version
-            self._cache_forgets = snap.forgets
+            self._seen_gen = gen
 
-    def _cache_put(self, uid: int, entry: tuple) -> None:
-        self._cache[uid] = entry
+    def _cache_get(self, uid: int, gen: tuple):
+        """A cached answer computed under ``gen``, else None (stale
+        entries are dropped here — lazy invalidation)."""
+        hit = self._cache.get(uid)
+        if hit is None:
+            return None
+        if hit[0] != gen:
+            del self._cache[uid]        # stale generation: lazy drop
+            self.stats["lazy_drops"] += 1
+            return None
+        self._cache.move_to_end(uid)
+        return hit[1]
+
+    def _cache_put(self, uid: int, gen: tuple, entry: tuple) -> None:
+        self._cache[uid] = (gen, entry)
         self._cache.move_to_end(uid)
         while len(self._cache) > self.cfg.cache_capacity:
             self._cache.popitem(last=False)
@@ -120,23 +178,23 @@ class QueryFrontend:
 
         Swaps the static plane parameters (new jit signature) and drops
         every cached answer — lists computed against the old shape may
-        disagree with the resharded state's merges. The snapshot store is
-        shape-agnostic, so the same store keeps serving across the
-        rescale; callers publish the first post-regrid snapshot and then
-        retarget.
+        disagree with the resharded state's merges. (This is the one
+        eager flush left: a regrid changes the meaning of every entry,
+        not just its freshness.) The snapshot store is shape-agnostic,
+        so the same store keeps serving across the rescale; callers
+        publish the first post-regrid snapshot and then retarget.
         """
         over = {"grid": grid}
         if u_cap is not None:
             over["u_cap"] = u_cap
         self.cfg = dataclasses.replace(self.cfg, **over)
         self._cache.clear()
-        self._cache_version = -1
-        self._cache_forgets = -1
+        self._seen_gen = (-1, -1)
         self.stats["retargets"] += 1
 
     # -- the serving loop -------------------------------------------------
 
-    def _compute(self, snap, uids: list[int]) -> dict:
+    def _compute(self, snap, gen, uids: list[int]) -> dict:
         """Run the grid plane for ``uids``; returns {uid: entry} and fills
         the cache. Overflowed queries re-queue into the next micro-batch.
 
@@ -166,7 +224,7 @@ class QueryFrontend:
                     progress = True
                     entry = (ids[j], scores[j], bool(known[j]))
                     computed[uid] = entry
-                    self._cache_put(uid, entry)
+                    self._cache_put(uid, gen, entry)
                 else:               # column bucket overflow: try next batch
                     self.stats["requeued"] += 1
                     queue.append(uid)
@@ -179,8 +237,9 @@ class QueryFrontend:
     def serve(self, user_ids) -> ServeResponse:
         """Answer a batch of point queries (any length, duplicates fine)."""
         cfg = self.cfg
-        snap = self.store.acquire(cfg.max_staleness_events)
-        self._sync_cache_epoch(snap)
+        snap = self.store.acquire(cfg.publish.max_staleness_events)
+        gen = self._generation(snap)
+        self._note_epoch(gen)
 
         uids = np.asarray(user_ids, np.int64).reshape(-1)
         self.stats["queries"] += uids.size
@@ -192,16 +251,15 @@ class QueryFrontend:
         for uid in uids.tolist():
             if uid < 0 or uid in resolved or uid in from_cache:
                 continue
-            entry = self._cache.get(uid)
+            entry = self._cache_get(uid, gen)
             if entry is not None:
-                self._cache.move_to_end(uid)
                 resolved[uid] = entry
                 from_cache.add(uid)
             else:
                 missing.append(uid)
                 resolved[uid] = None    # placeholder: dedupes the queue
         if missing:
-            resolved.update(self._compute(snap, missing))
+            resolved.update(self._compute(snap, gen, missing))
 
         n = min(cfg.top_n, len(snap.popular_ids))
         out_ids = np.full((uids.size, cfg.top_n), -1, np.int32)
@@ -234,4 +292,7 @@ class QueryFrontend:
         return ServeResponse(
             ids=out_ids, scores=out_scores, known=out_known,
             snapshot_version=snap.version,
-            cache_hits=cache_hits, fallbacks=fallbacks)
+            cache_hits=cache_hits, fallbacks=fallbacks,
+            staleness_events=max(
+                0, self.store.progress - snap.events_processed),
+            snapshot_forgets=snap.forgets)

@@ -1,0 +1,71 @@
+"""PublishPolicy — the one knob surface for snapshot publishing.
+
+The publish plane's parameters grew scattered across three owners:
+``StreamSession.ingest(publish_every=, on_publish=)`` picked the cadence
+per call, ``ServeConfig.max_staleness_events`` bounded staleness on the
+read side, and the sync-vs-async question did not exist (every publish
+ran popularity aggregation and rotation inline on the trainer's
+critical path). This dataclass consolidates them:
+
+  * ``every``   — snapshot cadence in micro-batches (0 = publish only at
+    the end of each ingest call). Publishing every ``k`` micro-batches
+    of size ``mb`` bounds serving staleness by ``k * mb`` events.
+  * ``mode``    — ``"async"`` (default): mid-stream publishes enqueue
+    the device-ready state buffer and return immediately; a background
+    publisher computes the popularity head and performs the atomic
+    rotation off the scan's critical path, coalescing to the freshest
+    buffer under load. ``"sync"``: the legacy inline path — rotation
+    completes before the trainer resumes (deterministic, what tests of
+    exact boundary state want).
+  * ``max_staleness_events`` — read-side bound: ``QueryFrontend`` /
+    ``StreamSession.recommend`` raise :class:`~repro.serve.snapshot.
+    StaleSnapshotError` when the front snapshot trails reported stream
+    progress by more than this many events (``None`` = unbounded).
+
+Owned by :class:`~repro.session.StreamSession` (training side) and
+:class:`~repro.serve.frontend.ServeConfig` (serving side); the session
+hands its policy to the front-end it builds, so one object governs both
+halves. The old kwargs (``ingest(publish_every=, on_publish=)``,
+``ServeConfig(max_staleness_events=)``) still work for one release with
+a ``DeprecationWarning``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["PublishPolicy"]
+
+_MODES = ("async", "sync")
+
+
+@dataclasses.dataclass(frozen=True)
+class PublishPolicy:
+    """How and how often training state becomes a serving snapshot."""
+
+    every: int = 0                          # micro-batches per publish
+    mode: str = "async"                     # "async" | "sync"
+    max_staleness_events: int | None = None  # serve-side staleness bound
+
+    def __post_init__(self):
+        if self.mode not in _MODES:
+            raise ValueError(
+                f"PublishPolicy.mode must be one of {_MODES}, "
+                f"got {self.mode!r}")
+        if self.every < 0:
+            raise ValueError(f"PublishPolicy.every must be >= 0, "
+                             f"got {self.every}")
+        if (self.max_staleness_events is not None
+                and self.max_staleness_events < 0):
+            raise ValueError("PublishPolicy.max_staleness_events must be "
+                             ">= 0 or None")
+
+    @property
+    def is_async(self) -> bool:
+        return self.mode == "async"
+
+    def staleness_bound_events(self, micro_batch: int) -> int | None:
+        """The staleness the cadence itself guarantees, in events."""
+        if self.every <= 0:
+            return None
+        return self.every * micro_batch

@@ -11,12 +11,32 @@ later micro-batch. JAX arrays are immutable, so a published tree costs
 no copy and stays valid however long a reader holds it while training
 keeps producing new buffers.
 
+Two publish paths share the rotation:
+
+  * ``publish``       — synchronous: popularity aggregation + rotation
+    complete before the call returns (deterministic; what tests of exact
+    boundary state use).
+  * ``publish_async`` — the trainer's hot path: enqueue the device-ready
+    buffer and return immediately. A background publisher thread
+    aggregates the popularity head, syncs the progress scalars, and
+    performs the same atomic rotation — all off the scan's critical
+    path. Under load the queue coalesces to the freshest buffer
+    (intermediate publishes are counted in ``stats["coalesced"]``, the
+    production-correct backpressure: serve the newest state, never queue
+    up stale rotations). ``flush()`` blocks until the queue drains —
+    call it before asserting on the front snapshot.
+
+Post-rotation listeners (``subscribe``) fire after every rotation,
+outside the store lock — the hook serving loops use to react to fresh
+state (e.g. a query burst per snapshot).
+
 Bounded staleness: the trainer (or driver) reports stream progress via
 ``report_progress`` — publishes do this implicitly — and ``acquire``
 raises ``StaleSnapshotError`` when the front snapshot has fallen more
 than ``max_staleness_events`` processed events behind that progress.
-The knob maps directly onto the publish cadence: publishing every ``k``
-micro-batches of size ``mb`` bounds staleness by ``k * mb`` events.
+The knob maps onto the publish cadence: publishing every ``k``
+micro-batches of size ``mb`` bounds staleness by ``k * mb`` events
+(``PublishPolicy.staleness_bound_events``).
 
 Each snapshot also carries the grid-wide popularity head
 (``popularity_topn`` over the paper's frequency statistics), the
@@ -25,9 +45,10 @@ front-end's fallback answer for unknown users.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import threading
-from typing import Any
+from typing import Any, Callable
 
 import numpy as np
 
@@ -98,9 +119,19 @@ class SnapshotStore:
         self._progress = 0
         self._fallback_n = fallback_n
         self._lock = threading.Lock()
+        self._listeners: list[Callable[[Snapshot], None]] = []
+        # Async publish machinery: pending device-ready buffers drained by
+        # a lazily-started daemon thread; ``_idle`` is set whenever the
+        # queue is empty and no rotation is in flight.
+        self._pending: collections.deque = collections.deque()
+        self._publisher: threading.Thread | None = None
+        self._idle = threading.Event()
+        self._idle.set()
+        self.stats = collections.Counter()
 
-    def publish(self, states, events_processed: int, forgets: int = 0) -> Snapshot:
-        """Write ``states`` to the back buffer and rotate it to the front."""
+    # -- the rotation (shared by both publish paths) ----------------------
+
+    def _rotate(self, states, events_processed: int, forgets: int) -> Snapshot:
         popular_ids, popular_mass = popularity_topn(states, self._fallback_n)
         with self._lock:
             self._version += 1
@@ -116,13 +147,79 @@ class SnapshotStore:
             self._slots[back] = snap
             self._front = back                     # the atomic rotation
             self._progress = max(self._progress, snap.events_processed)
+            listeners = list(self._listeners)
+        for fn in listeners:    # outside the lock: listeners may acquire()
+            fn(snap)
         return snap
 
-    def subscriber(self):
-        """Adapter for the engine hook: ``on_publish=store.subscriber()``."""
+    def publish(self, states, events_processed: int, forgets: int = 0) -> Snapshot:
+        """Synchronous publish: write, aggregate, rotate, then return."""
+        return self._rotate(states, events_processed, forgets)
+
+    # -- async publish ----------------------------------------------------
+
+    def publish_async(self, states, events_processed, forgets=0) -> None:
+        """Enqueue a device-ready buffer; rotation happens off-thread.
+
+        The call is the trainer's publish boundary, so it must cost
+        next to nothing: one deque append. ``events_processed`` /
+        ``forgets`` may be device scalars — the publisher thread syncs
+        them (that host-blocking read is exactly what moves off the
+        scan's critical path). Pending buffers coalesce: only the
+        freshest enqueued state rotates when the publisher is behind.
+        """
+        with self._lock:
+            self._pending.append((states, events_processed, forgets))
+            self._idle.clear()
+            if self._publisher is None or not self._publisher.is_alive():
+                self._publisher = threading.Thread(
+                    target=self._drain_forever, name="snapshot-publisher",
+                    daemon=True)
+                self._publisher.start()
+
+    def _drain_forever(self) -> None:
+        while True:
+            with self._lock:
+                if not self._pending:
+                    self._idle.set()
+                    return          # thread exits; restarted on next enqueue
+                # Coalesce: rotate only the freshest pending buffer.
+                skipped = len(self._pending) - 1
+                states, events, forgets = self._pending[-1]
+                self._pending.clear()
+                self.stats["coalesced"] += skipped
+            self._rotate(states, int(events), int(forgets))
+            self.stats["async_rotations"] += 1
+
+    def flush(self, timeout: float | None = None) -> bool:
+        """Block until every pending async publish has rotated."""
+        return self._idle.wait(timeout)
+
+    # -- subscribers ------------------------------------------------------
+
+    def subscriber(self, mode: str = "sync"):
+        """Adapter for the engine hook: ``on_publish=store.subscriber()``.
+
+        ``mode="async"`` routes through :meth:`publish_async` (the
+        non-blocking path); default is the synchronous rotation.
+        """
+        pub = self.publish_async if mode == "async" else self.publish
+
         def _on_publish(ev):
-            self.publish(ev.states, ev.events_processed, ev.forgets)
+            pub(ev.states, ev.events_processed, ev.forgets)
         return _on_publish
+
+    def subscribe(self, fn: Callable[[Snapshot], None]) -> None:
+        """Call ``fn(snapshot)`` after every rotation (outside the lock).
+
+        Sync publishes run listeners inline on the publishing thread;
+        async publishes run them on the publisher thread — a listener
+        serving queries therefore never blocks the trainer either way.
+        """
+        with self._lock:
+            self._listeners.append(fn)
+
+    # -- readers ----------------------------------------------------------
 
     def acquire(self, max_staleness_events: int | None = None) -> Snapshot:
         """The front snapshot; optionally enforce a staleness bound."""
@@ -152,5 +249,12 @@ class SnapshotStore:
             return self._progress - self._slots[self._front].events_processed
 
     @property
+    def progress(self) -> int:
+        """Latest reported stream position (events processed)."""
+        with self._lock:
+            return self._progress
+
+    @property
     def latest_version(self) -> int:
-        return self._version
+        with self._lock:
+            return self._version

@@ -8,7 +8,8 @@ by hand for closed-loop drift. This module collapses those entry points
 into one object with a five-verb lifecycle:
 
     cfg = repro.StreamConfig(algorithm="disgd", grid=repro.GridSpec(2))
-    session = repro.StreamSession(cfg)
+    session = repro.StreamSession(
+        cfg, publish=repro.PublishPolicy(every=8, mode="async"))
     session.ingest(users, items)        # incremental; call repeatedly
     session.recommend(user_ids)         # snapshot-backed grid top-N
     session.checkpoint(directory)       # grid-portable, detector included
@@ -21,11 +22,18 @@ detector, and the serving snapshot across calls — never the math.
 Algorithms resolve through the registry (``repro.core.algorithm``), so a
 session drives any registered plugin (e.g. ``algorithm="bpr"``)
 identically to the paper's pair.
+
+Publishing is governed by one :class:`~repro.serve.policy.PublishPolicy`
+owned by the session: cadence (``every`` micro-batches), sync vs async
+rotation, and the read-side staleness bound. The pre-policy kwargs
+(``ingest(publish_every=, on_publish=)``) still work for one release
+with a ``DeprecationWarning``.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any
 
 import numpy as np
@@ -36,10 +44,12 @@ from repro.core.pipeline import (RestoredCheckpoint, StreamConfig,
                                  StreamResult, restore_stream_checkpoint,
                                  run_stream, save_stream_checkpoint)
 from repro.core.routing import GridSpec
-from repro.serve import (QueryFrontend, ServeConfig, ServeResponse,
-                         SnapshotStore)
+from repro.serve import (PublishPolicy, QueryFrontend, ServeConfig,
+                         ServeResponse, SnapshotStore)
 
 __all__ = ["StreamSession", "RestoredCheckpoint"]
+
+_UNSET = object()
 
 
 class StreamSession:
@@ -53,15 +63,24 @@ class StreamSession:
     """
 
     def __init__(self, cfg: StreamConfig, *, serve: ServeConfig | None = None,
+                 publish: PublishPolicy | None = None,
                  snapshot_slots: int = 2):
         self.cfg = cfg
         self.algorithm = algorithm_lib.get_algorithm(cfg.algorithm)
         self.store = SnapshotStore(slots=snapshot_slots)
+        # One policy governs both halves: the session's ingest cadence
+        # and the front-end's staleness bound. An explicit ``publish``
+        # wins; otherwise adopt the ServeConfig's (or the default).
+        if serve is None:
+            serve = ServeConfig.from_stream(cfg)
+        if publish is None:
+            publish = serve.publish
+        else:
+            serve = dataclasses.replace(serve, publish=publish)
+        self.publish_policy = publish
         # The frontend owns the serving config (`self._frontend.cfg`);
         # retarget/recommend mutate it there, never a mirror here.
-        self._frontend = QueryFrontend(
-            self.store,
-            serve if serve is not None else ServeConfig.from_stream(cfg))
+        self._frontend = QueryFrontend(self.store, serve)
         self._states = pipeline_lib.init_states(cfg)
         self._carry: tuple = (None, None)
         self._detector: Any = None
@@ -79,24 +98,65 @@ class StreamSession:
     def grid(self) -> GridSpec:
         return self.cfg.grid
 
+    @property
+    def frontend(self) -> QueryFrontend:
+        """The session's query front-end (read path; shares the store)."""
+        return self._frontend
+
     # -- train ------------------------------------------------------------
 
-    def ingest(self, users, items, *, publish_every: int = 0,
-               verbose: bool = False) -> StreamResult:
+    def ingest(self, users, items, *, publish_every=_UNSET,
+               on_publish=_UNSET, verbose: bool = False) -> StreamResult:
         """Stream a batch of ``<user, item>`` events through the engine.
 
         Incremental and resumable: each call continues from the states,
         overflow carry, and drift-detector baseline the previous call
-        (or ``restore``) left behind. With ``publish_every > 0`` the
-        engine additionally publishes mid-run snapshots into this
-        session's store every that many micro-batches (bounded serving
-        staleness while a long ingest is in flight); the final state is
-        always published. Returns the segment's ``StreamResult``.
+        (or ``restore``) left behind. Mid-run snapshot publishing
+        follows the session's :class:`PublishPolicy`: with
+        ``policy.every = k > 0`` the engine publishes into this
+        session's store every ``k`` micro-batches (bounding serving
+        staleness by ``k * micro_batch`` events), asynchronously when
+        ``policy.mode == "async"`` so rotation never blocks the scan.
+        The final state is always published (synchronously — the stream
+        has ended, and ``recommend`` right after ``ingest`` must see
+        it). Returns the segment's ``StreamResult``.
+
+        ``publish_every=`` / ``on_publish=`` are deprecated (one
+        release): construct the session with
+        ``publish=PublishPolicy(every=...)`` instead.
         """
+        policy = self.publish_policy
+        legacy_hook = None
+        if publish_every is not _UNSET or on_publish is not _UNSET:
+            warnings.warn(
+                "StreamSession.ingest(publish_every=, on_publish=) is "
+                "deprecated; pass publish=PublishPolicy(every=...) to "
+                "StreamSession(...) instead — the kwargs will be removed "
+                "next release", DeprecationWarning, stacklevel=2)
+            if publish_every is not _UNSET:
+                policy = dataclasses.replace(
+                    policy, every=int(publish_every or 0))
+            if on_publish is not _UNSET and on_publish is not None:
+                legacy_hook = on_publish
+
+        hook = None
+        if policy.every > 0 or legacy_hook is not None:
+            base = self.events_processed
+            base_forgets = self.forgets
+            publish = (self.store.publish_async if policy.is_async
+                       else self.store.publish)
+
+            def hook(ev):
+                publish(ev.states, base + ev.events_processed,
+                        base_forgets + ev.forgets)
+                if legacy_hook is not None:
+                    legacy_hook(ev)
+
         res = run_stream(
             np.asarray(users), np.asarray(items), self.cfg, verbose=verbose,
-            publish_every=publish_every,
-            on_publish=(self._on_publish if publish_every else None),
+            publish_every=policy.every,
+            on_publish=hook,
+            publish_sync=not policy.is_async,
             initial_states=self._states, initial_carry=self._carry,
             initial_detector=self._detector)
         self._states = res.final_states
@@ -109,10 +169,6 @@ class StreamSession:
         self.forgets += res.forgets
         self._publish()
         return res
-
-    def _on_publish(self, ev) -> None:
-        self.store.publish(ev.states, self.events_processed + ev.events_processed,
-                           self.forgets + ev.forgets)
 
     def _publish(self) -> None:
         self.store.publish(self._states, self.events_processed, self.forgets)
@@ -147,7 +203,8 @@ class StreamSession:
     @classmethod
     def restore(cls, directory: str, cfg: StreamConfig,
                 step: int | None = None, *,
-                serve: ServeConfig | None = None) -> "StreamSession":
+                serve: ServeConfig | None = None,
+                publish: PublishPolicy | None = None) -> "StreamSession":
         """Resume a session from ``checkpoint`` output, at ``cfg.grid``.
 
         Grid-portable checkpoints regrid to the configured shape on the
@@ -155,7 +212,7 @@ class StreamSession:
         the scale-out path (see also :meth:`rescale` for live states).
         """
         ck: RestoredCheckpoint = restore_stream_checkpoint(directory, cfg, step)
-        session = cls(cfg, serve=serve)
+        session = cls(cfg, serve=serve, publish=publish)
         session._states = ck.states
         session._carry = ck.carry
         session._detector = ck.detector

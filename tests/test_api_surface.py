@@ -39,7 +39,7 @@ EXPECTED_ALL = {
     "StreamSession", "RestoredCheckpoint",
     "run_stream", "StreamResult",
     "save_stream_checkpoint", "restore_stream_checkpoint",
-    "ServeConfig", "ServeResponse", "QueryFrontend",
+    "PublishPolicy", "ServeConfig", "ServeResponse", "QueryFrontend",
     "SnapshotStore", "StaleSnapshotError", "grid_topn",
 }
 
@@ -280,7 +280,9 @@ def test_session_recommend_before_ingest_serves_popularity_fallback():
     assert (resp.ids == -1).all()        # and the popularity head is empty
 
 
-def test_restored_checkpoint_is_named_and_iterable(tmp_path):
+def test_restored_checkpoint_is_named_fields_only(tmp_path):
+    """The legacy 4-tuple unpack shim served its one deprecation release
+    (ISSUE 5) and is gone: RestoredCheckpoint is named fields only."""
     users, items = _stream(n=512)
     cfg = _cfg("disgd", backend="scan")
     s = repro.StreamSession(cfg)
@@ -290,8 +292,59 @@ def test_restored_checkpoint_is_named_and_iterable(tmp_path):
     ck = repro.restore_stream_checkpoint(str(tmp_path), cfg)
     assert isinstance(ck, repro.RestoredCheckpoint)
     assert ck.events_processed == users.size
-    # One-release back-compat: the legacy 4-tuple unpack still works.
-    n, states, carry, det = ck
-    assert n == ck.events_processed
-    _assert_trees_equal(states, ck.states)
-    assert det is ck.detector
+    assert ck.states is not None and ck.detector is None
+    with pytest.raises(TypeError):
+        n, states, carry, det = ck
+
+
+# ---------------------------------------------------------------------------
+# PublishPolicy: the consolidated publish knob surface (ISSUE 6)
+# ---------------------------------------------------------------------------
+
+
+def test_publish_policy_is_pinned():
+    p = repro.PublishPolicy()
+    assert (p.every, p.mode, p.max_staleness_events) == (0, "async", None)
+    assert repro.PublishPolicy(every=8, mode="sync").is_async is False
+    assert repro.PublishPolicy(every=8).staleness_bound_events(256) == 2048
+    assert repro.PublishPolicy().staleness_bound_events(256) is None
+    with pytest.raises(ValueError, match="mode"):
+        repro.PublishPolicy(mode="eventually")
+    with pytest.raises(ValueError):
+        repro.PublishPolicy(every=-1)
+
+
+def test_serveconfig_owns_the_policy_and_old_kwarg_warns():
+    fresh = repro.ServeConfig(publish=repro.PublishPolicy(
+        max_staleness_events=64))
+    assert fresh.max_staleness_events == 64     # mirror stays readable
+    with pytest.warns(DeprecationWarning, match="max_staleness_events"):
+        old = repro.ServeConfig(max_staleness_events=64)
+    assert old.publish.max_staleness_events == 64
+
+
+def test_session_ingest_legacy_publish_kwargs_warn_but_work():
+    users, items = _stream(n=512)
+    cfg = _cfg("disgd", backend="scan")
+    seen = []
+    s = repro.StreamSession(cfg)
+    with pytest.warns(DeprecationWarning, match="PublishPolicy"):
+        s.ingest(users, items, publish_every=1,
+                 on_publish=lambda ev: seen.append(ev.steps_done))
+    assert seen                                  # the hook still fires
+    # Publishes route through the session's (async by default) policy:
+    # versions may coalesce, but after a flush the store has converged
+    # to the stream position.
+    assert s.store.flush(timeout=10.0)
+    assert s.store.latest_version >= 1
+    assert s.store.acquire().events_processed == s.events_processed
+
+
+def test_session_owns_one_policy_for_ingest_and_serve():
+    cfg = _cfg("disgd", backend="scan")
+    policy = repro.PublishPolicy(every=2, mode="sync",
+                                 max_staleness_events=512)
+    s = repro.StreamSession(cfg, publish=policy)
+    assert s.publish_policy is policy
+    # The front-end enforces the same policy's staleness bound.
+    assert s.frontend.cfg.publish is policy

@@ -31,8 +31,9 @@ from repro.core.disgd import DisgdHyper
 from repro.core.pipeline import StreamConfig, run_stream
 from repro.core.routing import GridSpec
 from repro.core.serve import recommend_topn
-from repro.serve import (QueryFrontend, ServeConfig, SnapshotStore,
-                         StaleSnapshotError, grid_topn, popularity_topn)
+from repro.serve import (PublishPolicy, QueryFrontend, ServeConfig,
+                         SnapshotStore, StaleSnapshotError, grid_topn,
+                         popularity_topn)
 
 
 # ---------------------------------------------------------------------------
@@ -374,12 +375,85 @@ def test_frontend_answers_batches_larger_than_the_cache():
 
 
 def test_frontend_enforces_staleness_bound():
-    states, store, fe = _frontend(max_staleness_events=100)
+    states, store, fe = _frontend(
+        publish=PublishPolicy(max_staleness_events=100))
     uids = np.asarray(states.tables.user_ids).reshape(-1)
     q = uids[uids >= 0][:2]
-    fe.serve(q)                                      # fresh: fine
+    fresh = fe.serve(q)                              # fresh: fine
+    assert fresh.staleness_events == 0
     store.report_progress(500)
     with pytest.raises(StaleSnapshotError):
         fe.serve(q)
     store.publish(states, events_processed=500)      # republish unblocks
     fe.serve(q)
+
+
+# ---------------------------------------------------------------------------
+# Interleaved publish vs the response cache (ISSUE 6 satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_held_response_and_lazy_invalidation_across_rotation():
+    """A held ServeResponse must never reflect a snapshot published after
+    it was answered; the cache invalidates lazily (no eager flush) and
+    the next query returns post-rotation results."""
+    states_a = _random_grid_disgd(0, 1, 1)
+    states_b = _random_grid_disgd(99, 1, 1)     # different trained state
+    store = SnapshotStore()
+    store.publish(states_a, events_processed=100)
+    cfg = ServeConfig(algorithm="disgd", grid=GridSpec(1), u_cap=24,
+                      top_n=5, batch_size=16)
+    fe = QueryFrontend(store, cfg)
+
+    uids = np.asarray(states_a.tables.user_ids).reshape(-1)
+    q = uids[uids >= 0][:6]
+    first = fe.serve(q)
+    held_ids, held_scores = first.ids.copy(), first.scores.copy()
+    assert first.snapshot_version == 1
+
+    # Rotate to a different state tree: no eager flush — the stale
+    # entries stay resident until their next lookup.
+    store.publish(states_b, events_processed=200)
+    assert len(fe._cache) > 0
+    assert fe.stats["lazy_drops"] == 0
+
+    second = fe.serve(q)
+    assert second.snapshot_version == 2
+    assert second.cache_hits == 0               # every stale entry missed
+    assert fe.stats["lazy_drops"] == len(set(q.tolist()))
+
+    # The held response is immutable: rotation did not touch its arrays.
+    np.testing.assert_array_equal(first.ids, held_ids)
+    np.testing.assert_array_equal(first.scores, held_scores)
+    assert first.snapshot_version == 1
+
+    # And the new answers really come from the new snapshot: a fresh
+    # frontend over only states_b agrees bit for bit.
+    store_b = SnapshotStore()
+    store_b.publish(states_b, events_processed=200)
+    ref = QueryFrontend(store_b, cfg).serve(q)
+    np.testing.assert_array_equal(second.ids, ref.ids)
+    np.testing.assert_array_equal(second.scores, ref.scores)
+
+    # Entries re-cached under the new generation hit again.
+    third = fe.serve(q)
+    assert third.cache_hits == len(set(q.tolist()))
+    np.testing.assert_array_equal(third.ids, second.ids)
+
+
+def test_lazy_invalidation_only_touches_looked_up_entries():
+    """Rotation must not charge an O(cache) flush: entries not queried
+    again stay resident (and stale) until their own next lookup."""
+    states, store, fe = _frontend()
+    uids = np.asarray(states.tables.user_ids).reshape(-1)
+    q = np.unique(uids[uids >= 0])[:8]
+    fe.serve(q)
+    assert len(fe._cache) == q.size
+
+    store.publish(states, events_processed=10)       # rotation
+    fe.serve(q[:3])                                  # only 3 looked up
+    assert fe.stats["lazy_drops"] == 3
+    # The other 5 are still resident (stale, awaiting their own lookup).
+    assert len(fe._cache) == q.size
+    fe.serve(q)                                      # now the rest drop too
+    assert fe.stats["lazy_drops"] == q.size

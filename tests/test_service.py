@@ -1,0 +1,253 @@
+"""Mixed-load service harness: loadgen, async publishing, the runner.
+
+Pins the ISSUE 6 contracts:
+
+  * the load generator is seeded end to end — same ``LoadConfig`` ⇒ the
+    identical trace of query batches and arrival gaps — with Zipf query
+    skew, a controllable unknown-user fraction, and the three arrival
+    modes;
+  * ``mixed_schedule`` partitions the event stream exactly and
+    interleaves query batches proportionally, deterministically;
+  * ``SnapshotStore.publish_async`` rotates off-thread, coalesces under
+    backlog to the freshest buffer, keeps versions monotonic, and
+    ``flush()`` makes it deterministic for assertions;
+  * the engine's non-blocking publish boundary (``publish_sync=False``)
+    hands device scalars to the subscriber and never changes training
+    results;
+  * the deterministic interleaved service runner is bit-exact against a
+    straight ingest of the same events (queries are pure reads);
+  * the threaded runner overlaps real ingest with real queries and
+    reports tail latency, staleness and spike attribution.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+
+import repro
+from repro.core.pipeline import StreamConfig, run_stream
+from repro.core.routing import GridSpec
+from repro.serve import PublishPolicy, SnapshotStore
+from repro.serve.loadgen import LoadConfig, QueryLoad, mixed_schedule
+from repro.serve.service import ServiceConfig, ServiceReport, run_service
+
+
+def _stream(n=1536, seed=0):
+    from repro.data.stream import MOVIELENS_25M, scaled, synth_stream
+
+    users, items, _ = synth_stream(scaled(MOVIELENS_25M, 0.002), seed=seed)
+    return users[:n], items[:n]
+
+
+def _cfg(micro_batch=128, u_cap=512, i_cap=128, **over):
+    hyper = repro.get_algorithm("disgd").default_hyper()._replace(
+        u_cap=u_cap, i_cap=i_cap)
+    return StreamConfig(algorithm="disgd", grid=GridSpec(2),
+                        micro_batch=micro_batch, hyper=hyper,
+                        backend="scan", **over)
+
+
+def _assert_trees_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# Load generation
+# ---------------------------------------------------------------------------
+
+
+def test_loadgen_is_deterministic_per_seed():
+    cfg = LoadConfig(n_users=200, seed=42, query_batch=8, arrival="bursty")
+    a = list(QueryLoad(cfg).batches(20))
+    b = list(QueryLoad(cfg).batches(20))
+    for (qa, ga), (qb, gb) in zip(a, b):
+        np.testing.assert_array_equal(qa, qb)
+        assert ga == gb
+    c = list(QueryLoad(dataclasses.replace(cfg, seed=43)).batches(20))
+    assert any((qa != qc).any() for (qa, _), (qc, _) in zip(a, c))
+
+
+def test_loadgen_query_popularity_is_zipf_skewed():
+    gen = QueryLoad(LoadConfig(n_users=50, seed=0, query_batch=16,
+                               zipf_a=1.2, unknown_frac=0.0))
+    draws = np.concatenate([gen.batch() for _ in range(200)])
+    counts = np.bincount(draws, minlength=50)
+    # The head user is far above the uniform expectation; the tail is not.
+    assert counts.max() > 3 * draws.size / 50
+    assert np.median(counts) < draws.size / 50
+
+
+def test_loadgen_unknown_fraction_bounds():
+    known = QueryLoad(LoadConfig(n_users=64, seed=1, unknown_frac=0.0))
+    assert all((b < 64).all() for b in (known.batch() for _ in range(10)))
+    cold = QueryLoad(LoadConfig(n_users=64, seed=1, unknown_frac=1.0))
+    assert all((b >= 64).all() for b in (cold.batch() for _ in range(10)))
+
+
+def test_loadgen_arrival_modes():
+    closed = QueryLoad(LoadConfig(n_users=8, arrival="closed"))
+    assert all(closed.gap() == 0.0 for _ in range(10))
+    poisson = QueryLoad(LoadConfig(n_users=8, arrival="poisson",
+                                   rate_qps=100.0, seed=2))
+    gaps = [poisson.gap() for _ in range(500)]
+    assert all(g >= 0 for g in gaps)
+    assert 0.005 < np.mean(gaps) < 0.02          # ~1/100s mean, loose
+    with pytest.raises(ValueError, match="arrival"):
+        LoadConfig(arrival="fractal")
+
+
+def test_loadgen_bursty_modulates_the_rate():
+    gen = QueryLoad(LoadConfig(n_users=8, arrival="bursty", rate_qps=100.0,
+                               burst_factor=50.0, burst_len=30,
+                               quiet_len=30, seed=3))
+    gaps = np.asarray([gen.gap() for _ in range(2000)])
+    # Burst episodes produce a distinctly faster regime than quiet ones.
+    assert np.percentile(gaps, 10) < np.mean(gaps) / 5
+
+
+def test_mixed_schedule_partitions_and_interleaves():
+    sched = mixed_schedule(1000, 6, events_per_chunk=256, seed=0)
+    assert sum(k for op, k in sched if op == "ingest") == 1000
+    assert max(k for op, k in sched if op == "ingest") <= 256
+    assert sum(1 for op, _ in sched if op == "query") == 6
+    assert sched == mixed_schedule(1000, 6, events_per_chunk=256, seed=0)
+    # Proportional: at least one query lands before the final ingest chunk.
+    last_ingest = max(i for i, (op, _) in enumerate(sched) if op == "ingest")
+    assert any(op == "query" for op, _ in sched[:last_ingest])
+
+
+# ---------------------------------------------------------------------------
+# Async snapshot publishing
+# ---------------------------------------------------------------------------
+
+
+def _zero_states(cfg):
+    from repro.core import pipeline as pipeline_lib
+
+    return pipeline_lib.init_states(cfg)
+
+
+def test_publish_async_flush_is_deterministic_and_coalesces():
+    states = _zero_states(_cfg())
+    store = SnapshotStore()
+    n = 25
+    for k in range(n):
+        store.publish_async(states, (k + 1) * 10)
+    assert store.flush(timeout=10.0)
+    # The freshest enqueued buffer always wins; every enqueue is either
+    # rotated or coalesced away; versions stay monotonic.
+    assert store.acquire().events_processed == n * 10
+    assert store.progress == n * 10
+    assert store.stats["async_rotations"] == store.latest_version
+    assert store.stats["async_rotations"] + store.stats["coalesced"] == n
+
+
+def test_publish_async_accepts_device_scalars():
+    import jax.numpy as jnp
+
+    states = _zero_states(_cfg())
+    store = SnapshotStore()
+    store.publish_async(states, jnp.asarray(640), jnp.asarray(2))
+    assert store.flush(timeout=10.0)
+    snap = store.acquire()
+    assert snap.events_processed == 640 and snap.forgets == 2
+    assert isinstance(snap.events_processed, int)    # synced by the thread
+
+
+def test_subscribe_listener_fires_after_async_rotation():
+    states = _zero_states(_cfg())
+    store = SnapshotStore()
+    seen = []
+    store.subscribe(lambda snap: seen.append(snap.version))
+    store.publish(states, 10)
+    store.publish_async(states, 20)
+    assert store.flush(timeout=10.0)
+    assert seen[0] == 1 and seen[-1] == store.latest_version
+
+
+def test_engine_nonblocking_publish_hands_device_scalars():
+    users, items = _stream(512)
+    cfg = _cfg()
+    events = []
+    run_stream(users, items, cfg, publish_every=2,
+               on_publish=events.append, publish_sync=False)
+    assert events
+    for ev in events:
+        assert not isinstance(ev.events_processed, int)  # still on device
+    assert int(events[-1].events_processed) == users.size
+
+
+def test_async_publish_policy_never_changes_training_results():
+    users, items = _stream(1024)
+    cfg = _cfg()
+    s = repro.StreamSession(cfg, publish=PublishPolicy(every=2, mode="async"))
+    res = s.ingest(users, items)
+    assert s.store.flush(timeout=10.0)
+    plain = run_stream(users, items, cfg)
+    _assert_trees_equal(s.states, plain.final_states)
+    assert res.events_processed == plain.events_processed
+    # The store converged to the final stream position.
+    assert s.store.acquire().events_processed == users.size
+    assert s.store.stats["async_rotations"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# The mixed-load runner
+# ---------------------------------------------------------------------------
+
+
+def test_interleaved_service_run_is_bit_exact_vs_straight_ingest():
+    users, items = _stream(1536)
+    cfg = _cfg()          # chunks of 256 = 2 micro-batches: scan boundaries
+    s = repro.StreamSession(cfg, publish=PublishPolicy(every=2, mode="sync"))
+    report = run_service(
+        s, users, items,
+        LoadConfig(n_users=int(users.max()) + 1, seed=5, query_batch=8),
+        ServiceConfig(mode="interleaved", events_per_chunk=256,
+                      query_batches=6))
+    straight = repro.StreamSession(cfg)
+    straight.ingest(users, items)
+    _assert_trees_equal(s.states, straight.states)
+
+    assert isinstance(report, ServiceReport)
+    assert len(report.records) == 6
+    assert report.events_processed == users.size
+    assert all(r.latency_s > 0 for r in report.records)
+    assert all(r.staleness_events >= 0 for r in report.records)
+    s2 = report.summary()
+    for key in ("p50_ms", "p99_ms", "combined_ops_per_s",
+                "staleness_max", "ingest_events_per_s"):
+        assert key in s2, key
+
+
+def test_threaded_service_run_overlaps_ingest_and_queries():
+    users, items = _stream(2048)
+    cfg = _cfg()
+    s = repro.StreamSession(cfg, publish=PublishPolicy(every=2, mode="async"))
+    # Warm both compiled paths so the overlap window is real work.
+    s.ingest(users[:256], items[:256])
+    s.recommend(np.unique(users)[:8])
+    report = run_service(
+        s, users[256:], items[256:],
+        LoadConfig(n_users=int(users.max()) + 1, seed=6, query_batch=8,
+                   arrival="closed"),
+        ServiceConfig(mode="threaded", query_batches=10))
+    assert report.events_processed == users.size - 256
+    assert len(report.records) >= 10
+    assert s.events_processed == users.size
+    summary = report.summary()
+    assert summary["p99_ms"] >= summary["p50_ms"] > 0
+    # Snapshot versions observed by queries never go backwards.
+    versions = [r.snapshot_version for r in report.records]
+    assert versions == sorted(versions)
+
+
+def test_service_config_validation():
+    with pytest.raises(ValueError, match="mode"):
+        ServiceConfig(mode="quantum")
+    with pytest.raises(ValueError):
+        ServiceConfig(events_per_chunk=0)
