@@ -9,8 +9,10 @@ latency spikes. This runner measures exactly that, in two modes:
   * ``mode="interleaved"`` — single-threaded, deterministic: a seeded
     ``loadgen.mixed_schedule`` dictates the exact order of ingest chunks
     and query batches, so the model states (and answers) are
-    bit-reproducible across runs. This is the mode tests use, and the
-    fallback where threads are unwelcome.
+    bit-reproducible across runs — pending async rotations are drained
+    before each query batch, so this holds even under an async
+    ``PublishPolicy``. This is the mode tests use, and the fallback
+    where threads are unwelcome.
   * ``mode="threaded"`` — one ingest thread runs the full event stream
     through ``session.ingest`` (publishing per the session's
     ``PublishPolicy``) while this thread issues query batches open-loop,
@@ -196,17 +198,24 @@ def run_service(session, users, items, load: LoadConfig,
                 ingest_wall += time.perf_counter() - ti
                 pos += k
             else:
+                # Drain pending async rotations so the answering snapshot
+                # is a pure function of the schedule position — keeps this
+                # mode bit-reproducible under PublishPolicy(mode="async").
+                session.store.flush()
                 records.append(_serve_one(session, gen.batch()))
         session.store.flush(timeout=30.0)
         wall = time.perf_counter() - t0
     else:
         done = threading.Event()
         ingest_span = [0.0]
+        ingest_err: list[BaseException | None] = [None]
 
         def _ingest():
             ti = time.perf_counter()
             try:
                 session.ingest(users, items)
+            except BaseException as e:  # re-raised on the caller after join
+                ingest_err[0] = e
             finally:
                 ingest_span[0] = time.perf_counter() - ti
                 done.set()
@@ -239,6 +248,10 @@ def run_service(session, users, items, load: LoadConfig,
                                   and done.is_set()):
                     time.sleep(min(pause, 0.05))
             trainer.join()
+            if ingest_err[0] is not None:
+                # A crashed trainer must fail the run, not produce a
+                # report claiming the full stream was processed.
+                raise ingest_err[0]
         finally:
             sys.setswitchinterval(prev_switch)
         session.store.flush(timeout=30.0)
@@ -251,5 +264,5 @@ def run_service(session, users, items, load: LoadConfig,
         events_processed=int(len(users)),
         queries=len(records) * load.query_batch,
         ingest_wall_s=ingest_wall,
-        publish_stats=dict(session.store.stats),
+        publish_stats=session.store.stats_snapshot(),
     )

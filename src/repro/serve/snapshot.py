@@ -122,9 +122,14 @@ class SnapshotStore:
         self._listeners: list[Callable[[Snapshot], None]] = []
         # Async publish machinery: pending device-ready buffers drained by
         # a lazily-started daemon thread; ``_idle`` is set whenever the
-        # queue is empty and no rotation is in flight.
+        # queue is empty and no rotation is in flight. ``_draining`` is
+        # the spawn gate: it flips true when a drain thread is started
+        # and false only in the same critical section where that thread
+        # decides to exit, so an enqueue can never observe a thread that
+        # is alive but already past its exit decision.
         self._pending: collections.deque = collections.deque()
         self._publisher: threading.Thread | None = None
+        self._draining = False
         self._idle = threading.Event()
         self._idle.set()
         self.stats = collections.Counter()
@@ -171,29 +176,56 @@ class SnapshotStore:
         with self._lock:
             self._pending.append((states, events_processed, forgets))
             self._idle.clear()
-            if self._publisher is None or not self._publisher.is_alive():
+            if not self._draining:
+                self._draining = True
                 self._publisher = threading.Thread(
                     target=self._drain_forever, name="snapshot-publisher",
                     daemon=True)
                 self._publisher.start()
 
     def _drain_forever(self) -> None:
-        while True:
+        try:
+            while True:
+                with self._lock:
+                    if not self._pending:
+                        # Exit decision and spawn-gate clear are one
+                        # critical section (see __init__): an enqueue
+                        # serialized after this sees _draining False and
+                        # spawns a fresh thread — no stranded buffers.
+                        self._draining = False
+                        self._idle.set()
+                        return
+                    # Coalesce: rotate only the freshest pending buffer.
+                    skipped = len(self._pending) - 1
+                    states, events, forgets = self._pending[-1]
+                    self._pending.clear()
+                    self.stats["coalesced"] += skipped
+                self._rotate(states, int(events), int(forgets))
+                with self._lock:
+                    self.stats["async_rotations"] += 1
+        except BaseException:
+            # A failing rotation (e.g. a raising listener) must not wedge
+            # the store: reopen the spawn gate so the next enqueue
+            # restarts draining, and don't leave flush() hanging on an
+            # empty queue.
             with self._lock:
+                self._draining = False
                 if not self._pending:
                     self._idle.set()
-                    return          # thread exits; restarted on next enqueue
-                # Coalesce: rotate only the freshest pending buffer.
-                skipped = len(self._pending) - 1
-                states, events, forgets = self._pending[-1]
-                self._pending.clear()
-                self.stats["coalesced"] += skipped
-            self._rotate(states, int(events), int(forgets))
-            self.stats["async_rotations"] += 1
+            raise
 
     def flush(self, timeout: float | None = None) -> bool:
         """Block until every pending async publish has rotated."""
         return self._idle.wait(timeout)
+
+    def stats_snapshot(self) -> dict[str, int]:
+        """A consistent copy of ``stats``, taken under the store lock.
+
+        Use this from other threads while the publisher may be live;
+        reading ``stats`` directly is only safe once ``flush`` returned.
+        """
+        with self._lock:
+            return dict(self.stats)
 
     # -- subscribers ------------------------------------------------------
 

@@ -171,6 +171,11 @@ class StreamSession:
         return res
 
     def _publish(self) -> None:
+        # Drain in-flight async rotations first: a mid-stream buffer
+        # rotating after this final sync publish would regress the front
+        # snapshot to an older stream position, breaking the "recommend
+        # right after ingest sees the final state" guarantee.
+        self.store.flush()
         self.store.publish(self._states, self.events_processed, self.forgets)
 
     # -- serve ------------------------------------------------------------

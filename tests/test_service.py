@@ -158,6 +158,19 @@ def test_publish_async_accepts_device_scalars():
     assert isinstance(snap.events_processed, int)    # synced by the thread
 
 
+def test_publish_async_repeated_flush_cycles_never_strand_buffers():
+    # Stresses the enqueue-vs-publisher-exit window: an enqueue landing
+    # just as the drain thread decides to exit must still spawn a new
+    # drain (the _draining gate), or flush() would hang on a stranded
+    # buffer.
+    states = _zero_states(_cfg())
+    store = SnapshotStore()
+    for k in range(200):
+        store.publish_async(states, k + 1)
+        assert store.flush(timeout=10.0)
+        assert store.acquire().events_processed == k + 1
+
+
 def test_subscribe_listener_fires_after_async_rotation():
     states = _zero_states(_cfg())
     store = SnapshotStore()
@@ -193,6 +206,19 @@ def test_async_publish_policy_never_changes_training_results():
     # The store converged to the final stream position.
     assert s.store.acquire().events_processed == users.size
     assert s.store.stats["async_rotations"] >= 1
+
+
+def test_ingest_final_publish_drains_async_backlog_first():
+    # No flush() here on purpose: ingest's end-of-stream synchronous
+    # publish must drain the async backlog before rotating, so the front
+    # snapshot can never regress to a mid-stream buffer that rotates late.
+    users, items = _stream(1024)
+    s = repro.StreamSession(_cfg(),
+                            publish=PublishPolicy(every=1, mode="async"))
+    s.ingest(users, items)
+    snap = s.store.acquire()
+    assert snap.events_processed == users.size
+    assert snap.version == s.store.latest_version
 
 
 # ---------------------------------------------------------------------------
@@ -244,6 +270,23 @@ def test_threaded_service_run_overlaps_ingest_and_queries():
     # Snapshot versions observed by queries never go backwards.
     versions = [r.snapshot_version for r in report.records]
     assert versions == sorted(versions)
+
+
+def test_threaded_service_run_surfaces_ingest_crash():
+    users, items = _stream(512)
+    s = repro.StreamSession(_cfg())
+    s.ingest(users[:256], items[:256])   # publish once so queries answer
+
+    def boom(*a, **k):
+        raise RuntimeError("ingest exploded")
+
+    s.ingest = boom
+    with pytest.raises(RuntimeError, match="ingest exploded"):
+        run_service(
+            s, users[256:], items[256:],
+            LoadConfig(n_users=int(users.max()) + 1, seed=7, query_batch=4,
+                       arrival="closed"),
+            ServiceConfig(mode="threaded", query_batches=2))
 
 
 def test_service_config_validation():
