@@ -28,8 +28,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
-import os
+import time
 
 import numpy as np
 
@@ -134,17 +133,12 @@ def smoke_rows(events: int = EVENTS):
 def append_smoke(out_path: str = "BENCH_smoke.json",
                  events: int = EVENTS) -> None:
     """Append the drift rows to the CI smoke artifact (see bench_serve)."""
+    from benchmarks.common import smoke_update
+
+    t0 = time.perf_counter()
     new_rows = smoke_rows(events)
-    if os.path.exists(out_path):
-        with open(out_path) as f:
-            payload = json.load(f)
-    else:
-        payload = {"suite": "smoke", "rows": []}
-    payload["rows"] = [r for r in payload["rows"]
-                       if not str(r.get("name", "")).startswith("drift/")]
-    payload["rows"].extend(new_rows)
-    with open(out_path, "w") as f:
-        json.dump(payload, f, indent=2)
+    smoke_update(out_path, "drift/", new_rows,
+                 wall_seconds=time.perf_counter() - t0)
     for r in new_rows:
         rec = (r["recovery_events"] if r["recovery_events"] is not None
                else f">{r['post_drift_horizon']}")

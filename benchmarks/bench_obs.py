@@ -1,0 +1,193 @@
+"""Observability overhead gate: telemetry must ride (nearly) free.
+
+Claim under test: the device-resident telemetry vector
+(``StreamConfig.telemetry``) adds a handful of fused integer adds to
+the scan carry and **no** per-micro-batch host sync, so switching it on
+must not tax ingest throughput. The gate CI enforces: best-of-``REPEATS``
+scan-engine events/s with telemetry on must stay within
+``1 - OVERHEAD_BUDGET`` (3%) of telemetry off, measured back-to-back on
+the same stream in the same process.
+
+Two correctness invariants ride in the same artifact row, because a
+telemetry vector that is cheap but wrong is worse than none:
+
+  * host-vs-scan parity — the full ``telemetry_ints`` vector (events,
+    drops, requeues, forgetting evictions, recall hits/evals, per-bucket
+    occupancy HWM) must fold bit-identically through the host reference
+    loop and the scanned engine;
+  * percentile exactness — registry histograms retain raw samples up to
+    their cap, so their percentiles must match ``np.percentile`` on the
+    same observations exactly.
+
+  PYTHONPATH=src python -m benchmarks.bench_obs            # full rows
+  PYTHONPATH=src python -m benchmarks.bench_obs --smoke    # CI gate
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+import time
+
+import numpy as np
+
+REPEATS = 8
+MICRO_BATCH = 128
+# Telemetry-on may lose up to this fraction of telemetry-off throughput.
+OVERHEAD_BUDGET = 0.03
+
+
+def _throughput_pair(events: int, algorithm: str = "disgd", n_i: int = 4,
+                     repeats: int = REPEATS):
+    """(events/s on, events/s off, on/off ratio) over ``repeats`` paired
+    runs, alternating which config runs first each repeat so CPU
+    frequency ramp / cache-warming drift lands on both sides evenly.
+
+    The ratio is ``max(best_on / best_off, best pairwise on_i/off_i)``:
+    on a contended box single runs swing far more than any real
+    telemetry cost, so the gate scores the quietest evidence available —
+    either side's best run, or the best back-to-back pair."""
+    from benchmarks.common import make_cfg, stream_for
+    from repro.core.pipeline import run_stream
+
+    users, items = stream_for("movielens", events)
+    cfg_on = make_cfg(algorithm, "movielens", n_i, backend="scan",
+                      micro_batch=MICRO_BATCH)
+    cfg_off = dataclasses.replace(cfg_on, telemetry=False)
+    runs = {"on": [], "off": []}
+    plan = {"on": cfg_on, "off": cfg_off}
+    for i in range(repeats):
+        order = ("off", "on") if i % 2 == 0 else ("on", "off")
+        for key in order:
+            runs[key].append(run_stream(users, items, plan[key]).throughput)
+    on, off = max(runs["on"]), max(runs["off"])
+    ratio = max(on / max(off, 1e-9),
+                max(a / max(b, 1e-9)
+                    for a, b in zip(runs["on"], runs["off"])))
+    return on, off, ratio
+
+
+def _parity(events: int = 2048, algorithm: str = "disgd", n_i: int = 2):
+    """(host vector, scan vector) as int dicts — must be equal.
+
+    LRU forgetting with a short max-age makes the eviction counter
+    non-trivial at smoke scale; parity holds because nothing overflows
+    the engine's re-queue on this stream (the same precondition under
+    which the two backends train identically at all).
+    """
+    from benchmarks.common import make_cfg, stream_for
+    from repro.core.forgetting import ForgettingConfig
+    from repro.core.pipeline import run_stream
+    from repro.obs import telemetry_ints
+
+    forget = ForgettingConfig(policy="lru", trigger_every=300,
+                              lru_max_age=200)
+    users, items = stream_for("movielens", events)
+    cfg = make_cfg(algorithm, "movielens", n_i, forgetting=forget,
+                   backend="host", micro_batch=256)
+    host = run_stream(users, items, cfg)
+    scan = run_stream(users, items,
+                      dataclasses.replace(cfg, backend="scan"))
+    return telemetry_ints(host.telemetry), telemetry_ints(scan.telemetry)
+
+
+def _percentiles_exact(n: int = 5000) -> bool:
+    """Registry histogram percentiles vs np.percentile on raw samples."""
+    from repro.obs import MetricsRegistry
+
+    rng = np.random.default_rng(0)
+    xs = rng.lognormal(mean=-6.0, sigma=1.5, size=n)
+    h = MetricsRegistry().histogram("obs_check_seconds", "spot check")
+    for x in xs:
+        h.observe(float(x))
+    snap = h.snapshot()
+    return bool(snap.exact) and all(
+        np.isclose(snap.percentile(q), np.percentile(xs, q),
+                   rtol=1e-12, atol=0.0)
+        for q in (50, 90, 99))
+
+
+def rows(events: int = 8192):
+    out = []
+    for algorithm in ("disgd", "dics"):
+        ev = events // (2 if algorithm == "dics" else 1)
+        on, off, ratio = _throughput_pair(ev, algorithm)
+        out.append({
+            "name": f"obs/{algorithm}/movielens/n_i=4",
+            "us_per_call": 1e6 / max(on, 1e-9),
+            "derived": (f"on={on:,.0f}ev/s off={off:,.0f}ev/s "
+                        f"overhead={max(0.0, 1 - ratio) * 1e2:.1f}%"),
+        })
+    return out
+
+
+def smoke_rows(events: int = 8192):
+    """CI subset: DISGD throughput gate + both correctness invariants."""
+    on, off, ratio = _throughput_pair(events)
+    host, scan = _parity()
+    return [{
+        "name": "obs/disgd/movielens/n_i=4",
+        "events": events,
+        "events_per_sec_on": on,
+        "events_per_sec_off": off,
+        "overhead_frac": round(max(0.0, 1.0 - ratio), 4),
+        "telemetry_parity": host == scan,
+        "telemetry_host": host,
+        "percentiles_exact": _percentiles_exact(),
+    }]
+
+
+def append_smoke(out_path: str = "BENCH_smoke.json",
+                 events: int = 8192) -> int:
+    """Append the obs row to the smoke artifact and enforce the gates
+    (returns exit status): telemetry-on throughput within
+    ``OVERHEAD_BUDGET`` of off, host/scan fold bit-identical, registry
+    percentiles exact."""
+    from benchmarks.common import smoke_update
+
+    t0 = time.perf_counter()
+    new_rows = smoke_rows(events)
+    smoke_update(out_path, "obs/", new_rows,
+                 wall_seconds=time.perf_counter() - t0)
+    r = new_rows[0]
+    print(f"{r['name']},on={r['events_per_sec_on']:,.0f}ev/s,"
+          f"off={r['events_per_sec_off']:,.0f}ev/s,"
+          f"overhead={r['overhead_frac'] * 1e2:.1f}%,"
+          f"parity={r['telemetry_parity']},"
+          f"percentiles_exact={r['percentiles_exact']}")
+    print(f"# appended obs row to {out_path}")
+    status = 0
+    if r["overhead_frac"] > OVERHEAD_BUDGET:
+        print(f"# FAIL: telemetry costs {r['overhead_frac'] * 1e2:.1f}% "
+              f"ingest throughput (gate: {OVERHEAD_BUDGET * 1e2:.0f}%)",
+              file=sys.stderr)
+        status = 2
+    if not r["telemetry_parity"]:
+        print("# FAIL: host and scan telemetry folds differ",
+              file=sys.stderr)
+        status = 2
+    if not r["percentiles_exact"]:
+        print("# FAIL: registry histogram percentiles deviate from "
+              "np.percentile", file=sys.stderr)
+        status = 2
+    return status
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: append the obs row + enforce the "
+                         "overhead/parity/percentile gates")
+    ap.add_argument("--smoke-out", default="BENCH_smoke.json")
+    ap.add_argument("--events", type=int, default=8192)
+    args = ap.parse_args()
+    if args.smoke:
+        raise SystemExit(append_smoke(args.smoke_out, args.events))
+    print("name,us_per_call,derived")
+    for row in rows(args.events):
+        print(f"{row['name']},{row['us_per_call']:.2f},{row['derived']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -21,8 +21,6 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
-import os
 import time
 
 import numpy as np
@@ -141,17 +139,12 @@ def smoke_rows(events: int = 4096):
 def append_smoke(out_path: str = "BENCH_smoke.json",
                  events: int = 4096) -> None:
     """Append the regrid rows to the CI smoke artifact (see bench_serve)."""
+    from benchmarks.common import smoke_update
+
+    t0 = time.perf_counter()
     new_rows = smoke_rows(events)
-    if os.path.exists(out_path):
-        with open(out_path) as f:
-            payload = json.load(f)
-    else:
-        payload = {"suite": "smoke", "rows": []}
-    payload["rows"] = [r for r in payload["rows"]
-                       if not str(r.get("name", "")).startswith("regrid/")]
-    payload["rows"].extend(new_rows)
-    with open(out_path, "w") as f:
-        json.dump(payload, f, indent=2)
+    smoke_update(out_path, "regrid/", new_rows,
+                 wall_seconds=time.perf_counter() - t0)
     for r in new_rows:
         print(f"{r['name']},regrid_ms={r['regrid_ms']:.2f},"
               f"post_events/s={r['post_events_per_sec']:,.0f},"

@@ -19,8 +19,6 @@ plane next to the training plane.
 from __future__ import annotations
 
 import argparse
-import json
-import os
 import time
 
 import numpy as np
@@ -134,17 +132,12 @@ def append_smoke(out_path: str = "BENCH_smoke.json",
     """Append the serving rows to the CI smoke artifact (created by
     ``benchmarks.run --smoke``; a fresh payload is written if absent) so
     one JSON tracks both the training and the serving plane."""
+    from benchmarks.common import smoke_update
+
+    t0 = time.perf_counter()
     new_rows = smoke_rows(events)
-    if os.path.exists(out_path):
-        with open(out_path) as f:
-            payload = json.load(f)
-    else:
-        payload = {"suite": "smoke", "rows": []}
-    payload["rows"] = [r for r in payload["rows"]
-                       if not str(r.get("name", "")).startswith("serve/")]
-    payload["rows"].extend(new_rows)
-    with open(out_path, "w") as f:
-        json.dump(payload, f, indent=2)
+    smoke_update(out_path, "serve/", new_rows,
+                 wall_seconds=time.perf_counter() - t0)
     for r in new_rows:
         print(f"{r['name']},qps_batch64={r['qps_batch64']:,.0f},"
               f"qps_per_query={r['qps_per_query']:,.0f},"

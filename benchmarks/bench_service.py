@@ -25,8 +25,6 @@ measured in the same run — the regression gate CI enforces.
 from __future__ import annotations
 
 import argparse
-import json
-import os
 import sys
 import time
 
@@ -94,7 +92,7 @@ def _mixed(algorithm: str, n_i: int, events: int, *, micro_batch: int = 256,
            every: int = 4, mode: str = "async", arrival: str = "closed",
            rate_qps: float = 500.0, query_batch: int = 16,
            query_batches: int = 60, svc_mode: str = "threaded",
-           events_per_chunk: int = 512):
+           events_per_chunk: int = 512, metrics_json: str | None = None):
     """One full mixed-load measurement; returns a metrics dict."""
     from benchmarks.common import stream_for
     from repro.serve.loadgen import LoadConfig
@@ -124,6 +122,10 @@ def _mixed(algorithm: str, n_i: int, events: int, *, micro_batch: int = 256,
                         events_per_chunk=events_per_chunk)
     report = run_service(session, mu, mi, load, svc)
     s = report.summary()
+    if metrics_json:
+        # Full session registry (stream_*, serve_*, snapshot_*,
+        # span_seconds) — the artifact CI uploads next to the smoke row.
+        session.metrics.write_json(metrics_json)
     s.update(
         isolated_p50_ms=round(iso_p50, 3),
         isolated_p99_ms=round(iso_p99, 3),
@@ -153,7 +155,7 @@ def rows(events: int = 4096):
     return out
 
 
-def smoke_rows(events: int = 32768):
+def smoke_rows(events: int = 32768, metrics_json: str | None = None):
     """CI subset: one deterministic interleaved mixed-load run (DISGD,
     n_i=4, async publish every micro-batch, 64-query batches between
     2048-event ingest chunks).
@@ -166,7 +168,8 @@ def smoke_rows(events: int = 32768):
     The threaded closed-loop numbers stay in the full ``rows()`` sweep."""
     s = _mixed("disgd", 4, events, micro_batch=256, every=1, mode="async",
                svc_mode="interleaved", events_per_chunk=2048,
-               query_batch=64, query_batches=60)
+               query_batch=64, query_batches=60,
+               metrics_json=metrics_json)
     return [{
         "name": "service/disgd/movielens/n_i=4",
         "p99_under_load_ms": s["p99_ms"],
@@ -185,21 +188,18 @@ def smoke_rows(events: int = 32768):
 
 
 def append_smoke(out_path: str = "BENCH_smoke.json",
-                 events: int = 32768) -> int:
+                 events: int = 32768,
+                 metrics_json: str | None = "service_metrics.json") -> int:
     """Append the service row to the smoke artifact and enforce the gate:
     p99-under-load must stay within 2x the isolated-serve p99 measured on
-    the same path in the same run (returns exit status)."""
-    new_rows = smoke_rows(events)
-    if os.path.exists(out_path):
-        with open(out_path) as f:
-            payload = json.load(f)
-    else:
-        payload = {"suite": "smoke", "rows": []}
-    payload["rows"] = [r for r in payload["rows"]
-                       if not str(r.get("name", "")).startswith("service/")]
-    payload["rows"].extend(new_rows)
-    with open(out_path, "w") as f:
-        json.dump(payload, f, indent=2)
+    the same path in the same run (returns exit status). Also exports the
+    mixed-load session's metrics registry to ``metrics_json``."""
+    from benchmarks.common import smoke_update
+
+    t0 = time.perf_counter()
+    new_rows = smoke_rows(events, metrics_json=metrics_json)
+    smoke_update(out_path, "service/", new_rows,
+                 wall_seconds=time.perf_counter() - t0)
 
     r = new_rows[0]
     print(f"{r['name']},p99_under_load={r['p99_under_load_ms']:.2f}ms,"
@@ -209,6 +209,8 @@ def append_smoke(out_path: str = "BENCH_smoke.json",
           f"ingest_ratio={r['ingest_ratio']:.2f},"
           f"stale_p95={r['staleness_p95']}")
     print(f"# appended service row to {out_path}")
+    if metrics_json:
+        print(f"# wrote session metrics registry to {metrics_json}")
     if r["load_p99_over_isolated"] > 2.0:
         print(f"# FAIL: p99 under load is {r['load_p99_over_isolated']:.2f}x "
               f"the isolated p99 (gate: 2x)", file=sys.stderr)
@@ -222,12 +224,16 @@ def main() -> None:
                     help="CI mode: append the service row + enforce the "
                          "p99-under-load <= 2x isolated gate")
     ap.add_argument("--smoke-out", default="BENCH_smoke.json")
+    ap.add_argument("--metrics-json", default="service_metrics.json",
+                    help="smoke mode: where to export the mixed-load "
+                         "session's metrics registry")
     ap.add_argument("--events", type=int, default=None,
                     help="event-stream length (default: 32768 smoke, "
                          "4096 sweep)")
     args = ap.parse_args()
     if args.smoke:
-        raise SystemExit(append_smoke(args.smoke_out, args.events or 32768))
+        raise SystemExit(append_smoke(args.smoke_out, args.events or 32768,
+                                      args.metrics_json))
     print("name,us_per_call,derived")
     for row in rows(args.events or 4096):
         print(f"{row['name']},{row['us_per_call']:.2f},{row['derived']}")

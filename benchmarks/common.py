@@ -1,6 +1,10 @@
-"""Shared benchmark scaffolding: scaled dataset profiles + runners."""
+"""Shared benchmark scaffolding: scaled dataset profiles + runners,
+plus the single writer for the CI smoke artifact (``BENCH_smoke.json``)."""
 
 from __future__ import annotations
+
+import json
+import os
 
 import numpy as np
 
@@ -72,3 +76,37 @@ def run(algorithm: str, dataset: str, n_i: int, events: int,
 
 LRU = ForgettingConfig(policy="lru", trigger_every=2048, lru_max_age=3000)
 LFU = ForgettingConfig(policy="lfu", trigger_every=2048, lfu_min_freq=2)
+
+
+# Version of the BENCH_smoke.json payload layout. v2 adds the top-level
+# ``schema_version`` itself and a ``wall_seconds`` field on every row, so
+# trend tooling can cost each suite, not just read its result.
+SMOKE_SCHEMA_VERSION = 2
+
+
+def smoke_update(out_path: str, prefix: str, rows: list,
+                 wall_seconds: float | None = None) -> None:
+    """Merge ``rows`` into the CI smoke artifact at ``out_path``.
+
+    The artifact accretes across writers (``benchmarks.run --smoke``
+    creates it; ``bench_serve`` / ``bench_service`` / ``bench_regrid`` /
+    ``bench_drift`` / ``bench_obs`` append): rows whose ``name`` starts
+    with ``prefix`` are replaced (idempotent re-runs), everything else is
+    preserved. Stamps ``schema_version`` on the payload and, when
+    ``wall_seconds`` is given, that batch wall on each new row that does
+    not already carry its own.
+    """
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            payload = json.load(f)
+    else:
+        payload = {"suite": "smoke", "rows": []}
+    payload["schema_version"] = SMOKE_SCHEMA_VERSION
+    if wall_seconds is not None:
+        for r in rows:
+            r.setdefault("wall_seconds", round(wall_seconds, 3))
+    payload["rows"] = [r for r in payload.get("rows", [])
+                       if not str(r.get("name", "")).startswith(prefix)]
+    payload["rows"].extend(rows)
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)

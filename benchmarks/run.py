@@ -14,7 +14,7 @@ import sys
 import time
 
 SUITES = ("kernels", "recall", "memory", "forgetting", "throughput", "skew",
-          "serve", "service", "regrid", "drift")
+          "serve", "service", "regrid", "drift", "obs")
 
 
 def smoke(out_path: str = "BENCH_smoke.json", events: int = 4096) -> None:
@@ -23,17 +23,24 @@ def smoke(out_path: str = "BENCH_smoke.json", events: int = 4096) -> None:
     import jax
 
     from benchmarks import bench_throughput
+    from benchmarks.common import SMOKE_SCHEMA_VERSION
 
     t0 = time.perf_counter()
     rows = bench_throughput.smoke_rows(events)
+    total = time.perf_counter() - t0
+    for row in rows:
+        # throughput rows already carry their own run wall; anything
+        # without one gets the batch wall, same rule as smoke_update().
+        row.setdefault("wall_seconds", round(total, 3))
     payload = {
         "suite": "smoke",
+        "schema_version": SMOKE_SCHEMA_VERSION,
         "events": events,
         "backend": jax.default_backend(),
         "python": platform.python_version(),
         "jax": jax.__version__,
         "rows": rows,
-        "total_seconds": time.perf_counter() - t0,
+        "total_seconds": total,
     }
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=2)
@@ -60,9 +67,9 @@ def main() -> None:
     only = set(args.only.split(",")) if args.only else set(SUITES)
 
     from benchmarks import (bench_drift, bench_forgetting, bench_kernels,
-                            bench_memory, bench_recall, bench_regrid,
-                            bench_serve, bench_service, bench_skew,
-                            bench_throughput)
+                            bench_memory, bench_obs, bench_recall,
+                            bench_regrid, bench_serve, bench_service,
+                            bench_skew, bench_throughput)
 
     scale = 4 if args.fast else 1
     plans = {
@@ -76,6 +83,7 @@ def main() -> None:
         "service": lambda: bench_service.rows(4_096 // scale),
         "regrid": lambda: bench_regrid.rows(8_192 // scale),
         "drift": lambda: bench_drift.rows(32_768 // scale),
+        "obs": lambda: bench_obs.rows(8_192 // scale),
     }
 
     print("name,us_per_call,derived")

@@ -17,6 +17,11 @@ This is the supported import surface (pinned by
     :class:`DriftPolicy`, and the built-in hyper tuples.
   * **Streaming / serving primitives** — for power users composing the
     layers directly.
+  * **Observability** — :class:`MetricsRegistry`: one registry of typed,
+    labeled counters / gauges / histograms spanning engine telemetry,
+    the snapshot store and the query front-end, exportable as Prometheus
+    text or JSON. The full toolkit (spans, profiler capture, device
+    telemetry helpers) lives in :mod:`repro.obs`.
 
 Deep-module imports (``repro.core.pipeline``, ``repro.serve.plane``, …)
 keep working — they are the implementation, and internal layout may
@@ -33,6 +38,7 @@ from repro.core.pipeline import (RestoredCheckpoint, StreamConfig,
                                  run_stream, save_stream_checkpoint)
 from repro.core.routing import GridSpec
 from repro.drift import DriftPolicy
+from repro.obs import MetricsRegistry
 from repro.serve import (PublishPolicy, QueryFrontend, ServeConfig,
                          ServeResponse, SnapshotStore, StaleSnapshotError,
                          grid_topn)
@@ -72,4 +78,6 @@ __all__ = [
     "SnapshotStore",
     "StaleSnapshotError",
     "grid_topn",
+    # observability
+    "MetricsRegistry",
 ]

@@ -55,6 +55,7 @@ from repro.core import routing, state as state_lib
 from repro.core.evaluator import RecallAccumulator
 from repro.drift import controller as controller_lib
 from repro.drift import detector as detector_lib
+from repro.obs import telemetry as telemetry_lib
 
 __all__ = ["make_worker_fn", "make_pallas_worker_fn", "run_stream_device",
            "PublishEvent"]
@@ -147,9 +148,15 @@ def _make_batch_step(cfg, worker_fn):
             partial(forgetting_lib.apply_forgetting, cfg=cfg.forgetting)
         )
     occ_fn = jax.vmap(lambda s: state_lib.occupancy(s.tables))
+    tel_on = cfg.telemetry
+
+    def _occ_total(s):
+        u, i = occ_fn(s)
+        return (jnp.sum(u) + jnp.sum(i)).astype(jnp.int32)
 
     def live(carry, fresh):
-        states, cu, ci, since, processed, dropped, forgets, det, boost = carry
+        (states, cu, ci, since, processed, dropped, forgets, det, boost,
+         tel) = carry
         fu, fi = fresh
         bu = jnp.concatenate([cu, fu])
         bi = jnp.concatenate([ci, fi])
@@ -191,15 +198,32 @@ def _make_batch_step(cfg, worker_fn):
         processed = processed + kept_n
         since = since + kept_n
         fired = jnp.zeros((), jnp.int32)
+        evicted = jnp.zeros((), jnp.int32)
         if adaptive:
             det = detector_lib.detector_update(
                 det, hits, evaluated, cfg.drift.detector)
+            if tel_on:
+                occ_before = _occ_total(states)
             states, boost = controller(states, det.fired, boost)
+            if tel_on:
+                # Controller decay shrinks weights without freeing rows;
+                # only the net occupancy drop counts as evictions.
+                evicted = jnp.maximum(occ_before - _occ_total(states), 0)
             forgets = forgets + det.fired.astype(jnp.int32)
             fired = det.fired.astype(jnp.int32)
         elif forget is not None:
             trigger = since >= cfg.forgetting.trigger_every
-            states = jax.lax.cond(trigger, forget, lambda s: s, states)
+            if tel_on:
+                def _forget_counted(s):
+                    before = _occ_total(s)
+                    s2 = forget(s)
+                    return s2, before - _occ_total(s2)
+
+                states, evicted = jax.lax.cond(
+                    trigger, _forget_counted,
+                    lambda s: (s, jnp.zeros((), jnp.int32)), states)
+            else:
+                states = jax.lax.cond(trigger, forget, lambda s: s, states)
             # Carry the remainder instead of resetting to zero: a reset
             # aliases the cadence onto micro-batch boundaries whenever
             # ``trigger_every`` is not a multiple of the micro-batch
@@ -210,8 +234,13 @@ def _make_batch_step(cfg, worker_fn):
                               since)
             forgets = forgets + trigger.astype(jnp.int32)
 
+        if tel_on:
+            tel = telemetry_lib.telemetry_batch_update(
+                tel, kept=kept_n, overflow=n_overflow, carry_cap=carry_cap,
+                evicted=evicted, hits=hits, evaluated=evaluated, load=load)
+
         carry = (states, cu_new, ci_new, since, processed, dropped, forgets,
-                 det, boost)
+                 det, boost, tel)
         return carry, (bits, load, kept_n, fired)
 
     def dead(carry, fresh):
@@ -260,8 +289,11 @@ def init_scan_carry(cfg, states=None, carry=(None, None), detector=None):
         det = detector_lib.DetectorState(
             *(jnp.asarray(leaf) for leaf in detector))
     zero = jnp.zeros((), jnp.int32)
+    # The telemetry slot rides along even with cfg.telemetry=False (zeros,
+    # never updated) so the carry structure is config-independent.
     return (states, cu, ci, zero, zero, jnp.asarray(lost, jnp.int32), zero,
-            det, controller_lib.controller_init())
+            det, controller_lib.controller_init(),
+            telemetry_lib.telemetry_init(cfg.grid.n_c))
 
 
 @functools.lru_cache(maxsize=16)
@@ -285,11 +317,24 @@ class PublishEvent(NamedTuple):
     never mutate what the subscriber holds. ``forgets`` counts forgetting
     triggers fired so far (serving caches invalidate when it advances).
 
-    ``events_processed`` / ``dropped`` / ``forgets`` are Python ints on
-    the default (blocking) boundary; with ``publish_sync=False`` they are
-    0-d device arrays still attached to the in-flight scan — the
-    subscriber (e.g. ``SnapshotStore.publish_async``) syncs them on its
-    own thread so the trainer never waits at the boundary.
+    The progress scalars come in two modes:
+
+    * ``publish_sync=True`` (the default, blocking boundary):
+      ``events_processed`` / ``dropped`` / ``forgets`` are Python ints —
+      the boundary blocked on the segment's compute to read them.
+    * ``publish_sync=False`` (non-blocking boundary): they are 0-d
+      device arrays still attached to the in-flight scan — the
+      subscriber (e.g. ``SnapshotStore.publish_async``) syncs them on
+      its own thread so the trainer never waits at the boundary. Call
+      :meth:`as_ints` to resolve them (this blocks until the segment's
+      compute has finished — exactly the wait the mode exists to move
+      off the trainer).
+
+    ``telemetry`` is the in-scan observability vector
+    (:class:`repro.obs.telemetry.TelemetryState`, cumulative for the
+    run) — always device arrays in both modes; ``None`` when
+    ``StreamConfig.telemetry`` is off. The host reference loop hands the
+    equivalent host-folded vector (bit-identical values).
     """
 
     states: Any
@@ -300,6 +345,23 @@ class PublishEvent(NamedTuple):
     steps_done: int       # scan steps completed so far
     detector: Any = None  # DetectorState at the boundary (adaptive drift
                           # policy only) — checkpointable alongside states
+    telemetry: Any = None  # TelemetryState at the boundary (device arrays)
+
+    def as_ints(self) -> "PublishEvent":
+        """Resolve device scalars to host values (blocks on the scan).
+
+        Returns a copy with ``events_processed`` / ``dropped`` /
+        ``forgets`` as Python ints and ``telemetry`` as host (numpy)
+        arrays — the ergonomic bridge for ``publish_sync=False``
+        subscribers that want plain numbers. A no-op-shaped copy when
+        the scalars are already ints.
+        """
+        return self._replace(
+            events_processed=int(self.events_processed),
+            dropped=int(self.dropped),
+            forgets=int(self.forgets),
+            telemetry=(jax.tree.map(np.asarray, self.telemetry)
+                       if self.telemetry is not None else None))
 
 
 def run_stream_device(users: np.ndarray, items: np.ndarray, cfg,
@@ -402,11 +464,12 @@ def run_stream_device(users: np.ndarray, items: np.ndarray, cfg,
                 segment=s,
                 steps_done=(s + 1) * seg,
                 detector=carry[7] if _adaptive(cfg) else None,
+                telemetry=carry[9] if cfg.telemetry else None,
             )
             tp = time.perf_counter()
             on_publish(ev)
             publish_time += time.perf_counter() - tp
-    states, cu, ci, _, processed, dropped, forgets, det, _ = carry
+    states, cu, ci, _, processed, dropped, forgets, det, _, tel = carry
     jax.block_until_ready(states)
     wall = time.perf_counter() - t0 - publish_time
 
@@ -448,4 +511,5 @@ def run_stream_device(users: np.ndarray, items: np.ndarray, cfg,
         drift_flags=drift_flags,
         final_detector=(jax.tree.map(np.asarray, det) if _adaptive(cfg)
                         else None),
+        telemetry=(jax.tree.map(np.asarray, tel) if cfg.telemetry else None),
     )

@@ -60,6 +60,10 @@ class StreamConfig:
     # When its mode is "adaptive", the on-device detector + controller
     # replace the fixed `forgetting.trigger_every` cadence entirely.
     drift: Any = None
+    # In-scan observability counters (repro.obs.telemetry) riding the
+    # carry; off buys back the few extra reductions per micro-batch
+    # (benchmarks/bench_obs.py gates the overhead at 3%).
+    telemetry: bool = True
 
     def resolved_hyper(self):
         h = self.hyper
@@ -75,6 +79,16 @@ class StreamConfig:
 
 @dataclasses.dataclass
 class StreamResult:
+    """What one ``run_stream`` call measured and produced.
+
+    ``events_processed`` / ``dropped`` / ``forgets`` are always plain
+    Python ints here, in both publish modes — the engine syncs them once
+    at end of stream. The 0-d *device* scalars that exist mid-run under
+    ``publish_sync=False`` are never on this object; they ride on each
+    boundary's :class:`~repro.core.engine.PublishEvent` (resolve them
+    with ``PublishEvent.as_ints()``).
+    """
+
     recall: RecallAccumulator
     user_occupancy: list      # [(events_processed, np[n_c])]
     item_occupancy: list
@@ -94,6 +108,10 @@ class StreamResult:
     # Final DetectorState (host arrays) under the adaptive policy — pass
     # to save_stream_checkpoint(detector=...) for closed-loop resume.
     final_detector: Any = None
+    # End-of-run observability vector (repro.obs.telemetry.TelemetryState
+    # of host arrays; None when cfg.telemetry is off). Cumulative over
+    # this call only; host and scan backends fold bit-identical values.
+    telemetry: Any = None
 
     @property
     def throughput(self) -> float:
@@ -219,15 +237,33 @@ def run_stream(users: np.ndarray, items: np.ndarray, cfg: StreamConfig,
     forgets = 0
     published_steps = 0
 
+    occ_fn = jax.jit(jax.vmap(lambda s: state_lib.occupancy(s.tables)))
+
+    # In-scan telemetry, host edition: the same pure-jnp fold the engine
+    # runs inside its scan (repro.obs.telemetry), executed once per
+    # micro-batch here — bit-identical values by construction. The host
+    # re-queue is unbounded, hence HOST_CARRY_CAP (nothing drops at the
+    # dispatch boundary).
+    tel = tel_step = occ_total = None
+    if cfg.telemetry:
+        from repro.obs import telemetry as telemetry_lib
+
+        tel = telemetry_lib.telemetry_init(grid.n_c)
+        tel_step = jax.jit(partial(telemetry_lib.telemetry_batch_update,
+                                   carry_cap=telemetry_lib.HOST_CARRY_CAP))
+        occ_total = jax.jit(
+            lambda s: sum(jnp.sum(o) for o in
+                          jax.vmap(lambda w: state_lib.occupancy(w.tables))(s)
+                          ).astype(jnp.int32))
+
     def _publish_event(states, processed, dropped, forgets, segment, steps):
         from repro.core.engine import PublishEvent
 
         return PublishEvent(states=states, events_processed=processed,
                             dropped=dropped, forgets=forgets,
                             segment=segment, steps_done=steps,
-                            detector=det if adaptive else None)
-
-    occ_fn = jax.jit(jax.vmap(lambda s: state_lib.occupancy(s.tables)))
+                            detector=det if adaptive else None,
+                            telemetry=tel)
 
     # Warm the jitted steps so the wall clock measures streaming, not
     # compilation — the engine backends AOT-compile before their timer,
@@ -241,6 +277,13 @@ def run_stream(users: np.ndarray, items: np.ndarray, cfg: StreamConfig,
         dummy_b = jnp.zeros((grid.n_c, cap), bool)
         jax.block_until_ready(det_update(det, dummy_b, dummy_b))
         jax.block_until_ready(controller(states, det.fired, boost)[0])
+    if tel is not None:
+        dummy_b = jnp.zeros((grid.n_c, cap), bool)
+        zero = jnp.zeros((), jnp.int32)
+        jax.block_until_ready(tel_step(
+            tel, kept=zero, overflow=zero, evicted=zero, hits=dummy_b,
+            evaluated=dummy_b, load=jnp.zeros((grid.n_c,), jnp.int32)))
+        jax.block_until_ready(occ_total(states))
 
     t0 = time.perf_counter()
     publish_time = 0.0
@@ -287,19 +330,32 @@ def run_stream(users: np.ndarray, items: np.ndarray, cfg: StreamConfig,
         loads.append(load)
 
         events_since_trigger += int(kept.sum())
+        evicted = 0
         if adaptive:
             det = det_update(det, hits, evaluated)
+            occ_before = occ_total(states) if tel is not None else None
             states, boost = controller(states, det.fired, boost)
+            if tel is not None:
+                evicted = max(int(occ_before) - int(occ_total(states)), 0)
             fired = bool(det.fired)
             drift_flags.append(fired)
             forgets += int(fired)
         elif (forget is not None
                 and events_since_trigger >= cfg.forgetting.trigger_every):
+            occ_before = occ_total(states) if tel is not None else None
             states = forget(states)
+            if tel is not None:
+                evicted = int(occ_before) - int(occ_total(states))
             # Carry the remainder (see engine._make_batch_step): resetting
             # to zero would alias the cadence onto micro-batch boundaries.
             events_since_trigger -= cfg.forgetting.trigger_every
             forgets += 1
+        if tel is not None:
+            tel = tel_step(tel, kept=jnp.asarray(int(kept.sum()), jnp.int32),
+                           overflow=jnp.asarray(carry_u.size, jnp.int32),
+                           evicted=jnp.asarray(evicted, jnp.int32),
+                           hits=hits, evaluated=evaluated,
+                           load=jnp.asarray(load, jnp.int32))
 
         if publish_every and on_publish is not None and (b + 1) % publish_every == 0:
             # Sync in-flight device work (async forgetting dispatch) before
@@ -354,6 +410,7 @@ def run_stream(users: np.ndarray, items: np.ndarray, cfg: StreamConfig,
         forgets=forgets,
         drift_flags=(np.asarray(drift_flags, np.int32) if adaptive else None),
         final_detector=(jax.tree.map(np.asarray, det) if adaptive else None),
+        telemetry=(jax.tree.map(np.asarray, tel) if tel is not None else None),
     )
 
 

@@ -18,12 +18,18 @@ the single source:
     applied;
   * :func:`demo_stream` — the drivers' standard synthetic stream (a
     MovieLens-25M-shaped profile scaled to laptop size), truncated to
-    ``--events``.
+    ``--events``;
+  * :func:`obs_capture` / :func:`export_metrics` — the observability
+    side of the shared flags: ``--profile-dir`` wraps the driver's hot
+    section in a JAX profiler trace, ``--metrics-json`` /
+    ``--prom-out`` export the run's :class:`~repro.obs.metrics.
+    MetricsRegistry` on exit.
 """
 
 from __future__ import annotations
 
 import argparse
+import contextlib
 
 from repro.core.algorithm import get_algorithm, registered
 from repro.core.pipeline import StreamConfig
@@ -31,7 +37,7 @@ from repro.core.routing import GridSpec
 from repro.data.stream import MOVIELENS_25M, scaled, synth_stream
 
 __all__ = ["base_parser", "parse_grid", "stream_config", "demo_stream",
-           "DEMO_SCALE"]
+           "obs_capture", "export_metrics", "DEMO_SCALE"]
 
 #: The drivers' shared synthetic-stream scale (of MOVIELENS_25M).
 DEMO_SCALE = 0.003
@@ -68,7 +74,37 @@ def base_parser(description: str, *, grid: bool = True, caps: bool = True,
     ap.add_argument("--backend", default="scan",
                     choices=("host", "scan", "pallas"))
     ap.add_argument("--seed", type=int, default=seed)
+    obs = ap.add_argument_group("observability")
+    obs.add_argument("--metrics-json", default=None, metavar="PATH",
+                     help="write the run's metrics registry as JSON on exit")
+    obs.add_argument("--prom-out", default=None, metavar="PATH",
+                     help="write Prometheus text exposition on exit")
+    obs.add_argument("--profile-dir", default=None, metavar="DIR",
+                     help="capture a JAX profiler trace of the run "
+                          "(view with TensorBoard / Perfetto)")
     return ap
+
+
+def obs_capture(args):
+    """Context manager for the driver's hot section: a JAX profiler
+    trace into ``--profile-dir`` when given, else a no-op."""
+    if getattr(args, "profile_dir", None):
+        from repro.obs import trace as trace_lib
+        return trace_lib.profile(args.profile_dir)
+    return contextlib.nullcontext()
+
+
+def export_metrics(args, registry) -> None:
+    """Honor ``--metrics-json`` / ``--prom-out`` for ``registry``
+    (quietly a no-op when neither flag was passed or it is ``None``)."""
+    if registry is None:
+        return
+    if getattr(args, "metrics_json", None):
+        registry.write_json(args.metrics_json)
+        print(f"[obs] metrics json -> {args.metrics_json}")
+    if getattr(args, "prom_out", None):
+        registry.write_prometheus(args.prom_out)
+        print(f"[obs] prometheus exposition -> {args.prom_out}")
 
 
 def stream_config(args, grid: GridSpec | None = None) -> StreamConfig:

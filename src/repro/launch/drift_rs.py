@@ -28,6 +28,7 @@ from repro.core.pipeline import (restore_stream_checkpoint, run_stream,
                                  save_stream_checkpoint)
 from repro.drift import DriftPolicy, list_scenarios, make_scenario, recovery_report
 from repro.launch import common
+from repro.obs import MetricsRegistry, TelemetryFolder
 
 
 def main(argv=None):
@@ -50,7 +51,14 @@ def main(argv=None):
     elif args.policy == "adaptive":
         cfg = dataclasses.replace(cfg, drift=DriftPolicy())
 
-    res = run_stream(sc.users, sc.items, cfg)
+    # No session here (run_stream is driven directly), so fold the
+    # engine's device telemetry into a driver-local registry for export.
+    registry = MetricsRegistry()
+    folder = TelemetryFolder(registry)
+    with common.obs_capture(args):
+        res = run_stream(sc.users, sc.items, cfg)
+    if res.telemetry is not None:
+        folder.fold(res.telemetry)
     print(f"[drift_rs] {sc.name} seed={sc.seed}: {sc.n} events "
           f"(drifts at {list(sc.drift_events)}), {args.algorithm} on "
           f"{cfg.grid.n_c} workers, policy={args.policy}, "
@@ -82,6 +90,7 @@ def main(argv=None):
                  if ck.detector is not None else "restored (no detector)")
         print(f"[drift_rs] checkpoint @ {res.events_processed} events -> "
               f"{args.ckpt_dir}: {state}")
+    common.export_metrics(args, registry)
     return res
 
 

@@ -31,6 +31,7 @@ from repro.core.pipeline import (restore_stream_checkpoint, run_stream,
                                  save_stream_checkpoint)
 from repro.launch import common
 from repro.launch.common import parse_grid
+from repro.obs import MetricsRegistry, TelemetryFolder
 from repro.serve import QueryFrontend, ServeConfig, SnapshotStore
 
 
@@ -54,7 +55,11 @@ def main(argv=None):
     users, items = common.demo_stream(args.events, args.seed)
     cut = int(args.split * users.size)
 
-    store = SnapshotStore()
+    # One registry across both grids: snapshot/serve instruments live in
+    # the store/front-end, engine telemetry folds in after each phase.
+    registry = MetricsRegistry()
+    folder = TelemetryFolder(registry)
+    store = SnapshotStore(registry=registry)
     frontend = QueryFrontend(
         store, ServeConfig.from_stream(cfg_a, batch_size=args.batch))
     rng = np.random.default_rng(args.seed + 1)
@@ -71,7 +76,10 @@ def main(argv=None):
               f"fallbacks={resp.fallbacks})")
 
     # --- phase 1: train on the initial grid -----------------------------
-    res1 = run_stream(users[:cut], items[:cut], cfg_a)
+    with common.obs_capture(args):
+        res1 = run_stream(users[:cut], items[:cut], cfg_a)
+    if res1.telemetry is not None:
+        folder.fold(res1.telemetry)
     store.publish(res1.final_states, res1.events_processed)
     print(f"[rescale_rs] phase 1: {res1.events_processed} events on "
           f"{args.from_grid.shape} ({cfg_a.grid.n_c} workers, "
@@ -104,6 +112,10 @@ def main(argv=None):
     # --- phase 2: resume the stream on the new grid ---------------------
     res2 = run_stream(users[cut:], items[cut:], cfg_b,
                       initial_states=states, initial_carry=carry)
+    if res2.telemetry is not None:
+        # The phase-2 vector restarts from zero (new run_stream call).
+        folder.rebase()
+        folder.fold(res2.telemetry)
     store.publish(res2.final_states, events_done + res2.events_processed)
     bits = np.concatenate([res1.recall.bits(), res2.recall.bits()])
     bits = bits[~np.isnan(bits)]
@@ -113,6 +125,7 @@ def main(argv=None):
           f"stream recall@{args.top_n}={bits.mean():.4f} "
           f"(post-rescale {res2.recall.mean():.4f})")
     burst("post-rescale serve")
+    common.export_metrics(args, registry)
     return res1, res2, frontend
 
 

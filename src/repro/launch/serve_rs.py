@@ -65,7 +65,8 @@ def main(argv=None):
                        resp.cache_hits, resp.fallbacks))
 
     session.store.subscribe(burst)
-    res = session.ingest(users, items)
+    with common.obs_capture(args):
+        res = session.ingest(users, items)
 
     total_q = sum(b[0] for b in bursts)
     total_t = sum(b[1] for b in bursts)
@@ -78,15 +79,17 @@ def main(argv=None):
           f"(every {args.publish_every} micro-batches -> staleness bound "
           f"{policy.staleness_bound_events(args.micro_batch)} events)")
     if bursts:
+        fes = frontend.stats_snapshot()
         print(f"[serve_rs] served {total_q} queries in {total_t:.3f}s: "
               f"QPS mean={total_q / max(total_t, 1e-9):,.0f} "
               f"p50={np.percentile(qps, 50):,.0f} "
               f"worst-burst={min(qps):,.0f}")
-        print(f"[serve_rs] cache hits={frontend.stats['cache_hits']} "
-              f"fallbacks={frontend.stats['fallbacks']} "
-              f"requeued={frontend.stats['requeued']} "
-              f"invalidations={frontend.stats['invalidations']} "
+        print(f"[serve_rs] cache hits={fes['cache_hits']} "
+              f"fallbacks={fes['fallbacks']} "
+              f"requeued={fes['requeued']} "
+              f"invalidations={fes['invalidations']} "
               f"max staleness observed={max(b[2] for b in bursts)} events")
+    common.export_metrics(args, session.metrics)
     return res, frontend
 
 

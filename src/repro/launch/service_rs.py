@@ -61,7 +61,8 @@ def main(argv=None):
                         query_batches=args.query_batches,
                         schedule_seed=args.seed)
 
-    report = run_service(session, users, items, load, svc)
+    with common.obs_capture(args):
+        report = run_service(session, users, items, load, svc)
     s = report.summary()
 
     print(f"[service_rs] {args.algorithm} on {cfg.grid.n_c} workers "
@@ -87,6 +88,10 @@ def main(argv=None):
     if "async_rotations" in s:
         print(f"[service_rs] async publishes: {s['async_rotations']} "
               f"rotations, {s.get('coalesced', 0)} coalesced")
+    # The session registry carries the full catalogue (stream_*, serve_*,
+    # snapshot_*, span_seconds); the report's per-run registry only the
+    # under-load latency histograms — export the rich one.
+    common.export_metrics(args, session.metrics)
     return report
 
 

@@ -1,0 +1,31 @@
+"""Unified observability: metrics registry, in-scan telemetry, tracing.
+
+Three planes, one package:
+
+  * ``repro.obs.metrics``   — host-side instruments (:class:`Counter`,
+    :class:`Gauge`, :class:`Histogram`) in a thread-safe
+    :class:`MetricsRegistry` with Prometheus/JSON export;
+  * ``repro.obs.telemetry`` — the device-resident counters riding the
+    engine scan carry (:class:`TelemetryState`), folded into the
+    registry off the hot path by :class:`TelemetryFolder`;
+  * ``repro.obs.trace``     — nestable :func:`span` timers emitting
+    ``jax.profiler.TraceAnnotation``\\ s, plus the one-call
+    :func:`profile` capture hook.
+"""
+
+from repro.obs.metrics import (Counter, Gauge, Histogram,
+                               HistogramSnapshot, MetricsRegistry,
+                               default_buckets, merge_histograms)
+from repro.obs.telemetry import (HOST_CARRY_CAP, TelemetryFolder,
+                                 TelemetryState, telemetry_batch_update,
+                                 telemetry_init, telemetry_ints,
+                                 telemetry_update)
+from repro.obs.trace import current_span, profile, span
+
+__all__ = [
+    "MetricsRegistry", "Counter", "Gauge", "Histogram",
+    "HistogramSnapshot", "default_buckets", "merge_histograms",
+    "TelemetryState", "TelemetryFolder", "telemetry_init",
+    "telemetry_update", "telemetry_batch_update", "telemetry_ints",
+    "HOST_CARRY_CAP", "span", "profile", "current_span",
+]

@@ -1,0 +1,183 @@
+"""Device-resident telemetry riding the engine scan carry.
+
+The same trick the drift detector uses (``repro.drift.detector``): a
+small NamedTuple of 0-d integer scalars lives in the ``lax.scan`` carry
+and is folded forward every micro-batch with pure ``jnp`` integer
+arithmetic — zero per-micro-batch host sync, and *bit-identical* values
+whether the stream ran through the host reference loop or the scanned
+engine (integer adds and max commute with nothing; both paths execute
+the same :func:`telemetry_batch_update` expression on the same inputs).
+
+The vector counts, cumulatively within one ``run_stream`` call:
+
+  * ``events``     — kept events processed;
+  * ``dropped``    — overflow events past the re-queue capacity;
+  * ``requeued``   — overflow events re-queued for a later micro-batch;
+  * ``evictions``  — table entries freed by forgetting / drift control
+    (occupancy delta across the forgetting op);
+  * ``hits`` / ``evals`` — prequential recall numerator / denominator;
+  * ``bucket_hwm`` — per-bucket dispatch-load high-water mark
+    (``i32[n_c]``; the skew/pressure signal the ROADMAP's autoscaler
+    wants).
+
+The host loop's overflow queue is unbounded, so it folds with
+``carry_cap = HOST_CARRY_CAP`` (nothing ever drops at the dispatch
+boundary); the engine passes its fixed re-queue size. On streams whose
+per-batch overflow never exceeds the engine's re-queue (the condition
+for the two backends to train identically at all), the folds agree
+exactly.
+
+Host side, :class:`TelemetryFolder` turns cumulative vectors into
+registry counters: ``fold`` syncs the device scalars *on the calling
+thread* (the async publisher thread, for ``publish_sync=False`` runs —
+observability costs the publisher, never the scan) and increments each
+counter by the delta since the previous fold, so coalesced publishes
+that skip intermediate boundaries fold to exactly the same totals.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["TelemetryState", "telemetry_init", "telemetry_update",
+           "telemetry_batch_update", "telemetry_ints", "TelemetryFolder",
+           "HOST_CARRY_CAP"]
+
+# The host reference loop re-queues overflow into an unbounded Python
+# list; folding with this capacity makes "never drops, always requeues"
+# fall out of the same arithmetic the engine uses.
+HOST_CARRY_CAP = int(np.iinfo(np.int32).max)
+
+
+class TelemetryState(NamedTuple):
+    """Cumulative in-scan telemetry (0-d i32 scalars + one i32[n_c])."""
+
+    events: jnp.ndarray      # kept events processed
+    dropped: jnp.ndarray     # overflow past the re-queue capacity
+    requeued: jnp.ndarray    # overflow re-queued (backpressure volume)
+    evictions: jnp.ndarray   # table entries freed by forgetting
+    hits: jnp.ndarray        # prequential recall hits
+    evals: jnp.ndarray       # prequential recall evaluations
+    bucket_hwm: jnp.ndarray  # i32[n_c] per-bucket load high-water mark
+
+
+def telemetry_init(n_c: int) -> TelemetryState:
+    z = jnp.zeros((), jnp.int32)
+    return TelemetryState(z, z, z, z, z, z, jnp.zeros((n_c,), jnp.int32))
+
+
+def telemetry_update(tel: TelemetryState, *, kept, overflow, carry_cap,
+                     evicted, hits, evals, load) -> TelemetryState:
+    """Fold one micro-batch of scalar counts into the running vector.
+
+    Pure integer arithmetic so host and scan backends produce
+    bit-identical values; every argument is (convertible to) i32.
+    """
+    overflow = jnp.asarray(overflow, jnp.int32)
+    carry_cap = jnp.asarray(carry_cap, jnp.int32)
+    return TelemetryState(
+        events=tel.events + jnp.asarray(kept, jnp.int32),
+        dropped=tel.dropped + jnp.maximum(overflow - carry_cap, 0),
+        requeued=tel.requeued + jnp.minimum(overflow, carry_cap),
+        evictions=tel.evictions + jnp.asarray(evicted, jnp.int32),
+        hits=tel.hits + jnp.asarray(hits, jnp.int32),
+        evals=tel.evals + jnp.asarray(evals, jnp.int32),
+        bucket_hwm=jnp.maximum(tel.bucket_hwm,
+                               jnp.asarray(load, jnp.int32)),
+    )
+
+
+def telemetry_batch_update(tel: TelemetryState, *, kept, overflow,
+                           carry_cap, evicted, hits, evaluated,
+                           load) -> TelemetryState:
+    """:func:`telemetry_update` with the recall reduction inlined.
+
+    ``hits`` / ``evaluated`` are the worker step's ``bool[n_c, cap]``
+    masks; reducing them here (instead of at each call site) pins one
+    expression for both backends — the parity contract.
+    """
+    return telemetry_update(
+        tel, kept=kept, overflow=overflow, carry_cap=carry_cap,
+        evicted=evicted,
+        hits=jnp.sum((hits & evaluated).astype(jnp.int32)),
+        evals=jnp.sum(evaluated.astype(jnp.int32)), load=load)
+
+
+def telemetry_ints(tel: TelemetryState) -> dict:
+    """Host-int view of a telemetry vector (blocks on device reads)."""
+    return {
+        "events": int(tel.events),
+        "dropped": int(tel.dropped),
+        "requeued": int(tel.requeued),
+        "evictions": int(tel.evictions),
+        "hits": int(tel.hits),
+        "evals": int(tel.evals),
+        "bucket_hwm": [int(v) for v in np.asarray(tel.bucket_hwm)],
+    }
+
+
+class TelemetryFolder:
+    """Folds cumulative telemetry vectors into a metrics registry.
+
+    The vector restarts from zero at every ``run_stream`` call, so the
+    owner (``StreamSession.ingest``) calls :meth:`rebase` at the start
+    of each segment; ``fold`` then increments the ``stream_*`` counters
+    by the delta against the previously folded vector. Because the
+    vector is cumulative, folding only the freshest of several pending
+    publishes (the snapshot store's coalescing) loses nothing.
+    """
+
+    _SCALARS = ("events", "dropped", "requeued", "evictions", "hits",
+                "evals")
+
+    def __init__(self, registry):
+        self.registry = registry
+        self._lock = threading.Lock()
+        self._last: dict | None = None
+        self._counters = {
+            "events": registry.counter(
+                "stream_events_total", "Events processed (kept) by the "
+                "streaming engine"),
+            "dropped": registry.counter(
+                "stream_dropped_total", "Overflow events dropped past "
+                "the re-queue capacity"),
+            "requeued": registry.counter(
+                "stream_requeued_total", "Overflow events re-queued into "
+                "a later micro-batch"),
+            "evictions": registry.counter(
+                "stream_evictions_total", "Table entries freed by "
+                "forgetting / drift control"),
+            "hits": registry.counter(
+                "stream_recall_hits_total", "Prequential recall hits"),
+            "evals": registry.counter(
+                "stream_recall_evals_total", "Prequential recall "
+                "evaluations"),
+        }
+        self._hwm = registry.gauge(
+            "stream_bucket_hwm", "Per-bucket dispatch-load high-water "
+            "mark (events)", labels=("bucket",))
+
+    def rebase(self) -> None:
+        """Mark the start of a new stream segment (counters reset to 0)."""
+        with self._lock:
+            self._last = None
+
+    def fold(self, tel) -> dict | None:
+        """Sync ``tel`` (on this thread) and fold deltas into counters."""
+        if tel is None:
+            return None
+        vals = telemetry_ints(tel)
+        with self._lock:
+            last = self._last if self._last is not None else {}
+            for f in self._SCALARS:
+                delta = vals[f] - last.get(f, 0)
+                if delta > 0:
+                    self._counters[f].inc(delta)
+            for b, v in enumerate(vals["bucket_hwm"]):
+                self._hwm.labels(bucket=str(b)).set_max(v)
+            self._last = vals
+        return vals

@@ -31,12 +31,14 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import time
 import warnings
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import routing
+from repro.obs import metrics as metrics_lib
 from repro.serve import plane
 from repro.serve.policy import PublishPolicy
 from repro.serve.snapshot import SnapshotStore
@@ -127,7 +129,25 @@ class ServeResponse:
 class QueryFrontend:
     """Serves point queries against the freshest published snapshot."""
 
-    def __init__(self, store: SnapshotStore, cfg: ServeConfig):
+    # The pre-registry ad-hoc counter keys, preserved verbatim as the
+    # stats_snapshot() vocabulary; each maps to a ``serve_<key>_total``
+    # counter in the registry.
+    _COUNTER_KEYS = ("queries", "cache_hits", "fallbacks", "requeued",
+                     "plane_batches", "invalidations", "lazy_drops",
+                     "retargets")
+    _COUNTER_HELP = {
+        "queries": "Point queries received",
+        "cache_hits": "Queries answered from the LRU response cache",
+        "fallbacks": "Queries answered by the popularity head",
+        "requeued": "Queries re-queued on column bucket overflow",
+        "plane_batches": "grid_topn micro-batches dispatched",
+        "invalidations": "Snapshot-generation transitions observed",
+        "lazy_drops": "Stale cache entries dropped at lookup",
+        "retargets": "Front-end regrid retargets",
+    }
+
+    def __init__(self, store: SnapshotStore, cfg: ServeConfig,
+                 registry: metrics_lib.MetricsRegistry | None = None):
         self.store = store
         self.cfg = cfg
         # uid -> (generation, ids, scores, known). Entries from older
@@ -135,7 +155,22 @@ class QueryFrontend:
         # eager flush on rotation.
         self._cache: collections.OrderedDict[int, tuple] = collections.OrderedDict()
         self._seen_gen: tuple = (-1, -1)
-        self.stats = collections.Counter()
+        # Share the store's registry by default, so one scrape covers
+        # the whole serving plane; get-or-create is idempotent, so the
+        # session's recommend(n=...) path (a fresh frontend on the same
+        # store) binds to the same counters.
+        if registry is None:
+            registry = getattr(store, "metrics", None)
+        self.metrics = (registry if registry is not None
+                        else metrics_lib.MetricsRegistry())
+        self._c = {k: self.metrics.counter(f"serve_{k}_total",
+                                           self._COUNTER_HELP[k])
+                   for k in self._COUNTER_KEYS}
+        self._h_latency = self.metrics.histogram(
+            "serve_latency_seconds", "serve() wall time per call")
+        self._h_staleness = self.metrics.histogram(
+            "serve_staleness_events",
+            "Staleness of the answering snapshot (events)")
 
     # -- cache ------------------------------------------------------------
 
@@ -149,7 +184,7 @@ class QueryFrontend:
         itself is invalidated lazily, entry by entry, at lookup."""
         if gen != self._seen_gen:
             if self._cache:
-                self.stats["invalidations"] += 1
+                self._c["invalidations"].inc()
             self._seen_gen = gen
 
     def _cache_get(self, uid: int, gen: tuple):
@@ -160,7 +195,7 @@ class QueryFrontend:
             return None
         if hit[0] != gen:
             del self._cache[uid]        # stale generation: lazy drop
-            self.stats["lazy_drops"] += 1
+            self._c["lazy_drops"].inc()
             return None
         self._cache.move_to_end(uid)
         return hit[1]
@@ -190,7 +225,7 @@ class QueryFrontend:
         self.cfg = dataclasses.replace(self.cfg, **over)
         self._cache.clear()
         self._seen_gen = (-1, -1)
-        self.stats["retargets"] += 1
+        self._c["retargets"].inc()
 
     # -- the serving loop -------------------------------------------------
 
@@ -217,7 +252,7 @@ class QueryFrontend:
                 k_nn=cfg.k_nn, use_kernel=cfg.use_kernel)
             ids, scores = np.asarray(ids), np.asarray(scores)
             known, served = np.asarray(known), np.asarray(served)
-            self.stats["plane_batches"] += 1
+            self._c["plane_batches"].inc()
             progress = False
             for j, uid in enumerate(batch):
                 if served[j]:
@@ -226,7 +261,7 @@ class QueryFrontend:
                     computed[uid] = entry
                     self._cache_put(uid, gen, entry)
                 else:               # column bucket overflow: try next batch
-                    self.stats["requeued"] += 1
+                    self._c["requeued"].inc()
                     queue.append(uid)
             if not progress:
                 raise RuntimeError(
@@ -236,13 +271,14 @@ class QueryFrontend:
 
     def serve(self, user_ids) -> ServeResponse:
         """Answer a batch of point queries (any length, duplicates fine)."""
+        t0 = time.perf_counter()
         cfg = self.cfg
         snap = self.store.acquire(cfg.publish.max_staleness_events)
         gen = self._generation(snap)
         self._note_epoch(gen)
 
         uids = np.asarray(user_ids, np.int64).reshape(-1)
-        self.stats["queries"] += uids.size
+        self._c["queries"].inc(int(uids.size))
         # Resolve cache hits BEFORE computing misses: _compute's LRU
         # insertions may evict a previously-cached uid of this very call,
         # so answers are assembled from this local dict, never from the
@@ -287,12 +323,38 @@ class QueryFrontend:
                 out_scores[i, :n] = np.where(
                     live, snap.popular_mass[:n], -np.inf)
                 fallbacks += 1
-        self.stats["cache_hits"] += cache_hits
-        self.stats["fallbacks"] += fallbacks
+        self._c["cache_hits"].inc(cache_hits)
+        self._c["fallbacks"].inc(fallbacks)
+        staleness = max(0, self.store.progress - snap.events_processed)
+        self._h_staleness.observe(staleness)
+        self._h_latency.observe(time.perf_counter() - t0)
         return ServeResponse(
             ids=out_ids, scores=out_scores, known=out_known,
             snapshot_version=snap.version,
             cache_hits=cache_hits, fallbacks=fallbacks,
-            staleness_events=max(
-                0, self.store.progress - snap.events_processed),
+            staleness_events=staleness,
             snapshot_forgets=snap.forgets)
+
+    # -- stats ------------------------------------------------------------
+
+    def stats_snapshot(self) -> dict[str, int]:
+        """The serve counters as plain ints (registry-backed).
+
+        Same key vocabulary as the pre-registry ``stats`` dict; the
+        counters themselves live in ``self.metrics`` as
+        ``serve_<key>_total``.
+        """
+        return {k: int(c.value) for k, c in self._c.items()}
+
+    @property
+    def stats(self):
+        """Deprecated (one release): the old ad-hoc counter dict.
+
+        Use :meth:`stats_snapshot` (same keys) or ``self.metrics``.
+        """
+        warnings.warn(
+            "QueryFrontend.stats is deprecated; use stats_snapshot() or "
+            "the metrics registry (frontend.metrics) — the dict view "
+            "will be removed next release", DeprecationWarning,
+            stacklevel=2)
+        return self.stats_snapshot()

@@ -38,6 +38,7 @@ from typing import Any
 
 import numpy as np
 
+from repro.obs import metrics as metrics_lib
 from repro.serve.loadgen import LoadConfig, QueryLoad, mixed_schedule
 
 __all__ = ["ServiceConfig", "QueryRecord", "ServiceReport", "run_service"]
@@ -74,7 +75,18 @@ class QueryRecord:
 
 @dataclasses.dataclass
 class ServiceReport:
-    """Aggregated mixed-load measurements (see ``summary()``)."""
+    """Aggregated mixed-load measurements (see ``summary()``).
+
+    ``metrics`` is the run's own :class:`~repro.obs.metrics.
+    MetricsRegistry` — every query batch was observed into
+    ``service_query_latency_seconds`` / ``service_staleness_events``
+    histograms labeled by ``under_load``, and ``summary()``'s
+    percentiles are computed from those histograms (exact while the
+    retained-sample cap holds, which it always does at benchmark query
+    counts — bit-matching the former inline ``np.percentile`` over the
+    records). Reports deserialized without a registry (``metrics=None``)
+    fall back to the inline computation.
+    """
 
     records: list[QueryRecord]
     wall_s: float
@@ -83,6 +95,7 @@ class ServiceReport:
     ingest_wall_s: float          # time spent inside ingest (interleaved) or
                                   # the ingest thread's span (threaded)
     publish_stats: dict[str, int]
+    metrics: Any = None           # per-run MetricsRegistry (or None)
 
     def _loaded(self) -> list[QueryRecord]:
         """Tail latencies are computed over batches issued while the
@@ -95,6 +108,17 @@ class ServiceReport:
 
     def _stale(self) -> np.ndarray:
         return np.asarray([r.staleness_events for r in self._loaded()])
+
+    def _hist(self, name: str):
+        """The metric's under-load series, falling back to the merge of
+        every series when no under-load batch was recorded — the same
+        dilution rule as ``_loaded()``."""
+        fam = self.metrics.get(name)
+        loaded = fam.labels(under_load="true").snapshot()
+        if loaded.count:
+            return loaded
+        return metrics_lib.merge_histograms(
+            *(child.snapshot() for _, child in fam.series()))
 
     def summary(self) -> dict[str, Any]:
         lat, stale = self._lat_ms(), self._stale()
@@ -111,7 +135,19 @@ class ServiceReport:
             "ingest_events_per_s": round(
                 self.events_processed / max(self.ingest_wall_s, 1e-9), 1),
         }
-        if lat.size:
+        if lat.size and self.metrics is not None:
+            lh = self._hist("service_query_latency_seconds")
+            sh = self._hist("service_staleness_events")
+            out.update(
+                p50_ms=round(lh.percentile(50) * 1e3, 3),
+                p99_ms=round(lh.percentile(99) * 1e3, 3),
+                max_ms=round(lh.max * 1e3, 3),
+                staleness_mean=round(sh.sum / sh.count, 1),
+                staleness_p95=int(sh.percentile(95)),
+                staleness_max=int(sh.max),
+            )
+            out.update(self._spikes(lat))
+        elif lat.size:
             out.update(
                 p50_ms=round(float(np.percentile(lat, 50)), 3),
                 p99_ms=round(float(np.percentile(lat, 99)), 3),
@@ -184,6 +220,24 @@ def run_service(session, users, items, load: LoadConfig,
     gen = QueryLoad(load)
     records: list[QueryRecord] = []
 
+    # Per-run registry: each run_service call measures its own
+    # distributions (summary() percentiles come from these histograms),
+    # so repeated runs never cross-contaminate. The session's own
+    # long-lived registry keeps accumulating independently.
+    reg = metrics_lib.MetricsRegistry()
+    lat_h = reg.histogram(
+        "service_query_latency_seconds",
+        "Query-batch latency under mixed load", labels=("under_load",))
+    stale_h = reg.histogram(
+        "service_staleness_events",
+        "Staleness at answer under mixed load", labels=("under_load",))
+
+    def observe(rec: QueryRecord) -> QueryRecord:
+        lab = "true" if rec.under_load else "false"
+        lat_h.labels(under_load=lab).observe(rec.latency_s)
+        stale_h.labels(under_load=lab).observe(rec.staleness_events)
+        return rec
+
     if svc.mode == "interleaved":
         ops = mixed_schedule(
             len(users), svc.query_batches,
@@ -202,7 +256,7 @@ def run_service(session, users, items, load: LoadConfig,
                 # is a pure function of the schedule position — keeps this
                 # mode bit-reproducible under PublishPolicy(mode="async").
                 session.store.flush()
-                records.append(_serve_one(session, gen.batch()))
+                records.append(observe(_serve_one(session, gen.batch())))
         session.store.flush(timeout=30.0)
         wall = time.perf_counter() - t0
     else:
@@ -242,7 +296,7 @@ def run_service(session, users, items, load: LoadConfig,
                 live = not done.is_set()
                 rec = _serve_one(session, batch)
                 rec.under_load = live
-                records.append(rec)
+                records.append(observe(rec))
                 issued += 1
                 if pause and not (issued >= svc.query_batches
                                   and done.is_set()):
@@ -265,4 +319,5 @@ def run_service(session, users, items, load: LoadConfig,
         queries=len(records) * load.query_batch,
         ingest_wall_s=ingest_wall,
         publish_stats=session.store.stats_snapshot(),
+        metrics=reg,
     )

@@ -21,10 +21,12 @@ Two publish paths share the rotation:
     aggregates the popularity head, syncs the progress scalars, and
     performs the same atomic rotation — all off the scan's critical
     path. Under load the queue coalesces to the freshest buffer
-    (intermediate publishes are counted in ``stats["coalesced"]``, the
-    production-correct backpressure: serve the newest state, never queue
-    up stale rotations). ``flush()`` blocks until the queue drains —
-    call it before asserting on the front snapshot.
+    (intermediate publishes are counted in the
+    ``snapshot_coalesced_total`` metric — ``stats_snapshot()
+    ["coalesced"]`` — the production-correct backpressure: serve the
+    newest state, never queue up stale rotations). ``flush()`` blocks
+    until the queue drains — call it before asserting on the front
+    snapshot.
 
 Post-rotation listeners (``subscribe``) fire after every rotation,
 outside the store lock — the hook serving loops use to react to fresh
@@ -48,11 +50,13 @@ from __future__ import annotations
 import collections
 import dataclasses
 import threading
+import warnings
 from typing import Any, Callable
 
 import numpy as np
 
 from repro.core import state as state_lib
+from repro.obs import metrics as metrics_lib
 
 __all__ = ["Snapshot", "SnapshotStore", "StaleSnapshotError",
            "popularity_topn"]
@@ -110,7 +114,8 @@ class SnapshotStore:
     complete one, never a mix.
     """
 
-    def __init__(self, slots: int = 2, fallback_n: int = 100):
+    def __init__(self, slots: int = 2, fallback_n: int = 100,
+                 registry: metrics_lib.MetricsRegistry | None = None):
         if slots < 2:
             raise ValueError("double-buffering needs at least 2 slots")
         self._slots: list[Snapshot | None] = [None] * slots
@@ -132,11 +137,37 @@ class SnapshotStore:
         self._draining = False
         self._idle = threading.Event()
         self._idle.set()
-        self.stats = collections.Counter()
+        # Publish-plane instruments. The registry is shared with whoever
+        # passed it in (StreamSession wires one registry through store,
+        # front-end and telemetry folder); a store constructed bare gets
+        # its own.
+        self.metrics = (registry if registry is not None
+                        else metrics_lib.MetricsRegistry())
+        self._c_rotations = self.metrics.counter(
+            "snapshot_rotations_total", "Snapshot rotations by publish "
+            "path", labels=("mode",))
+        self._c_coalesced = self.metrics.counter(
+            "snapshot_coalesced_total", "Async publishes coalesced away "
+            "under backlog")
+        self._g_front_version = self.metrics.gauge(
+            "snapshot_front_version", "Version of the front snapshot")
+        self._g_front_events = self.metrics.gauge(
+            "snapshot_front_events", "Stream position of the front "
+            "snapshot (events)")
+        self._g_staleness = self.metrics.gauge(
+            "snapshot_staleness_events", "Events the front snapshot "
+            "trails reported stream progress")
+        # Device-telemetry hand-off: StreamSession points this at its
+        # TelemetryFolder.fold so publish boundaries carrying a telemetry
+        # vector fold it into the registry — on the publisher thread for
+        # the async path (observability costs the publisher, not the
+        # scan).
+        self._telemetry_sink: Callable[[Any], Any] | None = None
 
     # -- the rotation (shared by both publish paths) ----------------------
 
-    def _rotate(self, states, events_processed: int, forgets: int) -> Snapshot:
+    def _rotate(self, states, events_processed: int, forgets: int,
+                mode: str) -> Snapshot:
         popular_ids, popular_mass = popularity_topn(states, self._fallback_n)
         with self._lock:
             self._version += 1
@@ -153,17 +184,31 @@ class SnapshotStore:
             self._front = back                     # the atomic rotation
             self._progress = max(self._progress, snap.events_processed)
             listeners = list(self._listeners)
+            self._c_rotations.labels(mode=mode).inc()
+            self._g_front_version.set(snap.version)
+            self._g_front_events.set(snap.events_processed)
+            self._g_staleness.set(self._progress - snap.events_processed)
         for fn in listeners:    # outside the lock: listeners may acquire()
             fn(snap)
         return snap
 
-    def publish(self, states, events_processed: int, forgets: int = 0) -> Snapshot:
-        """Synchronous publish: write, aggregate, rotate, then return."""
-        return self._rotate(states, events_processed, forgets)
+    def publish(self, states, events_processed: int, forgets: int = 0,
+                telemetry=None) -> Snapshot:
+        """Synchronous publish: write, aggregate, rotate, then return.
+
+        ``telemetry`` (a device ``TelemetryState`` from the publish
+        boundary) is folded into the registry inline via the session's
+        sink (:meth:`set_telemetry_sink`), after the rotation.
+        """
+        snap = self._rotate(states, events_processed, forgets, mode="sync")
+        if telemetry is not None and self._telemetry_sink is not None:
+            self._telemetry_sink(telemetry)
+        return snap
 
     # -- async publish ----------------------------------------------------
 
-    def publish_async(self, states, events_processed, forgets=0) -> None:
+    def publish_async(self, states, events_processed, forgets=0,
+                      telemetry=None) -> None:
         """Enqueue a device-ready buffer; rotation happens off-thread.
 
         The call is the trainer's publish boundary, so it must cost
@@ -171,10 +216,12 @@ class SnapshotStore:
         ``forgets`` may be device scalars — the publisher thread syncs
         them (that host-blocking read is exactly what moves off the
         scan's critical path). Pending buffers coalesce: only the
-        freshest enqueued state rotates when the publisher is behind.
+        freshest enqueued state rotates when the publisher is behind —
+        lossless for ``telemetry`` too, since the vector is cumulative.
         """
         with self._lock:
-            self._pending.append((states, events_processed, forgets))
+            self._pending.append((states, events_processed, forgets,
+                                  telemetry))
             self._idle.clear()
             if not self._draining:
                 self._draining = True
@@ -197,12 +244,15 @@ class SnapshotStore:
                         return
                     # Coalesce: rotate only the freshest pending buffer.
                     skipped = len(self._pending) - 1
-                    states, events, forgets = self._pending[-1]
+                    states, events, forgets, telemetry = self._pending[-1]
                     self._pending.clear()
-                    self.stats["coalesced"] += skipped
-                self._rotate(states, int(events), int(forgets))
-                with self._lock:
-                    self.stats["async_rotations"] += 1
+                    self._c_coalesced.inc(skipped)
+                # int() here is THE deferred host sync of the non-blocking
+                # publish boundary — it runs on this thread, so the scan
+                # never waited for it. Same for the telemetry fold below.
+                self._rotate(states, int(events), int(forgets), mode="async")
+                if telemetry is not None and self._telemetry_sink is not None:
+                    self._telemetry_sink(telemetry)
         except BaseException:
             # A failing rotation (e.g. a raising listener) must not wedge
             # the store: reopen the spawn gate so the next enqueue
@@ -218,14 +268,39 @@ class SnapshotStore:
         """Block until every pending async publish has rotated."""
         return self._idle.wait(timeout)
 
-    def stats_snapshot(self) -> dict[str, int]:
-        """A consistent copy of ``stats``, taken under the store lock.
+    def set_telemetry_sink(self, fn: Callable[[Any], Any] | None) -> None:
+        """Install the fold target for publish-boundary telemetry
+        vectors (e.g. ``TelemetryFolder(registry).fold``). The sink runs
+        on the publisher thread for async publishes and inline for sync
+        ones, always outside the store lock."""
+        self._telemetry_sink = fn
 
-        Use this from other threads while the publisher may be live;
-        reading ``stats`` directly is only safe once ``flush`` returned.
+    def stats_snapshot(self) -> dict[str, int]:
+        """The publish counters as plain ints (registry-backed).
+
+        Safe from any thread while the publisher is live. The legacy
+        keys (``async_rotations``, ``coalesced``) keep their pre-registry
+        meaning; the counters themselves live in ``self.metrics`` as
+        ``snapshot_rotations_total{mode=}`` / ``snapshot_coalesced_total``.
         """
-        with self._lock:
-            return dict(self.stats)
+        a = int(self._c_rotations.labels(mode="async").value)
+        s = int(self._c_rotations.labels(mode="sync").value)
+        return {"async_rotations": a, "sync_rotations": s,
+                "rotations": a + s,
+                "coalesced": int(self._c_coalesced.value)}
+
+    @property
+    def stats(self):
+        """Deprecated (one release): the old ad-hoc counter dict.
+
+        Reads now come from the metrics registry; use
+        :meth:`stats_snapshot` (same keys) or ``self.metrics`` directly.
+        """
+        warnings.warn(
+            "SnapshotStore.stats is deprecated; use stats_snapshot() or "
+            "the metrics registry (store.metrics) — the dict view will "
+            "be removed next release", DeprecationWarning, stacklevel=2)
+        return self.stats_snapshot()
 
     # -- subscribers ------------------------------------------------------
 
@@ -238,7 +313,8 @@ class SnapshotStore:
         pub = self.publish_async if mode == "async" else self.publish
 
         def _on_publish(ev):
-            pub(ev.states, ev.events_processed, ev.forgets)
+            pub(ev.states, ev.events_processed, ev.forgets,
+                telemetry=getattr(ev, "telemetry", None))
         return _on_publish
 
     def subscribe(self, fn: Callable[[Snapshot], None]) -> None:

@@ -44,6 +44,9 @@ from repro.core.pipeline import (RestoredCheckpoint, StreamConfig,
                                  StreamResult, restore_stream_checkpoint,
                                  run_stream, save_stream_checkpoint)
 from repro.core.routing import GridSpec
+from repro.obs import metrics as metrics_lib
+from repro.obs import telemetry as telemetry_lib
+from repro.obs import trace as trace_lib
 from repro.serve import (PublishPolicy, QueryFrontend, ServeConfig,
                          ServeResponse, SnapshotStore)
 
@@ -64,10 +67,23 @@ class StreamSession:
 
     def __init__(self, cfg: StreamConfig, *, serve: ServeConfig | None = None,
                  publish: PublishPolicy | None = None,
-                 snapshot_slots: int = 2):
+                 snapshot_slots: int = 2,
+                 metrics: metrics_lib.MetricsRegistry | None = None):
         self.cfg = cfg
         self.algorithm = algorithm_lib.get_algorithm(cfg.algorithm)
-        self.store = SnapshotStore(slots=snapshot_slots)
+        # One registry spans the whole session — engine telemetry,
+        # snapshot store, query front-end and stage spans all land here.
+        # Pass a shared registry to aggregate several sessions into one
+        # scrape; export via metrics.to_prometheus() / write_json().
+        self.metrics = (metrics if metrics is not None
+                        else metrics_lib.MetricsRegistry())
+        self.store = SnapshotStore(slots=snapshot_slots,
+                                   registry=self.metrics)
+        # Device-telemetry fold path: publish boundaries carry the
+        # in-scan TelemetryState; the store hands it to this folder (on
+        # the publisher thread under async policies).
+        self._telemetry = telemetry_lib.TelemetryFolder(self.metrics)
+        self.store.set_telemetry_sink(self._telemetry.fold)
         # One policy governs both halves: the session's ingest cadence
         # and the front-end's staleness bound. An explicit ``publish``
         # wins; otherwise adopt the ServeConfig's (or the default).
@@ -148,17 +164,23 @@ class StreamSession:
 
             def hook(ev):
                 publish(ev.states, base + ev.events_processed,
-                        base_forgets + ev.forgets)
+                        base_forgets + ev.forgets, telemetry=ev.telemetry)
                 if legacy_hook is not None:
                     legacy_hook(ev)
 
-        res = run_stream(
-            np.asarray(users), np.asarray(items), self.cfg, verbose=verbose,
-            publish_every=policy.every,
-            on_publish=hook,
-            publish_sync=not policy.is_async,
-            initial_states=self._states, initial_carry=self._carry,
-            initial_detector=self._detector)
+        # The telemetry vector restarts from zero each run_stream call;
+        # the previous segment's folds are complete (ingest ends with a
+        # flush inside _publish), so rebasing here is race-free.
+        self._telemetry.rebase()
+        with trace_lib.span("ingest", self.metrics):
+            res = run_stream(
+                np.asarray(users), np.asarray(items), self.cfg,
+                verbose=verbose,
+                publish_every=policy.every,
+                on_publish=hook,
+                publish_sync=not policy.is_async,
+                initial_states=self._states, initial_carry=self._carry,
+                initial_detector=self._detector)
         self._states = res.final_states
         # run_stream drains the re-queue before returning (flushed or
         # counted in res.dropped), so the carry is consumed.
@@ -168,6 +190,10 @@ class StreamSession:
         self.events_processed += res.events_processed
         self.forgets += res.forgets
         self._publish()
+        # Final fold: the end-of-run vector covers any tail past the last
+        # publish boundary (or the whole run when publishing was off).
+        # After _publish's flush, no async fold is in flight.
+        self._telemetry.fold(res.telemetry)
         return res
 
     def _publish(self) -> None:
@@ -175,8 +201,10 @@ class StreamSession:
         # rotating after this final sync publish would regress the front
         # snapshot to an older stream position, breaking the "recommend
         # right after ingest sees the final state" guarantee.
-        self.store.flush()
-        self.store.publish(self._states, self.events_processed, self.forgets)
+        with trace_lib.span("publish", self.metrics):
+            self.store.flush()
+            self.store.publish(self._states, self.events_processed,
+                               self.forgets)
 
     # -- serve ------------------------------------------------------------
 
@@ -192,9 +220,12 @@ class StreamSession:
         if self.store.latest_version == 0:
             self._publish()     # cold session: serve the zero state
         if n is not None and n != self._frontend.cfg.top_n:
+            # The fresh frontend shares the store's registry (idempotent
+            # get-or-create), so the serve counters keep accumulating.
             self._frontend = QueryFrontend(
                 self.store, dataclasses.replace(self._frontend.cfg, top_n=n))
-        return self._frontend.serve(user_ids)
+        with trace_lib.span("serve", self.metrics):
+            return self._frontend.serve(user_ids)
 
     # -- checkpoint / restore ---------------------------------------------
 
@@ -240,12 +271,14 @@ class StreamSession:
         hyper = self.cfg.resolved_hyper()
         new_u = u_cap if u_cap is not None else hyper.u_cap
         new_i = i_cap if i_cap is not None else hyper.i_cap
-        logical = self.algorithm.extract_logical(self._states, self.cfg.grid)
-        self._states = self.algorithm.build_states(
-            logical, src=self.cfg.grid, dst=grid,
-            u_cap=new_u, i_cap=new_i, merge=merge)
-        self.cfg = dataclasses.replace(
-            self.cfg, grid=grid,
-            hyper=hyper._replace(u_cap=new_u, i_cap=new_i))
-        self._publish()
-        self._frontend.retarget(grid, u_cap=u_cap)
+        with trace_lib.span("regrid", self.metrics):
+            logical = self.algorithm.extract_logical(
+                self._states, self.cfg.grid)
+            self._states = self.algorithm.build_states(
+                logical, src=self.cfg.grid, dst=grid,
+                u_cap=new_u, i_cap=new_i, merge=merge)
+            self.cfg = dataclasses.replace(
+                self.cfg, grid=grid,
+                hyper=hyper._replace(u_cap=new_u, i_cap=new_i))
+            self._publish()
+            self._frontend.retarget(grid, u_cap=u_cap)

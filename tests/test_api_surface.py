@@ -41,6 +41,7 @@ EXPECTED_ALL = {
     "save_stream_checkpoint", "restore_stream_checkpoint",
     "PublishPolicy", "ServeConfig", "ServeResponse", "QueryFrontend",
     "SnapshotStore", "StaleSnapshotError", "grid_topn",
+    "MetricsRegistry",
 }
 
 

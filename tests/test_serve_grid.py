@@ -315,17 +315,17 @@ def test_frontend_caches_and_invalidates_on_rotation():
     second = fe.serve(q)
     assert first.cache_hits == 0 and second.cache_hits == len(q)
     np.testing.assert_array_equal(first.ids, second.ids)
-    assert fe.stats["plane_batches"] == 1
+    assert fe.stats_snapshot()["plane_batches"] == 1
 
     store.publish(states, events_processed=10)       # rotation
     third = fe.serve(q)
     assert third.cache_hits == 0
-    assert fe.stats["invalidations"] == 1
+    assert fe.stats_snapshot()["invalidations"] == 1
 
     store.publish(states, events_processed=20, forgets=1)  # forgetting fired
     fourth = fe.serve(q)
     assert fourth.cache_hits == 0
-    assert fe.stats["invalidations"] == 2
+    assert fe.stats_snapshot()["invalidations"] == 2
 
 
 def test_frontend_popularity_fallback_for_unknown_users():
@@ -346,7 +346,7 @@ def test_frontend_requeues_column_overflow():
     col0 = np.unique(uids[(uids >= 0) & (uids % g == 0)])[:16]
     assert col0.size == 16                           # all in one column
     resp = fe.serve(col0)
-    assert fe.stats["requeued"] > 0                  # overflow happened...
+    assert fe.stats_snapshot()["requeued"] > 0                  # overflow happened...
     assert resp.known.all()                          # ...but everyone served
     assert (resp.ids >= 0).all()
 
@@ -415,12 +415,12 @@ def test_held_response_and_lazy_invalidation_across_rotation():
     # entries stay resident until their next lookup.
     store.publish(states_b, events_processed=200)
     assert len(fe._cache) > 0
-    assert fe.stats["lazy_drops"] == 0
+    assert fe.stats_snapshot()["lazy_drops"] == 0
 
     second = fe.serve(q)
     assert second.snapshot_version == 2
     assert second.cache_hits == 0               # every stale entry missed
-    assert fe.stats["lazy_drops"] == len(set(q.tolist()))
+    assert fe.stats_snapshot()["lazy_drops"] == len(set(q.tolist()))
 
     # The held response is immutable: rotation did not touch its arrays.
     np.testing.assert_array_equal(first.ids, held_ids)
@@ -452,8 +452,8 @@ def test_lazy_invalidation_only_touches_looked_up_entries():
 
     store.publish(states, events_processed=10)       # rotation
     fe.serve(q[:3])                                  # only 3 looked up
-    assert fe.stats["lazy_drops"] == 3
+    assert fe.stats_snapshot()["lazy_drops"] == 3
     # The other 5 are still resident (stale, awaiting their own lookup).
     assert len(fe._cache) == q.size
     fe.serve(q)                                      # now the rest drop too
-    assert fe.stats["lazy_drops"] == q.size
+    assert fe.stats_snapshot()["lazy_drops"] == q.size

@@ -142,8 +142,9 @@ def test_publish_async_flush_is_deterministic_and_coalesces():
     # rotated or coalesced away; versions stay monotonic.
     assert store.acquire().events_processed == n * 10
     assert store.progress == n * 10
-    assert store.stats["async_rotations"] == store.latest_version
-    assert store.stats["async_rotations"] + store.stats["coalesced"] == n
+    stats = store.stats_snapshot()
+    assert stats["async_rotations"] == store.latest_version
+    assert stats["async_rotations"] + stats["coalesced"] == n
 
 
 def test_publish_async_accepts_device_scalars():
@@ -205,7 +206,7 @@ def test_async_publish_policy_never_changes_training_results():
     assert res.events_processed == plain.events_processed
     # The store converged to the final stream position.
     assert s.store.acquire().events_processed == users.size
-    assert s.store.stats["async_rotations"] >= 1
+    assert s.store.stats_snapshot()["async_rotations"] >= 1
 
 
 def test_ingest_final_publish_drains_async_backlog_first():
