@@ -108,10 +108,13 @@ def _percentiles_exact(n: int = 5000) -> bool:
         for q in (50, 90, 99))
 
 
+EVENT_DIVISOR = {"dics": 2}
+
+
 def rows(events: int = 8192):
     out = []
     for algorithm in ("disgd", "dics"):
-        ev = events // (2 if algorithm == "dics" else 1)
+        ev = events // EVENT_DIVISOR.get(algorithm, 1)
         on, off, ratio = _throughput_pair(ev, algorithm)
         out.append({
             "name": f"obs/{algorithm}/movielens/n_i=4",

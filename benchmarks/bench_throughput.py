@@ -9,9 +9,16 @@ dry-run collective schedule instead).
 Execution backends compared at n_i=4:
   * host   — per-batch Python dispatch + host<->device state round-trips;
   * scan   — device-resident engine (one jitted ``lax.scan``);
-  * pallas — scan engine with the Pallas fast-path worker (DISGD only;
-    off-TPU the kernels run in interpret mode, so this row only shows a
-    win on real TPU hardware).
+  * pallas — scan engine with the fused fast-path worker (all three
+    algorithms since ISSUE 8). Off TPU the fused ops dispatch to their
+    jnp oracles, so this row is an honest CPU measurement too — the
+    batched bucket-start scoring already pays there; the kernel bodies
+    themselves only engage on TPU.
+
+The smoke subset additionally reports the *tuned* execution tiles from
+``repro.kernels.tiles`` (micro-batch 512 / capacity factor 1.25 on the
+reference CPU — see ``bench_kernels --autotune``) next to the mb=128
+latency-oriented baseline, so the artifact tracks both operating points.
 
 Throughput rows run at micro-batch 128 — the latency-oriented streaming
 configuration (a real stream dispatches small batches frequently; giant
@@ -53,7 +60,7 @@ def rows(events: int = 12_288):
             for n_i, forget, label, backend in plans:
                 res = run(algorithm, dataset, n_i, ev, forget,
                           backend=backend, micro_batch=MICRO_BATCH,
-                          repeats=1 if backend == "pallas" else REPEATS)
+                          repeats=REPEATS)
                 thpt = res.throughput
                 if base is None:
                     base = thpt
@@ -70,16 +77,30 @@ def rows(events: int = 12_288):
 
 
 def smoke_rows(events: int = 4096):
-    """CI smoke subset: host vs device-resident engine at n_i=4 (DISGD)."""
-    from benchmarks.common import run
+    """CI smoke subset at n_i=4 (DISGD): host vs device-resident engine
+    at the mb=128 latency point, plus the scan and pallas backends at
+    the autotuned execution tile (``repro.kernels.tiles``)."""
+    import jax
 
+    from benchmarks.common import run
+    from repro.kernels import tiles
+
+    platform = jax.default_backend()
+    plans = [("host", "host", None), ("scan", "scan", None)]
+    for backend in ("scan", "pallas"):
+        tile = tiles.best_tile("engine", "disgd", backend, platform)
+        plans.append((f"{backend}+tuned", backend, tile))
     out = []
-    for label, backend in (("host", "host"), ("scan", "scan")):
+    for label, backend, tile in plans:
+        mb = int(tile["micro_batch"]) if tile else MICRO_BATCH
+        cf = float(tile["capacity_factor"]) if tile else 2.0
         res = run("disgd", "movielens", 4, events, backend=backend,
-                  micro_batch=MICRO_BATCH, repeats=REPEATS)
+                  micro_batch=mb, capacity_factor=cf, repeats=REPEATS)
         out.append({
             "name": f"throughput/disgd/movielens/n_i=4+{label}",
             "backend": backend,
+            "micro_batch": mb,
+            "capacity_factor": cf,
             "events": int(res.events_processed),
             "dropped": int(res.dropped),
             "events_per_sec": res.throughput,

@@ -45,7 +45,8 @@ def stream_for(dataset: str, events: int, seed: int = 0, drift: bool = False):
 def make_cfg(algorithm: str, dataset: str, n_i: int,
              forgetting: ForgettingConfig | None = None,
              backend: str = "host",
-             micro_batch: int = 1024) -> StreamConfig:
+             micro_batch: int = 1024,
+             capacity_factor: float = 2.0) -> StreamConfig:
     grid = GridSpec(n_i)
     u_cap0, i_cap0 = CAPS[dataset]
     u_cap = max(64, u_cap0 // grid.g)
@@ -55,17 +56,19 @@ def make_cfg(algorithm: str, dataset: str, n_i: int,
     return StreamConfig(
         algorithm=algorithm, grid=grid, micro_batch=micro_batch, hyper=hyper,
         forgetting=forgetting or ForgettingConfig(), backend=backend,
+        capacity_factor=capacity_factor,
     )
 
 
 def run(algorithm: str, dataset: str, n_i: int, events: int,
         forgetting: ForgettingConfig | None = None, backend: str = "host",
-        micro_batch: int = 1024, repeats: int = 1):
+        micro_batch: int = 1024, capacity_factor: float = 2.0,
+        repeats: int = 1):
     """Run a stream; with ``repeats > 1`` return the best-throughput run
     (damps CPU contention noise, standard benchmarking practice)."""
     users, items = stream_for(dataset, events)
     cfg = make_cfg(algorithm, dataset, n_i, forgetting, backend=backend,
-                   micro_batch=micro_batch)
+                   micro_batch=micro_batch, capacity_factor=capacity_factor)
     best = None
     for _ in range(repeats):
         res = run_stream(users, items, cfg)

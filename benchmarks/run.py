@@ -17,12 +17,15 @@ SUITES = ("kernels", "recall", "memory", "forgetting", "throughput", "skew",
           "serve", "service", "regrid", "drift", "obs")
 
 
-def smoke(out_path: str = "BENCH_smoke.json", events: int = 4096) -> None:
+def smoke(out_path: str = "BENCH_smoke.json", events: int = 4096) -> int:
     """Tiny host-vs-engine throughput check emitted as a JSON artifact so
-    CI runs leave a perf trajectory behind."""
+    CI runs leave a perf trajectory behind. Also appends the kernel-level
+    ``kernels/`` rows (fused ops + tuned-tile engine configs) and returns
+    their regression-gate status — the kernel floors are enforced
+    separately from these end-to-end rows."""
     import jax
 
-    from benchmarks import bench_throughput
+    from benchmarks import bench_kernels, bench_throughput
     from benchmarks.common import SMOKE_SCHEMA_VERSION
 
     t0 = time.perf_counter()
@@ -49,6 +52,7 @@ def smoke(out_path: str = "BENCH_smoke.json", events: int = 4096) -> None:
               f"events/s={row['events_per_sec']:,.0f}")
     print(f"# wrote {out_path} in {payload['total_seconds']:.1f}s",
           file=sys.stderr)
+    return bench_kernels.smoke(out_path)
 
 
 def main() -> None:
@@ -62,8 +66,7 @@ def main() -> None:
     ap.add_argument("--smoke-out", default="BENCH_smoke.json")
     args = ap.parse_args()
     if args.smoke:
-        smoke(args.smoke_out)
-        return
+        raise SystemExit(smoke(args.smoke_out))
     only = set(args.only.split(",")) if args.only else set(SUITES)
 
     from benchmarks import (bench_drift, bench_forgetting, bench_kernels,

@@ -40,9 +40,10 @@ from repro.core import state as state_lib
 from repro.core.algorithm import Algorithm, register
 from repro.core.disgd import init_vector, score_items
 from repro.core.serve import partial_topn
-from repro.core.state import DisgdState
+from repro.core.state import DisgdState, Tables
 
-__all__ = ["BprHyper", "bpr_worker_step", "BprAlgorithm"]
+__all__ = ["BprHyper", "bpr_worker_step", "make_pallas_worker",
+           "BprAlgorithm"]
 
 
 class BprHyper(NamedTuple):
@@ -174,11 +175,84 @@ def bpr_worker_step(state: DisgdState, events, hyper: BprHyper,
     return state, hits, evaluated
 
 
+def make_pallas_worker(hyper: BprHyper, key: jax.Array):
+    """BPR worker step built on the Pallas kernels (fast path).
+
+    Same structure as ``disgd.make_pallas_worker``: bucket scoring is one
+    batched masked-matmul against the state at bucket start (recall bits
+    tolerance-contract), training is the fused complete-update op in its
+    pairwise mode — EXACT against ``bpr_worker_step``, negative-skip rule
+    and eviction order included. The per-event negative slots are
+    replayed batched: the event's clock is the bucket-start clock plus
+    the number of valid events before it (exclusive cumsum), so
+    ``fold_in(key, clock, u_id)`` reproduces the reference sequence
+    bit-for-bit; slot *usability* is then re-checked inside the
+    sequential op against the live tables, exactly where the reference
+    checks it.
+    """
+    from repro.kernels import ops
+
+    u_cap, i_cap = hyper.u_cap, hyper.i_cap
+
+    init_batch = jax.vmap(
+        lambda ident: init_vector(key, ident, hyper.k, hyper.init_scale)
+    )
+
+    def sample_neg(clock, u_id):
+        nkey = jax.random.fold_in(
+            jax.random.fold_in(key, clock.astype(jnp.uint32)),
+            u_id.astype(jnp.uint32))
+        return jax.random.randint(nkey, (), 0, i_cap)
+
+    def step(st: DisgdState, events):
+        ev_u, ev_i = events
+        valid = ev_u >= 0
+        t = st.tables
+        u_slot = state_lib.slot_of(ev_u, hyper.g, u_cap)
+        i_slot = state_lib.slot_of(ev_i, hyper.n_i, i_cap)
+        known_u = t.user_ids[u_slot] == ev_u
+        known_i = t.item_ids[i_slot] == ev_i
+
+        init_u = init_batch(ev_u)
+        init_i = init_batch(ev_i)
+
+        # --- recommend (batched masked scoring, bucket-start state) ---
+        u_vecs_b = jnp.where(known_u[:, None], st.user_vecs[u_slot], init_u)
+        rated_rows = jnp.where(known_u[:, None], st.rated[u_slot], False)
+        cand = (t.item_ids >= 0)[None, :] & ~rated_rows & valid[:, None]
+        scores = ops.masked_scores(u_vecs_b, st.item_vecs, cand)
+        top_scores, top_idx = jax.lax.top_k(
+            scores, min(hyper.top_n, scores.shape[-1])
+        )
+        hits = jnp.any(
+            (t.item_ids[top_idx] == ev_i[:, None]) & jnp.isfinite(top_scores),
+            axis=-1,
+        ) & valid & known_i
+
+        # --- negative replay: the clock each event sees is bucket-start
+        # clock + #valid events before it ---
+        vi = valid.astype(t.clock.dtype)
+        clocks = t.clock + jnp.cumsum(vi) - vi
+        j_slot = jax.vmap(sample_neg)(clocks, ev_u)
+
+        # --- train (fused pairwise update: exact reference semantics) ---
+        uv, iv, rated, tabs = ops.factor_update(
+            st.user_vecs, st.item_vecs, st.rated, tuple(t),
+            (ev_u, ev_i, u_slot, i_slot, j_slot, init_u, init_i),
+            eta=hyper.eta, lam=hyper.lam,
+        )
+        new_st = DisgdState(
+            tables=Tables(*tabs), user_vecs=uv, item_vecs=iv, rated=rated)
+        return new_st, hits, valid
+
+    return step
+
+
 class BprAlgorithm(Algorithm):
     """Registry adapter: everything the runtime needs, nothing else."""
 
     name = "bpr"
-    supports_pallas = False  # negotiates down to scan (reference worker)
+    supports_pallas = True  # fused pairwise kernel (kernels/factor_update)
     supports_serve_kernel = True  # serving scores via the Pallas kernel
 
     def default_hyper(self):
@@ -194,6 +268,9 @@ class BprAlgorithm(Algorithm):
             return bpr_worker_step(state, events, hyper, key)
 
         return step
+
+    def make_pallas_worker_step(self, hyper, key):
+        return make_pallas_worker(hyper, key)
 
     def make_serve_leaf(self, *, top_n, g, u_cap, k_nn, use_kernel):
         del k_nn  # neighborhood size is a DICS knob

@@ -271,7 +271,8 @@ class DicsAlgorithm(Algorithm):
     """DICS — distributed incremental item-based cosine CF (Alg. 3)."""
 
     name = "dics"
-    supports_pallas = False  # Eq. 6/7 scoring has no kernel fast path
+    supports_pallas = True  # fused co-count kernel (kernels/dics_update)
+    supports_serve_kernel = True  # fused Eq. 6/7 leaf (ops.dics_topn)
 
     def default_hyper(self):
         return dics_lib.DicsHyper()
@@ -287,12 +288,15 @@ class DicsAlgorithm(Algorithm):
 
         return step
 
-    def make_serve_leaf(self, *, top_n, g, u_cap, k_nn, use_kernel):
-        del use_kernel  # Pallas scoring is a factor-model path
+    def make_pallas_worker_step(self, hyper, key):
+        del key  # DICS state init is deterministic (counts)
+        return dics_lib.make_pallas_worker(hyper)
 
+    def make_serve_leaf(self, *, top_n, g, u_cap, k_nn, use_kernel):
         def leaf(state, user_ids):
             return dics_lib.dics_partial_topn(
-                state, user_ids, top_n=top_n, k_nn=k_nn, g=g, u_cap=u_cap)
+                state, user_ids, top_n=top_n, k_nn=k_nn, g=g, u_cap=u_cap,
+                use_kernel=use_kernel)
 
         return leaf
 

@@ -29,11 +29,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import state as state_lib
-from repro.core.state import DicsState
+from repro.core.state import DicsState, Tables
 from repro.kernels import ops
 
-__all__ = ["DicsHyper", "dics_worker_step", "dics_scores",
-           "dics_partial_topn", "similarity_matrix"]
+__all__ = ["DicsHyper", "dics_worker_step", "make_pallas_worker",
+           "dics_scores", "dics_partial_topn", "similarity_matrix"]
 
 
 class DicsHyper(NamedTuple):
@@ -72,14 +72,21 @@ def dics_scores(co, item_cnt, rated_row, item_ids, k_nn: int, *, sim=None):
 
 
 def dics_partial_topn(state: DicsState, user_ids, *, top_n: int = 10,
-                      k_nn: int = 10, g: int = 1, u_cap: int = 1024):
+                      k_nn: int = 10, g: int = 1, u_cap: int = 1024,
+                      use_kernel: bool = True):
     """One worker's partial top-N (DICS): the Eq. 6/7 serving leaf.
 
     Read-only scoring of this worker's local item split (``co`` /
     ``item_cnt`` statistics) for a batch of query users — the DICS
     counterpart of ``serve.partial_topn``, merged across splits by
-    ``repro.serve.plane``. The similarity matrix (Eq. 6) is built once
-    per call and shared by all queries in the batch.
+    ``repro.serve.plane``.
+
+    On TPU (and ``use_kernel=True``) the whole leaf is one fused Pallas
+    kernel (``ops.dics_topn``): similarity tiles, neighbor-mass top-k and
+    the partial top-N merge never materialize the [I, I] similarity
+    matrix in HBM. Elsewhere the jnp path below is the oracle: the
+    similarity matrix (Eq. 6) is built once per call and shared by all
+    queries in the batch.
 
     Candidates with no positive neighbor mass are excluded (score
     -inf), matching the training path's ``top_scores > 0`` hit rule: a
@@ -92,6 +99,12 @@ def dics_partial_topn(state: DicsState, user_ids, *, top_n: int = 10,
     slots = state_lib.slot_of(user_ids, g, u_cap)
     known = t.user_ids[slots] == user_ids
     rated = state.rated[slots] & known[:, None]           # [B, I_cap]
+
+    if use_kernel and ops.on_tpu():
+        top_ids, top_scores = ops.dics_topn(
+            state.co, state.item_cnt, rated, known, t.item_ids,
+            top_n=top_n, k_nn=k_nn)
+        return top_ids, top_scores, known
 
     sim = similarity_matrix(state.co, state.item_cnt)     # [I_cap, I_cap]
 
@@ -189,3 +202,63 @@ def dics_worker_step(state: DicsState, events, hyper: DicsHyper):
 
     state, (hits, evaluated) = jax.lax.scan(body, state, (u_ids, i_ids))
     return state, hits, evaluated
+
+
+def make_pallas_worker(hyper: DicsHyper):
+    """DICS worker step built on the fused kernels (fast path).
+
+    The reference step rebuilds the full [I, I] similarity matrix from
+    scratch INSIDE the per-event scan — O(I^2) work per event — because
+    the co/cnt statistics change under it as the bucket proceeds. The
+    fast path hoists Eq. 6 to once per bucket: all events score against
+    the bucket-start statistics (batched, chunked to bound the [E, I, I]
+    intermediate), then the fused sequential update op
+    (``ops.dics_update`` -> ``kernels/dics_update.py``) applies the
+    co-count scatters event-for-event — final states are EXACT against
+    ``dics_worker_step``, unguarded eviction clears included; recall
+    bits carry the same bucket-start tolerance contract as the factor
+    fast paths.
+    """
+    u_cap, i_cap = hyper.u_cap, hyper.i_cap
+
+    def step(st: DicsState, events):
+        ev_u, ev_i = events
+        valid = ev_u >= 0
+        t = st.tables
+        u_slot = state_lib.slot_of(ev_u, hyper.g, u_cap)
+        i_slot = state_lib.slot_of(ev_i, hyper.n_i, i_cap)
+        known_u = t.user_ids[u_slot] == ev_u
+        known_i = t.item_ids[i_slot] == ev_i
+
+        # --- recommend (Eq. 6 once per bucket, Eq. 7 batched) ---
+        sim = similarity_matrix(st.co, st.item_cnt)       # [I, I]
+        rated_rows = st.rated[u_slot] & known_u[:, None]  # [E, I]
+
+        def score_chunk(rows):
+            return jax.vmap(lambda r: dics_scores(
+                st.co, st.item_cnt, r, t.item_ids, hyper.k_nn, sim=sim))(rows)
+
+        n_ev = ev_u.shape[0]
+        chunk = max(1, min(n_ev, (1 << 22) // max(1, i_cap * i_cap)))
+        while n_ev % chunk:
+            chunk -= 1
+        scores = jax.lax.map(
+            score_chunk, rated_rows.reshape(n_ev // chunk, chunk, i_cap)
+        ).reshape(n_ev, i_cap)
+        top_scores, top_idx = jax.lax.top_k(
+            scores, min(hyper.top_n, scores.shape[-1]))
+        hits = jnp.any(
+            (t.item_ids[top_idx] == ev_i[:, None])
+            & jnp.isfinite(top_scores) & (top_scores > 0),
+            axis=-1,
+        ) & valid & known_i
+
+        # --- update (fused sequential op: exact reference semantics) ---
+        co, cnt, rated, tabs = ops.dics_update(
+            st.co, st.item_cnt, st.rated, tuple(t),
+            (ev_u, ev_i, u_slot, i_slot))
+        new_st = DicsState(
+            tables=Tables(*tabs), co=co, item_cnt=cnt, rated=rated)
+        return new_st, hits, valid
+
+    return step

@@ -191,12 +191,14 @@ def make_pallas_worker(hyper: DisgdHyper, key: jax.Array):
 
     Scoring for the whole bucket is one masked-matmul kernel call against
     the state at bucket start (instead of ``capacity`` sequential top-k
-    passes); training applies the fused sequential ISGD kernel
-    (``kernels/isgd.py``), which is exact — factors match the reference
-    step whenever ids do not collide in the slot tables. *Recommendation*
-    is evaluated against the state at bucket start, so recall bits may
-    differ within a bucket when one user rates several items in the same
-    micro-batch.
+    passes); training applies the fused complete-update op
+    (``ops.factor_update`` -> ``kernels/factor_update.py``), which
+    replicates the reference step's gather/update/eviction/bookkeeping
+    sequence event-for-event — final states are EXACT against
+    ``disgd_worker_step``, collisions and evictions included.
+    *Recommendation* is evaluated against the state at bucket start, so
+    recall bits may differ within a bucket when one user rates several
+    items in the same micro-batch.
 
     Returns ``step(state, (ev_u, ev_i)) -> (state, hits, evaluated)`` —
     the same per-worker signature as ``disgd_worker_step`` partial-
@@ -223,7 +225,7 @@ def make_pallas_worker(hyper: DisgdHyper, key: jax.Array):
         init_u = init_batch(ev_u)                       # [cap, k]
         init_i = init_batch(ev_i)
 
-        # --- recommend (batched Pallas masked scoring) ---
+        # --- recommend (batched masked scoring) ---
         u_vecs_b = jnp.where(known_u[:, None], st.user_vecs[u_slot], init_u)
         rated_rows = jnp.where(known_u[:, None], st.rated[u_slot], False)
         cand = (t.item_ids >= 0)[None, :] & ~rated_rows & valid[:, None]
@@ -236,51 +238,14 @@ def make_pallas_worker(hyper: DisgdHyper, key: jax.Array):
             axis=-1,
         ) & valid & known_i
 
-        # --- train (fused sequential ISGD kernel) ---
-        # Seed unseen ids first so the kernel's gather reads the same init
-        # the reference uses at the id's first event.
-        seed_u = valid & ~known_u
-        seed_i = valid & ~known_i
-        uv = st.user_vecs.at[jnp.where(seed_u, u_slot, u_cap)].set(
-            init_u, mode="drop")
-        iv = st.item_vecs.at[jnp.where(seed_i, i_slot, i_cap)].set(
-            init_i, mode="drop")
-        uv, iv = ops.isgd_update(
-            uv, iv, u_slot, i_slot, valid, eta=hyper.eta, lam=hyper.lam
-        )
-
-        # --- bookkeeping (batched; matches the reference modulo slot
-        # collisions, which the fast path resolves last-writer-wins) ---
-        vslot_u = jnp.where(valid, u_slot, u_cap)
-        vslot_i = jnp.where(valid, i_slot, i_cap)
-        user_ids = t.user_ids.at[vslot_u].set(ev_u, mode="drop")
-        item_ids = t.item_ids.at[vslot_i].set(ev_i, mode="drop")
-        event_clock = t.clock + jnp.cumsum(valid.astype(jnp.int32))
-        clock = t.clock + jnp.sum(valid.astype(jnp.int32))
-        user_ts = t.user_ts.at[vslot_u].max(event_clock, mode="drop")
-        item_ts = t.item_ts.at[vslot_i].max(event_clock, mode="drop")
-
-        u_touch = jnp.zeros((u_cap,), jnp.int32).at[vslot_u].add(
-            valid.astype(jnp.int32), mode="drop")
-        i_touch = jnp.zeros((i_cap,), jnp.int32).at[vslot_i].add(
-            valid.astype(jnp.int32), mode="drop")
-        u_evicted = user_ids != t.user_ids    # tenant changed this batch
-        i_evicted = item_ids != t.item_ids
-        user_freq = jnp.where(u_evicted, 0, t.user_freq) + u_touch
-        item_freq = jnp.where(i_evicted, 0, t.item_freq) + i_touch
-
-        rated = st.rated & ~u_evicted[:, None] & ~i_evicted[None, :]
-        flat = jnp.where(valid, u_slot * i_cap + i_slot, u_cap * i_cap)
-        rated = rated.reshape(-1).at[flat].set(True, mode="drop").reshape(
-            u_cap, i_cap)
-
-        tables = t._replace(
-            user_ids=user_ids, item_ids=item_ids,
-            user_freq=user_freq, item_freq=item_freq,
-            user_ts=user_ts, item_ts=item_ts, clock=clock,
+        # --- train (fused complete-update op: exact reference semantics) ---
+        uv, iv, rated, tabs = ops.factor_update(
+            st.user_vecs, st.item_vecs, st.rated, tuple(t),
+            (ev_u, ev_i, u_slot, i_slot, None, init_u, init_i),
+            eta=hyper.eta, lam=hyper.lam,
         )
         new_st = DisgdState(
-            tables=tables, user_vecs=uv, item_vecs=iv, rated=rated)
+            tables=Tables(*tabs), user_vecs=uv, item_vecs=iv, rated=rated)
         return new_st, hits, valid
 
     return step

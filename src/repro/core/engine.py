@@ -27,10 +27,16 @@ execution modes share the loop:
     ``lax.scan`` step (bit-identical to the host path; the interpretable
     reference).
   * ``"pallas"`` — kernel fast path for algorithms that advertise
-    ``supports_pallas`` (DISGD: Pallas masked scoring + fused sequential
-    ISGD, ``core/disgd.make_pallas_worker``). Algorithms without a fast
-    path negotiate down to ``"scan"`` with a warning
-    (``algorithm.negotiated_backend``) instead of failing mid-run.
+    ``supports_pallas``. All three in-tree algorithms do: DISGD and
+    BPR-MF share the fused complete factor update
+    (``kernels/factor_update.py``, plain vs pairwise mode), DICS uses
+    the fused co-count update (``kernels/dics_update.py``); each pairs
+    it with batched bucket-start scoring. Fast-path FINAL STATES are
+    exact against the reference workers (collision eviction and
+    bookkeeping included); recall bits carry a bucket-start tolerance
+    contract. Algorithms without a fast path negotiate down to
+    ``"scan"`` with a warning (``algorithm.negotiated_backend``)
+    instead of failing mid-run.
   * ``"shard_map"`` — each S&R worker placed at a mesh coordinate
     (``core/distributed.py``) instead of a ``vmap`` lane.
 

@@ -3,9 +3,10 @@
 Training (Alg. 2/3) interleaves recommend+update per event; production
 systems also serve *read-only* recommendation queries at much higher QPS
 than the rating stream ingests. This module answers batches of user
-queries against ONE worker's state, using the Pallas masked-scoring
-kernel (`kernels/scoring.py`) for the users x items matmul — the hot
-spot the paper's evaluation loop spends its time in.
+queries against ONE worker's state, using the fused Pallas serve leaf
+(`ops.fused_topn` -> `kernels/topn.py`: score, rated-mask and partial
+top-N in one kernel) — the hot spot the paper's evaluation loop spends
+its time in.
 
 This is the leaf of the grid-wide serving plane in ``repro.serve``:
 
@@ -64,15 +65,21 @@ def partial_topn(state: DisgdState, user_ids, *, top_n: int = 10,
     """
     u_vecs, mask, known = _gather_queries(state, user_ids, g, u_cap)
     if use_kernel:
-        scores = ops.masked_scores(u_vecs, state.item_vecs, mask)
+        # One fused dispatch: score + rated-mask + partial top-N without
+        # materializing the [B, I] score matrix (ops.fused_topn keeps the
+        # exact topn_select ordering contract).
+        top_ids, top_scores = ops.fused_topn(
+            u_vecs, state.item_vecs, mask, state.tables.item_ids,
+            top_n=top_n)
     else:
         scores = jnp.where(
             mask,
             jnp.einsum("bk,ik->bi", u_vecs, state.item_vecs),
             -jnp.inf,
         )
-    ids_b = jnp.broadcast_to(state.tables.item_ids[None, :], scores.shape)
-    top_ids, top_scores = ops.topn_select(scores, ids_b, top_n)
+        ids_b = jnp.broadcast_to(
+            state.tables.item_ids[None, :], scores.shape)
+        top_ids, top_scores = ops.topn_select(scores, ids_b, top_n)
     return top_ids, top_scores, known
 
 

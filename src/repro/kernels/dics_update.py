@@ -1,0 +1,138 @@
+"""Pallas TPU kernel: streaming DICS co-occurrence micro-batch update.
+
+Sequential-grid sibling of ``factor_update.py`` for the neighborhood
+model: one grid step per event scatters the user's rating history into
+the co-rating matrix (Eq. 6 numerator statistics), bumps the item
+support count, and maintains the rated bitmap plus the id/freq/ts
+tables — all VMEM-resident for the micro-batch.
+
+Two reference quirks are replicated deliberately (see
+``ref.dics_apply``):
+
+  * collision-eviction clears run UNGUARDED — the reference's
+    ``lax.cond`` fires on padding events too, so a padded ``u_id = -1``
+    whose derived slot aliases a live row can clear its state; and
+  * the diagonal ``co[i, i]`` is double-counted (row add then column
+    add both touch it), matching the reference scatter pair.
+
+Parity against the oracle is pinned by ``tests/test_kernel_parity.py``
+in interpret mode.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["dics_update_kernel", "dics_update_pallas"]
+
+
+def dics_update_kernel(
+    evu_ref, evi_ref, us_ref, is_ref,
+    co_in, cnt_in, rt_in, uid_in, iid_in, ufq_in, ifq_in, uts_in, its_in,
+    clk_in,
+    co, cnt, rt, uid, iid, ufq, ifq, uts, its, clk,
+):
+    e = pl.program_id(0)
+
+    @pl.when(e == 0)
+    def _init():
+        co[...] = co_in[...]
+        cnt[...] = cnt_in[...]
+        rt[...] = rt_in[...]
+        uid[...] = uid_in[...]
+        iid[...] = iid_in[...]
+        ufq[...] = ufq_in[...]
+        ifq[...] = ifq_in[...]
+        uts[...] = uts_in[...]
+        its[...] = its_in[...]
+        clk[...] = clk_in[...]
+
+    u_id = evu_ref[e]
+    i_id = evi_ref[e]
+    us = us_ref[e]
+    is_ = is_ref[e]
+    new_u = (uid[pl.ds(us, 1)] != u_id)[0]
+    new_i = (iid[pl.ds(is_, 1)] != i_id)[0]
+
+    # Eviction clears — NOT gated on event validity, by reference
+    # contract (the scan worker's lax.cond runs for padding events too).
+    r_row = rt[pl.ds(us, 1), :]
+    rt[pl.ds(us, 1), :] = jnp.where(new_u, jnp.zeros_like(r_row), r_row)
+    r_col = rt[:, pl.ds(is_, 1)]
+    rt[:, pl.ds(is_, 1)] = jnp.where(new_i, jnp.zeros_like(r_col), r_col)
+    co_row = co[pl.ds(is_, 1), :]
+    co[pl.ds(is_, 1), :] = jnp.where(new_i, jnp.zeros_like(co_row), co_row)
+    co_col = co[:, pl.ds(is_, 1)]
+    co[:, pl.ds(is_, 1)] = jnp.where(new_i, jnp.zeros_like(co_col), co_col)
+    c_v = cnt[pl.ds(is_, 1)]
+    cnt[pl.ds(is_, 1)] = jnp.where(new_i, jnp.zeros_like(c_v), c_v)
+
+    @pl.when(u_id >= 0)
+    def _event():
+        # Rating history read AFTER the clears (it must see the evicted
+        # column as zero), BEFORE rated[u, i] is set below.
+        hist = rt[pl.ds(us, 1), :].astype(co_in.dtype)
+        co[pl.ds(is_, 1), :] = co[pl.ds(is_, 1), :] + hist
+        # Column add reads the row-updated matrix, so the diagonal picks
+        # up hist[i] twice — reference behavior.
+        co[:, pl.ds(is_, 1)] = co[:, pl.ds(is_, 1)] + hist.reshape(-1, 1)
+        cnt[pl.ds(is_, 1)] = cnt[pl.ds(is_, 1)] + 1.0
+
+        ufq_v = ufq[pl.ds(us, 1)]
+        ufq[pl.ds(us, 1)] = jnp.where(new_u, 1, ufq_v + 1)
+        ifq_v = ifq[pl.ds(is_, 1)]
+        ifq[pl.ds(is_, 1)] = jnp.where(new_i, 1, ifq_v + 1)
+        uid[pl.ds(us, 1)] = jnp.expand_dims(u_id, 0)
+        iid[pl.ds(is_, 1)] = jnp.expand_dims(i_id, 0)
+        c = clk[pl.ds(0, 1)] + 1
+        uts[pl.ds(us, 1)] = c
+        its[pl.ds(is_, 1)] = c
+        clk[pl.ds(0, 1)] = c
+
+        row = rt[pl.ds(us, 1), :]
+        iota = jax.lax.broadcasted_iota(jnp.int32, row.shape, 1)
+        rt[pl.ds(us, 1), :] = jnp.where(iota == is_, 1, row).astype(
+            rt_in.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dics_update_pallas(co, item_cnt, rated_i8, tabs, events, *,
+                       interpret: bool = False):
+    """See ``ref.dics_apply``; rated is int8 here (TPU-friendly mask).
+
+    ``tabs`` is the flattened ``Tables`` tuple with ``clock`` as an
+    i32[1] array; ``events = (ev_u, ev_i, u_slots, i_slots)``. Returns
+    ``(co, item_cnt, rated_i8, tabs)``.
+    """
+    uid, iid, ufq, ifq, uts, its, clk = tabs
+    ev_u, ev_i, u_slots, i_slots = events
+    n_events = ev_u.shape[0]
+    vmem_bytes = (
+        4 * (co.size + item_cnt.size) + rated_i8.size
+        + 4 * (uid.size + iid.size + ufq.size + ifq.size + uts.size
+               + its.size)
+    )
+    assert vmem_bytes <= 12 * 2**20, f"state exceeds VMEM budget: {vmem_bytes}"
+
+    full = lambda x: pl.BlockSpec(  # noqa: E731 — whole-array residency
+        x.shape, (lambda e: (0,) * x.ndim))
+    ins = [
+        ev_u.astype(jnp.int32), ev_i.astype(jnp.int32),
+        u_slots.astype(jnp.int32), i_slots.astype(jnp.int32),
+        co, item_cnt, rated_i8,
+        uid, iid, ufq, ifq, uts, its, clk,
+    ]
+    outs = [co, item_cnt, rated_i8, uid, iid, ufq, ifq, uts, its, clk]
+    result = pl.pallas_call(
+        dics_update_kernel,
+        grid=(n_events,),
+        in_specs=[full(x) for x in ins],
+        out_specs=[full(x) for x in outs],
+        out_shape=[jax.ShapeDtypeStruct(x.shape, x.dtype) for x in outs],
+        interpret=interpret,
+    )(*ins)
+    return result[0], result[1], result[2], tuple(result[3:])

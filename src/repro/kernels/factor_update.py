@@ -1,0 +1,174 @@
+"""Pallas TPU kernel: COMPLETE streaming factor-model micro-batch update.
+
+``kernels/isgd.py`` fuses only the factor tables; the reference workers
+also maintain id/freshness/frequency tables and the rated bitmap per
+event, so a fast path built on the factors-only kernel has to
+approximate the bookkeeping batched (last-writer-wins) and loses bit
+parity under slot collisions. This kernel closes that gap: one
+sequential grid step per event applies the WHOLE worker state
+transition — gather, (pairwise) SGD update, collision eviction, rated
+row/column maintenance, freq/ts/clock bookkeeping — with every table
+pinned in VMEM for the duration of the micro-batch (same
+whole-table-resident layout as ``isgd.py``; HBM traffic is one state
+round-trip per micro-batch, not per event).
+
+Two training rules share the body, selected by the static ``pairwise``
+flag:
+
+  * plain ISGD (DISGD, Alg. 2): ``err = 1 - u.i`` rank-1 update;
+  * pairwise BPR: sampled-negative step on ``ln sigmoid(x_ui - x_uj)``
+    with the negative slot pre-sampled on the host side via the
+    ``fold_in(key, clock, u_id)`` replay contract (``algos/bpr.py``) and
+    validated against the LIVE tables in-kernel (``neg_ok``), so the
+    skip rule sees exactly the state the reference sees.
+
+Semantics replicate ``ref.factor_apply`` (the jnp oracle, itself exact
+against the reference scan workers); parity is pinned by
+``tests/test_kernel_parity.py`` in interpret mode.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["factor_update_kernel", "factor_update_pallas"]
+
+
+def factor_update_kernel(
+    evu_ref, evi_ref, us_ref, is_ref, js_ref, iu_ref, ii_ref,
+    uv_in, iv_in, rt_in, uid_in, iid_in, ufq_in, ifq_in, uts_in, its_in,
+    clk_in,
+    uv, iv, rt, uid, iid, ufq, ifq, uts, its, clk,
+    *, eta: float, lam: float, pairwise: bool,
+):
+    e = pl.program_id(0)
+
+    @pl.when(e == 0)
+    def _init():
+        # First grid step: bring the whole state into the output buffers.
+        uv[...] = uv_in[...]
+        iv[...] = iv_in[...]
+        rt[...] = rt_in[...]
+        uid[...] = uid_in[...]
+        iid[...] = iid_in[...]
+        ufq[...] = ufq_in[...]
+        ifq[...] = ifq_in[...]
+        uts[...] = uts_in[...]
+        its[...] = its_in[...]
+        clk[...] = clk_in[...]
+
+    u_id = evu_ref[e]
+    i_id = evi_ref[e]
+
+    @pl.when(u_id >= 0)
+    def _event():
+        us = us_ref[e]
+        is_ = is_ref[e]
+        new_u = (uid[pl.ds(us, 1)] != u_id)[0]
+        new_i = (iid[pl.ds(is_, 1)] != i_id)[0]
+        u_vec = jnp.where(new_u, iu_ref[pl.ds(e, 1), :], uv[pl.ds(us, 1), :])
+        i_vec = jnp.where(new_i, ii_ref[pl.ds(e, 1), :], iv[pl.ds(is_, 1), :])
+
+        # Collision eviction on the rated bitmap: clear the evicted
+        # item's column first, then read the user's row (so the row sees
+        # the cleared entry) — same order as the reference's scatters.
+        col = rt[:, pl.ds(is_, 1)]
+        rt[:, pl.ds(is_, 1)] = jnp.where(new_i, jnp.zeros_like(col), col)
+        row = rt[pl.ds(us, 1), :]
+        row = jnp.where(new_u, jnp.zeros_like(row), row)
+        iota = jax.lax.broadcasted_iota(jnp.int32, row.shape, 1)
+
+        if pairwise:
+            js = js_ref[e]
+            neg_id = (iid[pl.ds(js, 1)])[0]
+            row_j = jnp.sum(jnp.where(iota == js, row, 0))
+            neg_ok = ((neg_id >= 0) & (neg_id != i_id) & (js != is_)
+                      & (row_j == 0))
+            j_vec = iv[pl.ds(js, 1), :]
+            x = jnp.sum(u_vec * i_vec) - jnp.sum(u_vec * j_vec)
+            s = jax.nn.sigmoid(-x)
+            u_new = jnp.where(
+                neg_ok, u_vec + eta * (s * (i_vec - j_vec) - lam * u_vec),
+                u_vec)
+            i_new = jnp.where(
+                neg_ok, i_vec + eta * (s * u_vec - lam * i_vec), i_vec)
+            j_new = jnp.where(
+                neg_ok, j_vec + eta * (-s * u_vec - lam * j_vec), j_vec)
+            # Write j before i: when the sampled slot is unusable and
+            # aliases i_slot, i's update must win (the reference drops
+            # the j write entirely; here the no-op write-back of j_vec
+            # would otherwise clobber it).
+            iv[pl.ds(js, 1), :] = j_new
+        else:
+            err = 1.0 - jnp.sum(u_vec * i_vec)
+            u_new = u_vec + eta * (err * i_vec - lam * u_vec)
+            i_new = i_vec + eta * (err * u_vec - lam * i_vec)
+
+        uv[pl.ds(us, 1), :] = u_new
+        iv[pl.ds(is_, 1), :] = i_new
+        rt[pl.ds(us, 1), :] = jnp.where(iota == is_, 1, row).astype(rt_in.dtype)
+
+        # Bookkeeping tables (freq reads must precede the id writes only
+        # in the sense of the reference: both read pre-write values).
+        ufq_v = ufq[pl.ds(us, 1)]
+        ufq[pl.ds(us, 1)] = jnp.where(new_u, 1, ufq_v + 1)
+        ifq_v = ifq[pl.ds(is_, 1)]
+        ifq[pl.ds(is_, 1)] = jnp.where(new_i, 1, ifq_v + 1)
+        uid[pl.ds(us, 1)] = jnp.expand_dims(u_id, 0)
+        iid[pl.ds(is_, 1)] = jnp.expand_dims(i_id, 0)
+        c = clk[pl.ds(0, 1)] + 1
+        uts[pl.ds(us, 1)] = c
+        its[pl.ds(is_, 1)] = c
+        clk[pl.ds(0, 1)] = c
+
+
+@functools.partial(
+    jax.jit, static_argnames=("eta", "lam", "pairwise", "interpret"))
+def factor_update_pallas(
+    user_vecs, item_vecs, rated_i8, tabs, events, *, eta: float, lam: float,
+    pairwise: bool, interpret: bool = False,
+):
+    """See ``ref.factor_apply``; rated is int8 here (TPU-friendly mask).
+
+    ``tabs`` is the flattened ``Tables`` tuple with ``clock`` as an
+    i32[1] array; ``events = (ev_u, ev_i, u_slots, i_slots, j_slots,
+    init_u, init_i)`` with ``j_slots`` always materialized (ignored when
+    ``pairwise=False``). Returns ``(user_vecs, item_vecs, rated_i8,
+    tabs)``.
+    """
+    uid, iid, ufq, ifq, uts, its, clk = tabs
+    ev_u, ev_i, u_slots, i_slots, j_slots, init_u, init_i = events
+    n_events = ev_u.shape[0]
+    vmem_bytes = (
+        4 * (user_vecs.size + item_vecs.size + init_u.size + init_i.size)
+        + rated_i8.size
+        + 4 * (uid.size + iid.size + ufq.size + ifq.size + uts.size
+               + its.size)
+    )
+    assert vmem_bytes <= 12 * 2**20, f"state exceeds VMEM budget: {vmem_bytes}"
+
+    kernel = functools.partial(
+        factor_update_kernel, eta=eta, lam=lam, pairwise=pairwise)
+    full = lambda x: pl.BlockSpec(  # noqa: E731 — whole-array residency
+        x.shape, (lambda e: (0,) * x.ndim))
+    ins = [
+        ev_u.astype(jnp.int32), ev_i.astype(jnp.int32),
+        u_slots.astype(jnp.int32), i_slots.astype(jnp.int32),
+        j_slots.astype(jnp.int32), init_u, init_i,
+        user_vecs, item_vecs, rated_i8,
+        uid, iid, ufq, ifq, uts, its, clk,
+    ]
+    outs = [user_vecs, item_vecs, rated_i8, uid, iid, ufq, ifq, uts, its, clk]
+    result = pl.pallas_call(
+        kernel,
+        grid=(n_events,),
+        in_specs=[full(x) for x in ins],
+        out_specs=[full(x) for x in outs],
+        out_shape=[jax.ShapeDtypeStruct(x.shape, x.dtype) for x in outs],
+        interpret=interpret,
+    )(*ins)
+    return result[0], result[1], result[2], tuple(result[3:])

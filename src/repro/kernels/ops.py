@@ -1,8 +1,13 @@
 """Public entry points for the Pallas kernels.
 
-Each op pads to hardware-aligned shapes, dispatches to the Pallas kernel
-(interpret mode off-TPU so CPU validation exercises the same kernel body),
-and falls back to the jnp oracle where a kernel precondition cannot be met.
+Dispatch policy: on TPU every op runs its Pallas kernel (padding to
+hardware-aligned shapes first); off TPU the op returns its jnp oracle
+(``kernels/ref.py``) — compiled XLA, fast on CPU/GPU — rather than the
+interpret-mode kernel, which emulates the grid step-by-step and is two
+orders of magnitude slower than the oracle. Pass ``interpret=True`` to
+force the interpret-mode kernel body anywhere (the parity tests do, so
+the kernel semantics stay validated on every platform), or
+``interpret=False`` to force a real kernel launch.
 """
 
 from __future__ import annotations
@@ -14,12 +19,18 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ref
+from repro.kernels.dics_update import dics_update_pallas
+from repro.kernels.factor_update import factor_update_pallas
 from repro.kernels.isgd import isgd_update_pallas
 from repro.kernels.scoring import masked_scores_pallas
 from repro.kernels.swa_attention import swa_attention_pallas
+from repro.kernels.topn import dics_topn_pallas, fused_topn_pallas
 
-__all__ = ["on_tpu", "masked_scores", "isgd_update", "swa_attention",
+__all__ = ["on_tpu", "masked_scores", "isgd_update", "factor_update",
+           "dics_update", "fused_topn", "dics_topn", "swa_attention",
            "topn_select", "topn_merge"]
+
+_I32_MAX = np.iinfo(np.int32).max
 
 
 def on_tpu() -> bool:
@@ -40,7 +51,9 @@ def masked_scores(u_vecs, item_vecs, mask, *, block_b: int = 128,
                   block_i: int = 512, interpret: bool | None = None):
     """Masked recommendation scoring: f32[B, I], -inf where masked."""
     if interpret is None:
-        interpret = not on_tpu()
+        if not on_tpu():
+            return ref.masked_scores(u_vecs, item_vecs, mask)
+        interpret = False
     b, k = u_vecs.shape
     i = item_vecs.shape[0]
     block_b = min(block_b, max(8, 1 << (b - 1).bit_length()))
@@ -59,7 +72,10 @@ def isgd_update(user_tab, item_tab, u_slots, i_slots, valid, *, eta: float,
                 lam: float, interpret: bool | None = None):
     """Streaming ISGD micro-batch update; returns updated tables."""
     if interpret is None:
-        interpret = not on_tpu()
+        if not on_tpu():
+            return ref.isgd_apply(
+                user_tab, item_tab, u_slots, i_slots, valid, eta=eta, lam=lam)
+        interpret = False
     k = user_tab.shape[1]
     if k % 128 != 0:
         # Lane-pad the factor dim; zero columns are invariant under the
@@ -75,6 +91,141 @@ def isgd_update(user_tab, item_tab, u_slots, i_slots, valid, *, eta: float,
         user_tab, item_tab, u_slots, i_slots, valid, eta=eta, lam=lam,
         interpret=interpret,
     )
+
+
+def _split_tabs(tabs):
+    """Flattened Tables tuple -> (bookkeeping arrays, clock as i32[1])."""
+    uid, iid, ufq, ifq, uts, its, clock = tabs
+    return (uid, iid, ufq, ifq, uts, its), jnp.asarray(clock).reshape(1)
+
+
+def factor_update(user_vecs, item_vecs, rated, tabs, events, *, eta: float,
+                  lam: float, interpret: bool | None = None):
+    """Complete factor-model micro-batch update (vectors + bookkeeping +
+    rated bitmap), plain ISGD or pairwise BPR by the shape of ``events``.
+
+    See ``ref.factor_apply`` for the full contract; this entry point adds
+    the kernel dispatch and TPU shape alignment. Returns
+    ``(user_vecs, item_vecs, rated, tabs)``.
+    """
+    if interpret is None:
+        if not on_tpu():
+            return ref.factor_apply(
+                user_vecs, item_vecs, rated, tabs, events, eta=eta, lam=lam)
+        interpret = False
+    ev_u, ev_i, u_slots, i_slots, j_slots, init_u, init_i = events
+    pairwise = j_slots is not None
+    if not pairwise:
+        j_slots = jnp.zeros_like(i_slots)
+    (uid, iid, ufq, ifq, uts, its), clk = _split_tabs(tabs)
+    k = user_vecs.shape[1]
+    uv = _pad_to(user_vecs, 1, 128)
+    iv = _pad_to(item_vecs, 1, 128)
+    ini_u = _pad_to(init_u, 1, 128)
+    ini_i = _pad_to(init_i, 1, 128)
+    uv, iv, rated_i8, out_tabs = factor_update_pallas(
+        uv, iv, rated.astype(jnp.int8),
+        (uid, iid, ufq, ifq, uts, its, clk),
+        (ev_u, ev_i, u_slots, i_slots, j_slots, ini_u, ini_i),
+        eta=eta, lam=lam, pairwise=pairwise, interpret=interpret,
+    )
+    uid, iid, ufq, ifq, uts, its, clk = out_tabs
+    return (uv[:, :k], iv[:, :k], rated_i8.astype(bool),
+            (uid, iid, ufq, ifq, uts, its, clk.reshape(())))
+
+
+def dics_update(co, item_cnt, rated, tabs, events, *,
+                interpret: bool | None = None):
+    """DICS co-occurrence micro-batch update (Eq. 6 statistics +
+    bookkeeping). See ``ref.dics_apply``; returns
+    ``(co, item_cnt, rated, tabs)``.
+    """
+    if interpret is None:
+        if not on_tpu():
+            return ref.dics_apply(co, item_cnt, rated, tabs, events)
+        interpret = False
+    (uid, iid, ufq, ifq, uts, its), clk = _split_tabs(tabs)
+    co, item_cnt, rated_i8, out_tabs = dics_update_pallas(
+        co, item_cnt, rated.astype(jnp.int8),
+        (uid, iid, ufq, ifq, uts, its, clk),
+        events, interpret=interpret,
+    )
+    uid, iid, ufq, ifq, uts, its, clk = out_tabs
+    return (co, item_cnt, rated_i8.astype(bool),
+            (uid, iid, ufq, ifq, uts, its, clk.reshape(())))
+
+
+def fused_topn(u_vecs, item_vecs, mask, item_ids, *, top_n: int,
+               block_b: int = 128, block_i: int = 512,
+               interpret: bool | None = None):
+    """Fused serve leaf: masked scoring + partial top-N in one pass.
+
+    Exactly equivalent to ``masked_scores`` followed by ``topn_select``
+    over ``item_ids`` broadcast per row — including non-candidate
+    entries surfacing their real ids at -inf (the property test in
+    tests/test_kernel_parity.py pins the equivalence on tied tables).
+
+    Args:
+      u_vecs: f32[B, k]; item_vecs: f32[I, k]; mask: bool[B, I];
+      item_ids: i32[I] global ids aligned with the item table rows.
+
+    Returns (ids i32[B, top_n], scores f32[B, top_n]) in serving order.
+    """
+    if interpret is None:
+        if not on_tpu():
+            scores = ref.masked_scores(u_vecs, item_vecs, mask)
+            ids_b = jnp.broadcast_to(item_ids[None, :], scores.shape)
+            return topn_select(scores, ids_b, top_n)
+        interpret = False
+    b = u_vecs.shape[0]
+    i = item_vecs.shape[0]
+    block_b = min(block_b, max(8, 1 << (b - 1).bit_length()))
+    block_i = min(block_i, max(128, 1 << (i - 1).bit_length()))
+    up = _pad_to(_pad_to(u_vecs, 0, block_b), 1, 128)
+    ip = _pad_to(_pad_to(item_vecs, 0, block_i), 1, 128)
+    mp = _pad_to(_pad_to(mask, 0, block_b, value=False), 1, block_i,
+                 value=False).astype(jnp.int8)
+    # Padding ids sort after every real entry (-inf ties break id-asc).
+    idp = _pad_to(item_ids.reshape(1, -1), 1, block_i, value=_I32_MAX)
+    out_id, out_sc = fused_topn_pallas(
+        up, ip, mp, idp.astype(jnp.int32), top_n=top_n,
+        block_b=block_b, block_i=block_i, interpret=interpret,
+    )
+    return out_id[:b], out_sc[:b]
+
+
+def dics_topn(co, item_cnt, hist, known, item_ids, *, top_n: int,
+              k_nn: int, block_p: int = 128, interpret: bool | None = None):
+    """DICS Eq. 6/7 serve leaf kernel (similarity + neighbor mass +
+    partial top-N in one pass).
+
+    Unlike the other ops this has no oracle shortcut — the jnp path
+    lives in ``core/dics.dics_partial_topn``, which is also the dispatch
+    site; ``interpret=None`` runs the interpret-mode kernel off TPU so
+    the body stays exercisable everywhere.
+
+    Args:
+      co: f32[I, I]; item_cnt: f32[I]; hist: bool[B, I] known-masked
+      rated rows; known: bool[B]; item_ids: i32[I].
+
+    Returns (ids i32[B, top_n], scores f32[B, top_n]) in serving order.
+    """
+    if interpret is None:
+        interpret = not on_tpu()
+    i = co.shape[0]
+    block_p = min(block_p, max(128, 1 << (i - 1).bit_length()))
+    cop = _pad_to(_pad_to(co, 0, block_p), 1, block_p)
+    cntp = _pad_to(item_cnt.reshape(1, -1), 1, block_p)
+    histp = _pad_to(hist.astype(jnp.int8), 1, block_p)
+    # Padded candidates carry cnt 0 -> zero neighbor mass -> excluded by
+    # the score > 0 rule; id INT32_MAX keeps them after every real entry.
+    idp = _pad_to(item_ids.reshape(1, -1), 1, block_p, value=_I32_MAX)
+    out_id, out_sc = dics_topn_pallas(
+        cop, cntp, histp, known.astype(jnp.int32).reshape(-1, 1),
+        idp.astype(jnp.int32), top_n=top_n, k_nn=k_nn, block_p=block_p,
+        interpret=interpret,
+    )
+    return out_id, out_sc
 
 
 def topn_select(scores, ids, top_n: int):
@@ -110,8 +261,8 @@ def topn_merge(ids, scores, top_n: int):
     so the same id never appears in two partials and a flat re-selection
     over the P*N candidates is an exact merge. The P*N candidate set is
     tiny (n_i * top_n), so this is a jnp sort rather than a kernel; the
-    FLOP-heavy part of serving is the masked scoring matmul
-    (``masked_scores``), which already has a Pallas path.
+    FLOP-heavy part of serving is the fused scoring+selection leaf
+    (``fused_topn``), which has the Pallas path.
     """
     flat_ids = ids.reshape(ids.shape[:-2] + (-1,))
     flat_scores = scores.reshape(scores.shape[:-2] + (-1,))
@@ -123,7 +274,9 @@ def swa_attention(q, k, v, *, window: int | None = None, causal: bool = True,
                   interpret: bool | None = None):
     """Flash sliding-window attention. q:[B,Hq,S,D], k/v:[B,Hkv,S,D]."""
     if interpret is None:
-        interpret = not on_tpu()
+        if not on_tpu():
+            return ref.swa_attention(q, k, v, window=window, causal=causal)
+        interpret = False
     s = q.shape[2]
     if s < block_q or s % block_q or s % block_k:
         # Small/ragged sequences: oracle is cheaper than a padded kernel.

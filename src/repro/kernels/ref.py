@@ -9,7 +9,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["masked_scores", "isgd_apply", "swa_attention"]
+__all__ = ["masked_scores", "isgd_apply", "factor_apply", "dics_apply",
+           "swa_attention"]
 
 
 def masked_scores(u_vecs, item_vecs, mask):
@@ -53,6 +54,154 @@ def isgd_apply(user_tab, item_tab, u_slots, i_slots, valid, *, eta, lam):
         body, (user_tab, item_tab), (u_slots, i_slots, valid)
     )
     return user_tab, item_tab
+
+
+def factor_apply(user_vecs, item_vecs, rated, tabs, events, *, eta, lam):
+    """Sequential factor-model micro-batch oracle: the COMPLETE worker
+    state transition (vectors, id/freq/ts tables, rated bitmap, collision
+    eviction), not just the factor update of :func:`isgd_apply`.
+
+    Covers both training rules of the factor family: plain incremental
+    SGD (DISGD, ``err = 1 - u.i``) when ``events`` carries no negative
+    slots, and pairwise BPR (sampled-negative, ``ln sigmoid(x_ui -
+    x_uj)``) when it does. Semantics replicate the reference scan
+    workers (``core/disgd.disgd_worker_step`` / ``algos/bpr.
+    bpr_worker_step``) update-for-update, so a fast-path worker built on
+    this op leaves states exactly where the reference leaves them —
+    including slot-collision eviction order and the skipped-negative
+    rule.
+
+    Args:
+      user_vecs / item_vecs / rated: f32[U, k] / f32[I, k] / bool[U, I].
+      tabs: ``(user_ids, item_ids, user_freq, item_freq, user_ts,
+        item_ts, clock)`` — the ``Tables`` fields, flattened so the
+        kernel layer stays free of ``repro.core`` imports.
+      events: ``(ev_u, ev_i, u_slots, i_slots, j_slots, init_u,
+        init_i)``; ``j_slots`` is ``None`` for plain ISGD, or i32[E]
+        pre-sampled negative slots (the fold_in replay contract) for
+        BPR. ``init_*`` are the f32[E, k] replica-consistent init
+        vectors for ids unseen at their event.
+
+    Returns:
+      ``(user_vecs, item_vecs, rated, tabs)`` after the micro-batch.
+    """
+    ev_u, ev_i, u_slots, i_slots, j_slots, init_u, init_i = events
+    pairwise = j_slots is not None
+    if not pairwise:
+        j_slots = jnp.zeros_like(i_slots)
+    u_cap = user_vecs.shape[0]
+    i_cap = item_vecs.shape[0]
+
+    def body(carry, ev):
+        uv, iv, rated, uid, iid, ufq, ifq, uts, its, clock = carry
+        u_id, i_id, us, is_, js, ini_u, ini_i = ev
+        valid = u_id >= 0
+        new_u = uid[us] != u_id
+        new_i = iid[is_] != i_id
+        u_vec = jnp.where(new_u, ini_u, uv[us])
+        i_vec = jnp.where(new_i, ini_i, iv[is_])
+        if pairwise:
+            rated_row = jnp.where(new_u, False, rated[us])
+            rated_row = rated_row.at[is_].set(
+                jnp.where(new_i, False, rated_row[is_]))
+            neg_id = iid[js]
+            neg_ok = ((neg_id >= 0) & (neg_id != i_id) & (js != is_)
+                      & ~rated_row[js])
+            upd = valid & neg_ok
+            j_vec = iv[js]
+            x = jnp.dot(u_vec, i_vec) - jnp.dot(u_vec, j_vec)
+            s = jax.nn.sigmoid(-x)
+            u_new = jnp.where(
+                upd, u_vec + eta * (s * (i_vec - j_vec) - lam * u_vec),
+                u_vec)
+            i_new = jnp.where(
+                upd, i_vec + eta * (s * u_vec - lam * i_vec), i_vec)
+            j_new = j_vec + eta * (-s * u_vec - lam * j_vec)
+        else:
+            err = 1.0 - jnp.dot(u_vec, i_vec)
+            u_new = u_vec + eta * (err * i_vec - lam * u_vec)
+            i_new = i_vec + eta * (err * u_vec - lam * i_vec)
+
+        w = valid
+        wu = jnp.where(w, us, u_cap)
+        wi = jnp.where(w, is_, i_cap)
+        clock = clock + w.astype(clock.dtype)
+        ufq = ufq.at[wu].set(jnp.where(new_u, 1, ufq[us] + 1), mode="drop")
+        ifq = ifq.at[wi].set(jnp.where(new_i, 1, ifq[is_] + 1), mode="drop")
+        uid = uid.at[wu].set(u_id, mode="drop")
+        iid = iid.at[wi].set(i_id, mode="drop")
+        uts = uts.at[wu].set(clock, mode="drop")
+        its = its.at[wi].set(clock, mode="drop")
+        rated = rated.at[:, jnp.where(w & new_i, is_, i_cap)].set(
+            jnp.zeros_like(rated[:, 0]), mode="drop")
+        row = jnp.where(w & new_u, False, rated[us])
+        row = row.at[jnp.where(w, is_, i_cap)].set(True, mode="drop")
+        rated = rated.at[wu].set(row, mode="drop")
+        uv = uv.at[wu].set(u_new, mode="drop")
+        iv = iv.at[wi].set(i_new, mode="drop")
+        if pairwise:
+            iv = iv.at[jnp.where(upd, js, i_cap)].set(j_new, mode="drop")
+        return (uv, iv, rated, uid, iid, ufq, ifq, uts, its, clock), None
+
+    carry0 = (user_vecs, item_vecs, rated) + tuple(tabs)
+    carry, _ = jax.lax.scan(
+        body, carry0, (ev_u, ev_i, u_slots, i_slots, j_slots, init_u, init_i)
+    )
+    return carry[0], carry[1], carry[2], carry[3:]
+
+
+def dics_apply(co, item_cnt, rated, tabs, events):
+    """Sequential DICS (Eq. 6 statistics) micro-batch oracle.
+
+    Replicates ``core/dics.dics_worker_step``'s update path exactly:
+    collision-eviction clears are applied from the raw slot comparison
+    (NOT gated on event validity — the reference's ``lax.cond`` runs for
+    padding events too), then the guarded write adds the user's rating
+    history into the evicted-or-live ``co`` row and column (including
+    the reference's double-count of the diagonal element), bumps
+    ``item_cnt``, marks ``rated[u, i]`` and updates the bookkeeping
+    tables.
+
+    Args / returns mirror :func:`factor_apply` with
+    ``events = (ev_u, ev_i, u_slots, i_slots)`` and the DICS statistics
+    in place of the factor matrices.
+    """
+    ev_u, ev_i, u_slots, i_slots = events
+    u_cap = rated.shape[0]
+    i_cap = rated.shape[1]
+
+    def body(carry, ev):
+        co, cnt, rated, uid, iid, ufq, ifq, uts, its, clock = carry
+        u_id, i_id, us, is_ = ev
+        valid = u_id >= 0
+        new_u = uid[us] != u_id
+        new_i = iid[is_] != i_id
+        rated = rated.at[us].set(jnp.where(new_u, False, rated[us]))
+        rated = rated.at[:, is_].set(jnp.where(new_i, False, rated[:, is_]))
+        co = co.at[is_, :].set(jnp.where(new_i, 0.0, co[is_, :]))
+        co = co.at[:, is_].set(jnp.where(new_i, 0.0, co[:, is_]))
+        cnt = cnt.at[is_].set(jnp.where(new_i, 0.0, cnt[is_]))
+
+        w = valid
+        wu = jnp.where(w, us, u_cap)
+        wi = jnp.where(w, is_, i_cap)
+        hist = rated[us].astype(co.dtype)
+        co = co.at[wi, :].add(hist, mode="drop")
+        co = co.at[:, wi].add(hist, mode="drop")
+        cnt = cnt.at[wi].add(1.0, mode="drop")
+        clock = clock + w.astype(clock.dtype)
+        ufq = ufq.at[wu].set(jnp.where(new_u, 1, ufq[us] + 1), mode="drop")
+        ifq = ifq.at[wi].set(jnp.where(new_i, 1, ifq[is_] + 1), mode="drop")
+        uid = uid.at[wu].set(u_id, mode="drop")
+        iid = iid.at[wi].set(i_id, mode="drop")
+        uts = uts.at[wu].set(clock, mode="drop")
+        its = its.at[wi].set(clock, mode="drop")
+        rated = rated.at[wu, jnp.where(w, is_, i_cap)].set(True, mode="drop")
+        return (co, cnt, rated, uid, iid, ufq, ifq, uts, its, clock), None
+
+    carry0 = (co, item_cnt, rated) + tuple(tabs)
+    carry, _ = jax.lax.scan(body, carry0, (ev_u, ev_i, u_slots, i_slots))
+    return carry[0], carry[1], carry[2], carry[3:]
 
 
 def swa_attention(q, k, v, *, window: int | None, causal: bool = True):

@@ -22,9 +22,7 @@ wants dense batches. This front-end sits between them:
 
 The front-end is synchronous and single-threaded by design: one
 ``serve`` call = one consistent snapshot. Staleness is enforced at
-acquire time via ``ServeConfig.publish.max_staleness_events``
-(the old ``ServeConfig(max_staleness_events=)`` kwarg still works for
-one release with a ``DeprecationWarning``).
+acquire time via ``ServeConfig.publish.max_staleness_events``.
 """
 
 from __future__ import annotations
@@ -44,8 +42,6 @@ from repro.serve.policy import PublishPolicy
 from repro.serve.snapshot import SnapshotStore
 
 __all__ = ["ServeConfig", "ServeResponse", "QueryFrontend"]
-
-_UNSET = object()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,28 +86,6 @@ class ServeConfig:
         )
         fields.update(overrides)
         return cls(**fields)
-
-
-# DEPRECATED (one release): ``ServeConfig(max_staleness_events=...)``.
-# A wrapper rather than a field so ``dataclasses.replace`` on existing
-# configs never re-triggers the shim or clobbers the policy.
-_serveconfig_init = ServeConfig.__init__
-
-
-def _shimmed_init(self, *args, max_staleness_events=_UNSET, **kwargs):
-    if max_staleness_events is not _UNSET:
-        warnings.warn(
-            "ServeConfig(max_staleness_events=...) is deprecated; use "
-            "ServeConfig(publish=PublishPolicy(max_staleness_events=...)) — "
-            "the old kwarg will be removed next release",
-            DeprecationWarning, stacklevel=2)
-        publish = kwargs.get("publish", PublishPolicy())
-        kwargs["publish"] = dataclasses.replace(
-            publish, max_staleness_events=max_staleness_events)
-    _serveconfig_init(self, *args, **kwargs)
-
-
-ServeConfig.__init__ = _shimmed_init
 
 
 @dataclasses.dataclass

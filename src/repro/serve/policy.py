@@ -25,9 +25,10 @@ critical path). This dataclass consolidates them:
 Owned by :class:`~repro.session.StreamSession` (training side) and
 :class:`~repro.serve.frontend.ServeConfig` (serving side); the session
 hands its policy to the front-end it builds, so one object governs both
-halves. The old kwargs (``ingest(publish_every=, on_publish=)``,
-``ServeConfig(max_staleness_events=)``) still work for one release with
-a ``DeprecationWarning``.
+halves. The pre-policy kwargs (``ingest(publish_every=, on_publish=)``,
+``ServeConfig(max_staleness_events=)``) are gone — their one-release
+deprecation window has elapsed; the removal is pinned by TypeError
+tests in tests/test_api_surface.py.
 """
 
 from __future__ import annotations

@@ -25,15 +25,12 @@ identically to the paper's pair.
 
 Publishing is governed by one :class:`~repro.serve.policy.PublishPolicy`
 owned by the session: cadence (``every`` micro-batches), sync vs async
-rotation, and the read-side staleness bound. The pre-policy kwargs
-(``ingest(publish_every=, on_publish=)``) still work for one release
-with a ``DeprecationWarning``.
+rotation, and the read-side staleness bound.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Any
 
 import numpy as np
@@ -51,8 +48,6 @@ from repro.serve import (PublishPolicy, QueryFrontend, ServeConfig,
                          ServeResponse, SnapshotStore)
 
 __all__ = ["StreamSession", "RestoredCheckpoint"]
-
-_UNSET = object()
 
 
 class StreamSession:
@@ -121,8 +116,7 @@ class StreamSession:
 
     # -- train ------------------------------------------------------------
 
-    def ingest(self, users, items, *, publish_every=_UNSET,
-               on_publish=_UNSET, verbose: bool = False) -> StreamResult:
+    def ingest(self, users, items, *, verbose: bool = False) -> StreamResult:
         """Stream a batch of ``<user, item>`` events through the engine.
 
         Incremental and resumable: each call continues from the states,
@@ -136,27 +130,11 @@ class StreamSession:
         The final state is always published (synchronously — the stream
         has ended, and ``recommend`` right after ``ingest`` must see
         it). Returns the segment's ``StreamResult``.
-
-        ``publish_every=`` / ``on_publish=`` are deprecated (one
-        release): construct the session with
-        ``publish=PublishPolicy(every=...)`` instead.
         """
         policy = self.publish_policy
-        legacy_hook = None
-        if publish_every is not _UNSET or on_publish is not _UNSET:
-            warnings.warn(
-                "StreamSession.ingest(publish_every=, on_publish=) is "
-                "deprecated; pass publish=PublishPolicy(every=...) to "
-                "StreamSession(...) instead — the kwargs will be removed "
-                "next release", DeprecationWarning, stacklevel=2)
-            if publish_every is not _UNSET:
-                policy = dataclasses.replace(
-                    policy, every=int(publish_every or 0))
-            if on_publish is not _UNSET and on_publish is not None:
-                legacy_hook = on_publish
 
         hook = None
-        if policy.every > 0 or legacy_hook is not None:
+        if policy.every > 0:
             base = self.events_processed
             base_forgets = self.forgets
             publish = (self.store.publish_async if policy.is_async
@@ -165,8 +143,6 @@ class StreamSession:
             def hook(ev):
                 publish(ev.states, base + ev.events_processed,
                         base_forgets + ev.forgets, telemetry=ev.telemetry)
-                if legacy_hook is not None:
-                    legacy_hook(ev)
 
         # The telemetry vector restarts from zero each run_stream call;
         # the previous segment's folds are complete (ingest ends with a

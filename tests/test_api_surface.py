@@ -167,16 +167,53 @@ def test_bpr_scan_matches_host_bit_for_bit():
     assert host.recall.mean() > 0.1
 
 
-def test_bpr_pallas_negotiates_down_to_scan_with_a_warning():
-    """ISSUE 5 satellite: no mid-run ValueError — the supports_pallas
-    capability negotiates backend='pallas' down to scan, same results."""
-    users, items = _stream(n=600)
-    cfg = _cfg("bpr", backend="scan")
-    with pytest.warns(RuntimeWarning, match="no Pallas fast path"):
-        pal = run_stream(users, items,
-                         dataclasses.replace(cfg, backend="pallas"))
-    scan = run_stream(users, items, cfg)
-    np.testing.assert_array_equal(_clean_bits(pal), _clean_bits(scan))
+def test_pallas_negotiates_down_to_scan_with_a_warning():
+    """ISSUE 5 satellite (repointed in ISSUE 8): no mid-run ValueError —
+    the supports_pallas capability negotiates backend='pallas' down to
+    scan, same results. Every in-tree algorithm now ships a fast path,
+    so the negotiation is pinned with a deliberately non-pallas stub
+    that wraps the DISGD reference worker under a new registry name."""
+    from repro.core import algorithm as algorithm_lib
+    from repro.core import disgd as disgd_lib
+    from repro.core import state as state_lib
+
+    class _ScanOnly(algorithm_lib.Algorithm):
+        name = "_scanonly"
+        supports_pallas = False
+        supports_serve_kernel = True
+
+        def default_hyper(self):
+            return repro.DisgdHyper()
+
+        def init_state(self, hyper):
+            return state_lib.init_disgd_state(
+                hyper.u_cap, hyper.i_cap, hyper.k)
+
+        def make_worker_step(self, hyper, key):
+            def step(state, events):
+                return disgd_lib.disgd_worker_step(state, events, hyper, key)
+
+            return step
+
+        def make_serve_leaf(self, *, top_n, g, u_cap, k_nn, use_kernel):
+            def leaf(state, user_ids):
+                return serve_lib.partial_topn(
+                    state, user_ids, top_n=top_n, g=g, u_cap=u_cap,
+                    use_kernel=use_kernel)
+
+            return leaf
+
+    algorithm_lib.register(_ScanOnly())
+    try:
+        users, items = _stream(n=600)
+        cfg = _cfg("_scanonly", backend="scan")
+        with pytest.warns(RuntimeWarning, match="no Pallas fast path"):
+            pal = run_stream(users, items,
+                             dataclasses.replace(cfg, backend="pallas"))
+        scan = run_stream(users, items, cfg)
+        np.testing.assert_array_equal(_clean_bits(pal), _clean_bits(scan))
+    finally:
+        algorithm_lib._REGISTRY.pop("_scanonly", None)
 
 
 def test_bpr_grid_merge_equals_single_worker_at_ni1():
@@ -315,27 +352,31 @@ def test_publish_policy_is_pinned():
         repro.PublishPolicy(every=-1)
 
 
-def test_serveconfig_owns_the_policy_and_old_kwarg_warns():
+def test_serveconfig_owns_the_policy_and_old_kwarg_is_removed():
+    """The PR-6 ``ServeConfig(max_staleness_events=)`` shim is gone
+    (one-release deprecation window elapsed): the policy owns the knob,
+    the read-only mirror stays, and the old ctor kwarg is a TypeError."""
     fresh = repro.ServeConfig(publish=repro.PublishPolicy(
         max_staleness_events=64))
     assert fresh.max_staleness_events == 64     # mirror stays readable
-    with pytest.warns(DeprecationWarning, match="max_staleness_events"):
-        old = repro.ServeConfig(max_staleness_events=64)
-    assert old.publish.max_staleness_events == 64
+    with pytest.raises(TypeError):
+        repro.ServeConfig(max_staleness_events=64)
 
 
-def test_session_ingest_legacy_publish_kwargs_warn_but_work():
+def test_session_ingest_legacy_publish_kwargs_are_removed():
+    """The PR-6 ``ingest(publish_every=, on_publish=)`` shims are gone:
+    both kwargs are TypeErrors, and publishing routes exclusively
+    through the session's PublishPolicy."""
     users, items = _stream(n=512)
-    cfg = _cfg("disgd", backend="scan")
-    seen = []
-    s = repro.StreamSession(cfg)
-    with pytest.warns(DeprecationWarning, match="PublishPolicy"):
-        s.ingest(users, items, publish_every=1,
-                 on_publish=lambda ev: seen.append(ev.steps_done))
-    assert seen                                  # the hook still fires
-    # Publishes route through the session's (async by default) policy:
-    # versions may coalesce, but after a flush the store has converged
-    # to the stream position.
+    s = repro.StreamSession(_cfg("disgd", backend="scan"))
+    with pytest.raises(TypeError):
+        s.ingest(users, items, publish_every=1)
+    with pytest.raises(TypeError):
+        s.ingest(users, items, on_publish=lambda ev: None)
+    # Policy-routed publishing still works end to end.
+    s = repro.StreamSession(_cfg("disgd", backend="scan"),
+                            publish=repro.PublishPolicy(every=1))
+    s.ingest(users, items)
     assert s.store.flush(timeout=10.0)
     assert s.store.latest_version >= 1
     assert s.store.acquire().events_processed == s.events_processed

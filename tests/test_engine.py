@@ -221,10 +221,41 @@ def test_pallas_backend_end_to_end():
     assert 0.0 <= res.recall.mean() <= 1.0
 
 
-def test_pallas_backend_rejects_dics():
-    with pytest.raises(ValueError):
-        engine.make_pallas_worker_fn(
-            StreamConfig(algorithm="dics", grid=GridSpec(1)))
+def test_pallas_backend_rejects_non_pallas_algorithm():
+    """A direct fast-path request for an algorithm without one raises.
+
+    All in-tree algorithms now ship a fast path, so the guard is pinned
+    with a deliberately non-pallas stub registered just for this test.
+    """
+    from repro.core import algorithm as algorithm_lib
+
+    class _ScanOnly(algorithm_lib.Algorithm):
+        name = "_scanonly_engine"
+        supports_pallas = False
+
+        def default_hyper(self):
+            return DisgdHyper(u_cap=16, i_cap=8)
+
+        def init_state(self, hyper):
+            from repro.core import state as state_lib
+            return state_lib.init_disgd_state(
+                hyper.u_cap, hyper.i_cap, hyper.k)
+
+        def make_worker_step(self, hyper, key):
+            from repro.core import disgd as disgd_lib
+
+            def step(state, events):
+                return disgd_lib.disgd_worker_step(state, events, hyper, key)
+
+            return step
+
+    algorithm_lib.register(_ScanOnly())
+    try:
+        with pytest.raises(ValueError):
+            engine.make_pallas_worker_fn(
+                StreamConfig(algorithm="_scanonly_engine", grid=GridSpec(1)))
+    finally:
+        algorithm_lib._REGISTRY.pop("_scanonly_engine", None)
 
 
 # ---------------------------------------------------------------------------

@@ -1,4 +1,10 @@
-"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode).
+
+Off TPU the ops dispatch to the oracle by default (see kernels/ops.py),
+so every call here forces ``interpret=True`` — the point is to validate
+the KERNEL BODY against the oracle on any platform. The fused update /
+serve-leaf kernels have their own parity suite in test_kernel_parity.py.
+"""
 
 import jax
 import jax.numpy as jnp
@@ -17,7 +23,7 @@ def test_masked_scores_sweep(b, i, k, dtype):
     u = jnp.asarray(RNG.normal(size=(b, k)), dtype)
     it = jnp.asarray(RNG.normal(size=(i, k)), dtype)
     mask = jnp.asarray(RNG.random((b, i)) > 0.3)
-    got = ops.masked_scores(u, it, mask)
+    got = ops.masked_scores(u, it, mask, interpret=True)
     want = ref.masked_scores(u, it, mask)
     tol = 1e-5 if dtype == jnp.float32 else 2e-2
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
@@ -32,7 +38,8 @@ def test_isgd_update_sweep(u_cap, i_cap, k, e):
     us = jnp.asarray(RNG.integers(0, u_cap, e), jnp.int32)
     isl = jnp.asarray(RNG.integers(0, i_cap, e), jnp.int32)
     val = jnp.asarray(RNG.random(e) > 0.15)
-    got_u, got_i = ops.isgd_update(ut, it, us, isl, val, eta=0.05, lam=0.01)
+    got_u, got_i = ops.isgd_update(ut, it, us, isl, val, eta=0.05,
+                                  lam=0.01, interpret=True)
     want_u, want_i = ref.isgd_apply(ut, it, us, isl, val, eta=0.05, lam=0.01)
     np.testing.assert_allclose(np.asarray(got_u), np.asarray(want_u),
                                rtol=1e-5, atol=1e-6)
@@ -48,7 +55,8 @@ def test_isgd_sequential_dependency():
     us = jnp.zeros((8,), jnp.int32)
     isl = jnp.zeros((8,), jnp.int32)
     val = jnp.ones((8,), bool)
-    got_u, got_i = ops.isgd_update(ut, it, us, isl, val, eta=0.1, lam=0.0)
+    got_u, got_i = ops.isgd_update(ut, it, us, isl, val, eta=0.1,
+                                  lam=0.0, interpret=True)
     want_u, want_i = ref.isgd_apply(ut, it, us, isl, val, eta=0.1, lam=0.0)
     np.testing.assert_allclose(np.asarray(got_u), np.asarray(want_u),
                                rtol=1e-5)
@@ -63,7 +71,8 @@ def test_swa_attention_sweep(hq, hkv, window):
     q = jnp.asarray(RNG.normal(size=(b, hq, s, d)), jnp.float32)
     k = jnp.asarray(RNG.normal(size=(b, hkv, s, d)), jnp.float32)
     v = jnp.asarray(RNG.normal(size=(b, hkv, s, d)), jnp.float32)
-    got = ops.swa_attention(q, k, v, window=window, block_q=64, block_k=64)
+    got = ops.swa_attention(q, k, v, window=window, block_q=64,
+                            block_k=64, interpret=True)
     want = ref.swa_attention(q, k, v, window=window)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-4, atol=2e-5)
@@ -75,7 +84,8 @@ def test_swa_attention_dtype(dtype):
     q = jnp.asarray(RNG.normal(size=(b, hq, s, d)), dtype)
     k = jnp.asarray(RNG.normal(size=(b, hkv, s, d)), dtype)
     v = jnp.asarray(RNG.normal(size=(b, hkv, s, d)), dtype)
-    got = ops.swa_attention(q, k, v, window=64, block_q=64, block_k=64)
+    got = ops.swa_attention(q, k, v, window=64, block_q=64, block_k=64,
+                            interpret=True)
     want = ref.swa_attention(q, k, v, window=64)
     tol = 1e-4 if dtype == jnp.float32 else 3e-2
     np.testing.assert_allclose(
