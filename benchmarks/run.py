@@ -20,12 +20,14 @@ SUITES = ("kernels", "recall", "memory", "forgetting", "throughput", "skew",
 def smoke(out_path: str = "BENCH_smoke.json", events: int = 4096) -> int:
     """Tiny host-vs-engine throughput check emitted as a JSON artifact so
     CI runs leave a perf trajectory behind. Also appends the kernel-level
-    ``kernels/`` rows (fused ops + tuned-tile engine configs) and returns
-    their regression-gate status — the kernel floors are enforced
-    separately from these end-to-end rows."""
+    ``kernels/`` rows (fused ops + tuned-tile engine configs) and the
+    ``memory/`` capacity rows (``bench_memory.smoke``); the combined
+    return carries every gate — kernel floors and the compressed-policy
+    capacity/recall floor — enforced separately from these end-to-end
+    rows."""
     import jax
 
-    from benchmarks import bench_kernels, bench_throughput
+    from benchmarks import bench_kernels, bench_memory, bench_throughput
     from benchmarks.common import SMOKE_SCHEMA_VERSION
 
     t0 = time.perf_counter()
@@ -52,7 +54,8 @@ def smoke(out_path: str = "BENCH_smoke.json", events: int = 4096) -> int:
               f"events/s={row['events_per_sec']:,.0f}")
     print(f"# wrote {out_path} in {payload['total_seconds']:.1f}s",
           file=sys.stderr)
-    return bench_kernels.smoke(out_path)
+    status = bench_kernels.smoke(out_path)
+    return bench_memory.smoke(out_path, events=events) or status
 
 
 def main() -> None:

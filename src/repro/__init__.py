@@ -14,7 +14,12 @@ This is the supported import surface (pinned by
     worked example).
   * **Configuration** — :class:`StreamConfig` (``algorithm`` is a
     registry key), :class:`GridSpec`, :class:`ForgettingConfig`,
-    :class:`DriftPolicy`, and the built-in hyper tuples.
+    :class:`StoragePolicy` (per-table resident encodings; the
+    ``compressed()`` preset is recall-lossless), :class:`DriftPolicy`,
+    and the built-in hyper tuples.
+  * **Elasticity** — :class:`Autoscaler` + :class:`AutoscalePolicy`:
+    drive ``StreamSession.rescale`` from the session's own overflow /
+    occupancy / staleness telemetry.
   * **Streaming / serving primitives** — for power users composing the
     layers directly.
   * **Observability** — :class:`MetricsRegistry`: one registry of typed,
@@ -37,11 +42,12 @@ from repro.core.pipeline import (RestoredCheckpoint, StreamConfig,
                                  StreamResult, restore_stream_checkpoint,
                                  run_stream, save_stream_checkpoint)
 from repro.core.routing import GridSpec
+from repro.core.storage import StoragePolicy, StoragePolicyError
 from repro.drift import DriftPolicy
 from repro.obs import MetricsRegistry
-from repro.serve import (PublishPolicy, QueryFrontend, ServeConfig,
-                         ServeResponse, SnapshotStore, StaleSnapshotError,
-                         grid_topn)
+from repro.serve import (AutoscalePolicy, Autoscaler, PublishPolicy,
+                         QueryFrontend, ServeConfig, ServeResponse,
+                         SnapshotStore, StaleSnapshotError, grid_topn)
 from repro.session import StreamSession
 
 # Importing the in-tree plugin package registers its algorithms, so the
@@ -58,6 +64,8 @@ __all__ = [
     "StreamConfig",
     "GridSpec",
     "ForgettingConfig",
+    "StoragePolicy",
+    "StoragePolicyError",
     "DriftPolicy",
     "DisgdHyper",
     "DicsHyper",
@@ -78,6 +86,9 @@ __all__ = [
     "SnapshotStore",
     "StaleSnapshotError",
     "grid_topn",
+    # elasticity
+    "Autoscaler",
+    "AutoscalePolicy",
     # observability
     "MetricsRegistry",
 ]

@@ -272,12 +272,14 @@ class BprAlgorithm(Algorithm):
     def make_pallas_worker_step(self, hyper, key):
         return make_pallas_worker(hyper, key)
 
-    def make_serve_leaf(self, *, top_n, g, u_cap, k_nn, use_kernel):
+    def make_serve_leaf(self, *, top_n, g, u_cap, k_nn, use_kernel,
+                        storage=None):
         del k_nn  # neighborhood size is a DICS knob
 
         def leaf(state, user_ids):
             return partial_topn(state, user_ids, top_n=top_n, g=g,
-                                u_cap=u_cap, use_kernel=use_kernel)
+                                u_cap=u_cap, use_kernel=use_kernel,
+                                storage=storage)
 
         return leaf
 

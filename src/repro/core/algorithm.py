@@ -115,31 +115,36 @@ class Algorithm:
     # -- serving ----------------------------------------------------------
 
     def make_serve_leaf(self, *, top_n: int, g: int, u_cap: int,
-                        k_nn: int, use_kernel: bool) -> Callable:
+                        k_nn: int, use_kernel: bool,
+                        storage=None) -> Callable:
         """``leaf(state, user_ids) -> (item_ids, scores, known)``.
 
         One worker's partial top-N over its local item split, as global
         item ids — the unit ``serve.plane.grid_topn`` merges across the
         ``n_i`` split axis. Receives every static serving knob; each
-        algorithm reads the ones it understands.
+        algorithm reads the ones it understands. ``storage`` is the
+        :class:`~repro.core.storage.StoragePolicy` the states are
+        resident under — serve leaves decode lazily (gathered rows
+        only), never the whole table.
         """
         raise NotImplementedError
 
     # -- elasticity / checkpoint schema -----------------------------------
 
-    def extract_logical(self, states, grid):
+    def extract_logical(self, states, grid, storage=None):
         """Stacked ``[n_c, ...]`` states -> grid-portable ``LogicalState``."""
         from repro.core import regrid as regrid_lib
 
-        return regrid_lib.extract_logical(states, grid)
+        return regrid_lib.extract_logical(states, grid, storage=storage)
 
     def build_states(self, logical, *, src, dst, u_cap: int, i_cap: int,
-                     merge: str = "fresh"):
+                     merge: str = "fresh", storage=None):
         """``LogicalState`` -> stacked states for the target grid."""
         from repro.core import regrid as regrid_lib
 
         return regrid_lib.build_states(logical, src=src, dst=dst,
-                                       u_cap=u_cap, i_cap=i_cap, merge=merge)
+                                       u_cap=u_cap, i_cap=i_cap, merge=merge,
+                                       storage=storage)
 
     def state_template(self, hyper):
         """Single-worker checkpoint schema (ShapeDtypeStruct pytree)."""
@@ -256,13 +261,14 @@ class DisgdAlgorithm(Algorithm):
     def make_pallas_worker_step(self, hyper, key):
         return disgd_lib.make_pallas_worker(hyper, key)
 
-    def make_serve_leaf(self, *, top_n, g, u_cap, k_nn, use_kernel):
+    def make_serve_leaf(self, *, top_n, g, u_cap, k_nn, use_kernel,
+                        storage=None):
         del k_nn  # neighborhood size is a DICS knob
 
         def leaf(state, user_ids):
             return serve_lib.partial_topn(
                 state, user_ids, top_n=top_n, g=g, u_cap=u_cap,
-                use_kernel=use_kernel)
+                use_kernel=use_kernel, storage=storage)
 
         return leaf
 
@@ -292,11 +298,12 @@ class DicsAlgorithm(Algorithm):
         del key  # DICS state init is deterministic (counts)
         return dics_lib.make_pallas_worker(hyper)
 
-    def make_serve_leaf(self, *, top_n, g, u_cap, k_nn, use_kernel):
+    def make_serve_leaf(self, *, top_n, g, u_cap, k_nn, use_kernel,
+                        storage=None):
         def leaf(state, user_ids):
             return dics_lib.dics_partial_topn(
                 state, user_ids, top_n=top_n, k_nn=k_nn, g=g, u_cap=u_cap,
-                use_kernel=use_kernel)
+                use_kernel=use_kernel, storage=storage)
 
         return leaf
 

@@ -73,7 +73,7 @@ def dics_scores(co, item_cnt, rated_row, item_ids, k_nn: int, *, sim=None):
 
 def dics_partial_topn(state: DicsState, user_ids, *, top_n: int = 10,
                       k_nn: int = 10, g: int = 1, u_cap: int = 1024,
-                      use_kernel: bool = True):
+                      use_kernel: bool = True, storage=None):
     """One worker's partial top-N (DICS): the Eq. 6/7 serving leaf.
 
     Read-only scoring of this worker's local item split (``co`` /
@@ -98,18 +98,29 @@ def dics_partial_topn(state: DicsState, user_ids, *, top_n: int = 10,
     t = state.tables
     slots = state_lib.slot_of(user_ids, g, u_cap)
     known = t.user_ids[slots] == user_ids
-    rated = state.rated[slots] & known[:, None]           # [B, I_cap]
+    if storage is None:
+        co = state.co
+        rated_rows = state.rated[slots]
+    else:
+        # Storage-policy decode: quantized co inflates to f32 once per
+        # call; packed rated unpacks only the gathered query rows.
+        from repro.core import storage as storage_lib
+
+        co = storage_lib.decode_co(state.co, state.co_scale, storage)
+        rated_rows = storage_lib.gather_rated(
+            state.rated, slots, storage, t.item_ids.shape[-1])
+    rated = rated_rows & known[:, None]                   # [B, I_cap]
 
     if use_kernel and ops.on_tpu():
         top_ids, top_scores = ops.dics_topn(
-            state.co, state.item_cnt, rated, known, t.item_ids,
+            co, state.item_cnt, rated, known, t.item_ids,
             top_n=top_n, k_nn=k_nn)
         return top_ids, top_scores, known
 
-    sim = similarity_matrix(state.co, state.item_cnt)     # [I_cap, I_cap]
+    sim = similarity_matrix(co, state.item_cnt)           # [I_cap, I_cap]
 
     def one(rated_row, is_known):
-        scores = dics_scores(state.co, state.item_cnt, rated_row,
+        scores = dics_scores(co, state.item_cnt, rated_row,
                              t.item_ids, k_nn, sim=sim)
         cand = is_known & (scores > 0)
         return jnp.where(cand, scores, -jnp.inf)

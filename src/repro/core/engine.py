@@ -58,6 +58,7 @@ import numpy as np
 from repro.core import algorithm as algorithm_lib
 from repro.core import forgetting as forgetting_lib
 from repro.core import routing, state as state_lib
+from repro.core import storage as storage_lib
 from repro.core.evaluator import RecallAccumulator
 from repro.drift import controller as controller_lib
 from repro.drift import detector as detector_lib
@@ -80,9 +81,13 @@ def make_worker_fn(cfg) -> Callable:
     one = algo.make_worker_step(cfg.resolved_hyper(), jax.random.key(cfg.seed))
 
     stepped = jax.vmap(one, in_axes=(0, 0))
+    # Storage-policy boundary: decode the resident encoding, compute in
+    # f32/bool, re-encode (identity traces under the default policy).
+    dec, enc = storage_lib.state_codecs(cfg.storage)
 
     def worker(states, ev_u, ev_i):
-        return stepped(states, (ev_u, ev_i))
+        out, hits, evaluated = stepped(dec(states), (ev_u, ev_i))
+        return enc(out), hits, evaluated
 
     return worker
 
@@ -103,9 +108,11 @@ def make_pallas_worker_fn(cfg) -> Callable:
     one = algo.make_pallas_worker_step(cfg.resolved_hyper(),
                                        jax.random.key(cfg.seed))
     stepped = jax.vmap(one, in_axes=(0, 0))
+    dec, enc = storage_lib.state_codecs(cfg.storage)
 
     def worker(states, ev_u, ev_i):
-        return stepped(states, (ev_u, ev_i))
+        out, hits, evaluated = stepped(dec(states), (ev_u, ev_i))
+        return enc(out), hits, evaluated
 
     return worker
 
@@ -145,14 +152,25 @@ def _make_batch_step(cfg, worker_fn):
     layout = carry_cap + mb
 
     # Closed-loop drift policy replaces the fixed forgetting cadence when
-    # configured (``StreamConfig.drift``, mode "adaptive").
+    # configured (``StreamConfig.drift``, mode "adaptive"). Both forget
+    # and the drift controller compute on the decoded form, mirroring the
+    # host loop and the worker step (identity under the default policy).
     adaptive = _adaptive(cfg)
-    controller = controller_lib.make_controller(cfg.drift) if adaptive else None
+    dec_s, enc_s = storage_lib.state_codecs(cfg.storage)
+    controller = None
+    if adaptive:
+        raw_controller = controller_lib.make_controller(cfg.drift)
+
+        def controller(s, fired, boost):
+            s2, b2 = raw_controller(dec_s(s), fired, boost)
+            return enc_s(s2), b2
+
     forget = None
     if not adaptive and cfg.forgetting.policy != "none":
-        forget = jax.vmap(
+        raw_forget = jax.vmap(
             partial(forgetting_lib.apply_forgetting, cfg=cfg.forgetting)
         )
+        forget = lambda s: enc_s(raw_forget(dec_s(s)))  # noqa: E731
     occ_fn = jax.vmap(lambda s: state_lib.occupancy(s.tables))
     tel_on = cfg.telemetry
 
@@ -241,9 +259,11 @@ def _make_batch_step(cfg, worker_fn):
             forgets = forgets + trigger.astype(jnp.int32)
 
         if tel_on:
+            u_o, i_o = occ_fn(states)
             tel = telemetry_lib.telemetry_batch_update(
                 tel, kept=kept_n, overflow=n_overflow, carry_cap=carry_cap,
-                evicted=evicted, hits=hits, evaluated=evaluated, load=load)
+                evicted=evicted, hits=hits, evaluated=evaluated, load=load,
+                occupancy=u_o + i_o)
 
         carry = (states, cu_new, ci_new, since, processed, dropped, forgets,
                  det, boost, tel)

@@ -34,13 +34,15 @@ import numpy as np
 from repro.core import algorithm as algorithm_lib
 from repro.core import forgetting as forgetting_lib
 from repro.core import routing, state as state_lib
+from repro.core import storage as storage_lib
 from repro.core.evaluator import RecallAccumulator
 from repro.core.regrid import CheckpointShapeError
+from repro.core.storage import StoragePolicy, StoragePolicyError
 
 __all__ = ["StreamConfig", "StreamResult", "RestoredCheckpoint", "run_stream",
            "make_worker_step", "init_states",
            "save_stream_checkpoint", "restore_stream_checkpoint",
-           "CheckpointShapeError", "LOGICAL_FORMAT"]
+           "CheckpointShapeError", "StoragePolicyError", "LOGICAL_FORMAT"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,6 +66,11 @@ class StreamConfig:
     # carry; off buys back the few extra reductions per micro-batch
     # (benchmarks/bench_obs.py gates the overhead at 3%).
     telemetry: bool = True
+    # Per-table resident encoding of worker state (repro.core.storage):
+    # every layer that touches state decodes -> computes in f32/bool ->
+    # encodes at micro-batch boundaries. The default is bit-identical to
+    # the pre-policy code (identity codecs).
+    storage: StoragePolicy = StoragePolicy()
 
     def resolved_hyper(self):
         h = self.hyper
@@ -154,6 +161,9 @@ def _make_worker_step_cached(cfg: StreamConfig) -> Callable:
 def init_states(cfg: StreamConfig):
     one = algorithm_lib.get_algorithm(cfg.algorithm).init_state(
         cfg.resolved_hyper())
+    # Algorithms init (and compute) in f32/bool; the resident encoding is
+    # applied here, once, before the broadcast over workers.
+    one = storage_lib.encode_state(one, cfg.storage)
     n_c = cfg.grid.n_c
     return jax.tree.map(lambda x: jnp.broadcast_to(x, (n_c,) + x.shape), one)
 
@@ -207,6 +217,10 @@ def run_stream(users: np.ndarray, items: np.ndarray, cfg: StreamConfig,
 
     # Closed-loop drift policy replaces the fixed cadence when configured.
     adaptive = cfg.drift is not None and cfg.drift.mode == "adaptive"
+    # Storage-policy codecs: forgetting and drift control compute on the
+    # decoded (f32/bool) form, exactly like the worker step (wrapped
+    # inside engine.make_worker_fn). Identity under the default policy.
+    dec_s, enc_s = storage_lib.state_codecs(cfg.storage)
     forget = None
     det = det_update = controller = boost = None
     if adaptive:
@@ -215,16 +229,22 @@ def run_stream(users: np.ndarray, items: np.ndarray, cfg: StreamConfig,
 
         det_update = jax.jit(partial(detector_lib.detector_update,
                                      cfg=cfg.drift.detector))
-        controller = jax.jit(controller_lib.make_controller(cfg.drift))
+        raw_controller = controller_lib.make_controller(cfg.drift)
+
+        def _controller(s, fired, boost):
+            s2, b2 = raw_controller(dec_s(s), fired, boost)
+            return enc_s(s2), b2
+
+        controller = jax.jit(_controller)
         det = (detector_lib.DetectorState(
                    *(jnp.asarray(l) for l in initial_detector))
                if initial_detector is not None
                else detector_lib.detector_init())
         boost = controller_lib.controller_init()
     elif cfg.forgetting.policy != "none":
-        forget = jax.jit(
-            jax.vmap(partial(forgetting_lib.apply_forgetting, cfg=cfg.forgetting))
-        )
+        raw_forget = jax.vmap(
+            partial(forgetting_lib.apply_forgetting, cfg=cfg.forgetting))
+        forget = jax.jit(lambda s: enc_s(raw_forget(dec_s(s))))
 
     acc = RecallAccumulator()
     user_occ, item_occ, loads = [], [], []
@@ -282,7 +302,8 @@ def run_stream(users: np.ndarray, items: np.ndarray, cfg: StreamConfig,
         zero = jnp.zeros((), jnp.int32)
         jax.block_until_ready(tel_step(
             tel, kept=zero, overflow=zero, evicted=zero, hits=dummy_b,
-            evaluated=dummy_b, load=jnp.zeros((grid.n_c,), jnp.int32)))
+            evaluated=dummy_b, load=jnp.zeros((grid.n_c,), jnp.int32),
+            occupancy=jnp.zeros((grid.n_c,), jnp.int32)))
         jax.block_until_ready(occ_total(states))
 
     t0 = time.perf_counter()
@@ -351,11 +372,13 @@ def run_stream(users: np.ndarray, items: np.ndarray, cfg: StreamConfig,
             events_since_trigger -= cfg.forgetting.trigger_every
             forgets += 1
         if tel is not None:
+            u_o, i_o = occ_fn(states)
             tel = tel_step(tel, kept=jnp.asarray(int(kept.sum()), jnp.int32),
                            overflow=jnp.asarray(carry_u.size, jnp.int32),
                            evicted=jnp.asarray(evicted, jnp.int32),
                            hits=hits, evaluated=evaluated,
-                           load=jnp.asarray(load, jnp.int32))
+                           load=jnp.asarray(load, jnp.int32),
+                           occupancy=u_o + i_o)
 
         if publish_every and on_publish is not None and (b + 1) % publish_every == 0:
             # Sync in-flight device work (async forgetting dispatch) before
@@ -426,7 +449,7 @@ LOGICAL_FORMAT = "sr-logical-v1"
 
 def save_stream_checkpoint(directory: str, events_processed: int, states,
                            carry=(None, None), grid=None, algorithm=None,
-                           detector=None):
+                           detector=None, storage: StoragePolicy = None):
     """Persist worker states (+ the re-queue carry) mid-stream.
 
     With ``grid`` (the ``GridSpec`` the states are shaped for), the
@@ -436,6 +459,16 @@ def save_stream_checkpoint(directory: str, events_processed: int, states,
     tables for the configured grid. Without ``grid``, the legacy
     fixed-shape format is written (restorable only at the same grid).
 
+    ``storage`` is the :class:`~repro.core.storage.StoragePolicy` the
+    live ``states`` are encoded under (default: the identity policy).
+    The policy descriptor is stamped into the payload, and the logical
+    format persists the heavy leaves *in the policy's encoding* — the
+    generalization of the checkpointer's bf16 view trick: quantized
+    ``co`` rides with its per-row scales (``co_scale``), packed
+    ``rated`` with its bit width (``rated_bits``), bf16 factors as bf16.
+    Restoring requires the same policy (``StoragePolicyError`` otherwise
+    — migrate via ``rescale(..., storage=...)``, not at restore time).
+
     ``detector`` (a ``repro.drift.DetectorState``, e.g.
     ``StreamResult.final_detector`` or ``PublishEvent.detector``) rides
     along in either format — the detector's scalars are grid-agnostic —
@@ -443,12 +476,15 @@ def save_stream_checkpoint(directory: str, events_processed: int, states,
     """
     from repro.checkpoint import save_checkpoint
 
+    if storage is None:
+        storage = StoragePolicy()
     carry_u, carry_i = carry
     tree = {
         "carry_u": np.asarray(carry_u if carry_u is not None else
                               np.empty(0, np.int64)),
         "carry_i": np.asarray(carry_i if carry_i is not None else
                               np.empty(0, np.int64)),
+        "storage": storage.describe(),
     }
     if detector is not None:
         tree["detector"] = jax.tree.map(np.asarray, detector)
@@ -461,7 +497,24 @@ def save_stream_checkpoint(directory: str, events_processed: int, states,
             # pass it explicitly.
             algorithm = algorithm_lib.infer_algorithm(states)
         logical = algorithm_lib.get_algorithm(algorithm).extract_logical(
-            states, grid)
+            states, grid, storage=storage)
+        # Re-encode the heavy logical leaves per the policy so the bytes
+        # on disk match the resident footprint (extract_logical hands
+        # back the decoded f32/bool compute form).
+        if storage.factors == "bf16":
+            logical = logical._replace(
+                u_vec=logical.u_vec.astype(jnp.bfloat16),
+                i_vec=logical.i_vec.astype(jnp.bfloat16))
+        if storage.co in ("uint16", "int8"):
+            q, scale = storage_lib.quantize_rows(logical.co, storage.co)
+            logical = logical._replace(co=q)
+            tree["co_scale"] = np.asarray(scale)
+        elif storage.co == "bf16":
+            logical = logical._replace(co=logical.co.astype(jnp.bfloat16))
+        if storage.rated == "packed":
+            tree["rated_bits"] = int(logical.rated.shape[-1])
+            logical = logical._replace(
+                rated=storage_lib.pack_bits(logical.rated))
         tree.update({
             "format": LOGICAL_FORMAT,
             "algorithm": algorithm,
@@ -517,6 +570,14 @@ def restore_stream_checkpoint(directory: str, cfg: StreamConfig,
     hyper = cfg.resolved_hyper()
     algo = algorithm_lib.get_algorithm(cfg.algorithm)
 
+    # Policy gate: restoring under a different resident encoding than
+    # the checkpoint was written with would scatter garbage into tables
+    # (or silently drop precision). Fail loudly, naming both policies;
+    # migration is a live-rescale concern (rescale(..., storage=...)).
+    saved_policy = StoragePolicy.from_descriptor(tree.get("storage"))
+    if saved_policy != cfg.storage:
+        raise StoragePolicyError(saved_policy, cfg.storage)
+
     fmt = tree.get("format")
     if fmt is not None:
         if fmt != LOGICAL_FORMAT:
@@ -529,14 +590,31 @@ def restore_stream_checkpoint(directory: str, cfg: StreamConfig,
         src = routing.GridSpec.rect(n_i, g)
         logical = regrid_lib.LogicalState(
             *(jnp.asarray(leaf) for leaf in tree["logical"]))
+        # Decode the policy-encoded heavy leaves back to the f32/bool
+        # compute form build_states expects (inverse of the save path).
+        if saved_policy.factors == "bf16":
+            logical = logical._replace(
+                u_vec=logical.u_vec.astype(jnp.float32),
+                i_vec=logical.i_vec.astype(jnp.float32))
+        if saved_policy.co in ("uint16", "int8"):
+            logical = logical._replace(co=storage_lib.dequantize_rows(
+                logical.co, jnp.asarray(tree["co_scale"])))
+        elif saved_policy.co == "bf16":
+            logical = logical._replace(co=logical.co.astype(jnp.float32))
+        if saved_policy.rated == "packed":
+            logical = logical._replace(rated=storage_lib.unpack_bits(
+                logical.rated, int(tree["rated_bits"])))
         states = algo.build_states(
             logical, src=src, dst=cfg.grid,
-            u_cap=hyper.u_cap, i_cap=hyper.i_cap)
+            u_cap=hyper.u_cap, i_cap=hyper.i_cap, storage=cfg.storage)
         return RestoredCheckpoint(events_processed, states, carry, detector)
 
     # Legacy fixed-shape payload: validate against the algorithm's
-    # checkpoint schema (single-worker template stacked over the grid).
+    # checkpoint schema (single-worker template stacked over the grid,
+    # in the configured policy's resident encoding).
     one = algo.state_template(hyper)
+    one = jax.eval_shape(
+        partial(storage_lib.encode_state, policy=cfg.storage), one)
     n_c = cfg.grid.n_c
     flat_one, treedef = jax.tree.flatten(one)
     flat_t = [jax.ShapeDtypeStruct((n_c,) + s.shape, s.dtype)

@@ -64,6 +64,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import state as state_lib
+from repro.core import storage as storage_lib
 from repro.core.routing import GridSpec
 from repro.core.state import DicsState, DisgdState, Tables
 
@@ -133,8 +134,17 @@ class LogicalState(NamedTuple):
     clock: jax.Array     # i32[n_i, g] per-worker event clocks
 
 
-def extract_logical(states, grid: GridSpec) -> LogicalState:
-    """Flatten stacked ``[n_c, ...]`` worker states into a LogicalState."""
+def extract_logical(states, grid: GridSpec, storage=None) -> LogicalState:
+    """Flatten stacked ``[n_c, ...]`` worker states into a LogicalState.
+
+    ``storage`` names the :class:`~repro.core.storage.StoragePolicy` the
+    states are resident under; the logical form is always the decoded
+    f32/bool compute form, so a LogicalState is policy-portable —
+    ``build_states(..., storage=other)`` is the re-encoding (policy
+    migration) path.
+    """
+    if storage is not None:
+        states = storage_lib.decode_state(states, storage)
     t = states.tables
     n_c, u_cap = t.user_ids.shape
     i_cap = t.item_ids.shape[1]
@@ -246,15 +256,18 @@ def _scatter_merge(*, ids, ts, freq, dest, n_slots, vec=None, cnt=None,
     return out_ids, out_freq, out_ts, out_vec, out_cnt
 
 
-@partial(jax.jit, static_argnames=("src", "dst", "u_cap", "i_cap", "merge"))
+@partial(jax.jit,
+         static_argnames=("src", "dst", "u_cap", "i_cap", "merge", "storage"))
 def build_states(logical: LogicalState, *, src: GridSpec, dst: GridSpec,
-                 u_cap: int, i_cap: int, merge: str = "fresh"):
+                 u_cap: int, i_cap: int, merge: str = "fresh", storage=None):
     """Rebuild stacked ``[dst.n_c, ...]`` worker states from a LogicalState.
 
     ``u_cap``/``i_cap`` are the *target* per-worker capacities (elastic
     memory: a scale-out can shrink them, a scale-in can grow them). The
     algorithm is carried by the logical leaves themselves (zero-width
-    ``co`` means DISGD).
+    ``co`` means DISGD). ``storage`` encodes the rebuilt states under a
+    :class:`~repro.core.storage.StoragePolicy` (the target policy when
+    regrid doubles as a policy migration).
     """
     is_disgd = logical.co.shape[-1] == 0
     n_c = dst.n_c
@@ -342,31 +355,41 @@ def build_states(logical: LogicalState, *, src: GridSpec, dst: GridSpec,
         clock=clock,
     )
     if is_disgd:
-        return DisgdState(
+        out = DisgdState(
             tables=tables,
             user_vecs=user_vecs.reshape(n_c, u_cap, -1),
             item_vecs=item_vecs.reshape(n_c, i_cap, -1),
             rated=rated,
         )
-    return DicsState(
-        tables=tables, co=co,
-        item_cnt=dics_cnt.reshape(n_c, i_cap), rated=rated,
-    )
+    else:
+        out = DicsState(
+            tables=tables, co=co,
+            item_cnt=dics_cnt.reshape(n_c, i_cap), rated=rated,
+        )
+    if storage is not None:
+        out = storage_lib.encode_state(out, storage)
+    return out
 
 
 def regrid(states, src: GridSpec, dst: GridSpec, *, u_cap: int | None = None,
-           i_cap: int | None = None, merge: str = "fresh"):
+           i_cap: int | None = None, merge: str = "fresh", storage=None,
+           storage_out=None):
     """Reshape live worker states from grid ``src`` to grid ``dst``.
 
     ``regrid(states, grid, grid)`` is the identity, bit for bit. Target
     capacities default to the source's; shrinking them evicts exactly as
-    a slot-table insert would (freshest tenant wins).
+    a slot-table insert would (freshest tenant wins). ``storage`` names
+    the policy the input states are encoded under; ``storage_out`` the
+    target encoding (defaults to ``storage`` — pass a different one to
+    migrate policies mid-regrid).
     """
     t = states.tables
     if u_cap is None:
         u_cap = t.user_ids.shape[1]
     if i_cap is None:
         i_cap = t.item_ids.shape[1]
-    logical = extract_logical(states, src)
+    logical = extract_logical(states, src, storage=storage)
     return build_states(logical, src=src, dst=dst, u_cap=u_cap, i_cap=i_cap,
-                        merge=merge)
+                        merge=merge,
+                        storage=storage_out if storage_out is not None
+                        else storage)

@@ -33,29 +33,43 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import state as state_lib
+from repro.core import storage as storage_lib
 from repro.core.state import DisgdState
 from repro.kernels import ops
 
 __all__ = ["recommend_topn", "recommend_topn_ref", "partial_topn"]
 
 
-def _gather_queries(state: DisgdState, user_ids, g: int, u_cap: int):
+def _gather_queries(state: DisgdState, user_ids, g: int, u_cap: int,
+                    storage=None):
+    """Lazy-decode query gather: under a packed/bf16 StoragePolicy only
+    the gathered [B, ...] rows are decoded, never the full tables."""
     slots = state_lib.slot_of(user_ids, g, u_cap)
     known = state.tables.user_ids[slots] == user_ids
-    u_vecs = jnp.where(known[:, None], state.user_vecs[slots], 0.0)
-    rated = state.rated[slots] & known[:, None]
+    u_rows = state.user_vecs[slots]
+    if storage is None:
+        rated_rows = state.rated[slots]
+    else:
+        u_rows = storage_lib.factor_f32(u_rows)
+        rated_rows = storage_lib.gather_rated(
+            state.rated, slots, storage, state.tables.item_ids.shape[-1])
+    u_vecs = jnp.where(known[:, None], u_rows, 0.0)
+    rated = rated_rows & known[:, None]
     valid_items = state.tables.item_ids >= 0
     mask = valid_items[None, :] & ~rated & known[:, None]
     return u_vecs, mask, known
 
 
 def partial_topn(state: DisgdState, user_ids, *, top_n: int = 10,
-                 g: int = 1, u_cap: int = 1024, use_kernel: bool = True):
+                 g: int = 1, u_cap: int = 1024, use_kernel: bool = True,
+                 storage=None):
     """One worker's partial top-N (DISGD): the serving-plane leaf op.
 
     Scores this worker's local item split for every query and returns the
     local top-N as *global* item ids — the unit the grid plane merges
-    across the ``n_i`` split dimension.
+    across the ``n_i`` split dimension. ``storage`` names the
+    :class:`~repro.core.storage.StoragePolicy` the state is resident
+    under (None = compute form).
 
     Returns:
       (item_ids i32[B, N], scores f32[B, N], known bool[B]). Slots that
@@ -63,18 +77,20 @@ def partial_topn(state: DisgdState, user_ids, *, top_n: int = 10,
       score -inf; callers must mask ids wherever scores are non-finite
       (``recommend_topn`` / the grid merge both do).
     """
-    u_vecs, mask, known = _gather_queries(state, user_ids, g, u_cap)
+    u_vecs, mask, known = _gather_queries(state, user_ids, g, u_cap, storage)
+    item_vecs = (state.item_vecs if storage is None
+                 else storage_lib.factor_f32(state.item_vecs))
     if use_kernel:
         # One fused dispatch: score + rated-mask + partial top-N without
         # materializing the [B, I] score matrix (ops.fused_topn keeps the
         # exact topn_select ordering contract).
         top_ids, top_scores = ops.fused_topn(
-            u_vecs, state.item_vecs, mask, state.tables.item_ids,
+            u_vecs, item_vecs, mask, state.tables.item_ids,
             top_n=top_n)
     else:
         scores = jnp.where(
             mask,
-            jnp.einsum("bk,ik->bi", u_vecs, state.item_vecs),
+            jnp.einsum("bk,ik->bi", u_vecs, item_vecs),
             -jnp.inf,
         )
         ids_b = jnp.broadcast_to(
@@ -83,9 +99,11 @@ def partial_topn(state: DisgdState, user_ids, *, top_n: int = 10,
     return top_ids, top_scores, known
 
 
-@partial(jax.jit, static_argnames=("top_n", "g", "u_cap", "use_kernel"))
+@partial(jax.jit,
+         static_argnames=("top_n", "g", "u_cap", "use_kernel", "storage"))
 def recommend_topn(state: DisgdState, user_ids, *, top_n: int = 10,
-                   g: int = 1, u_cap: int = 1024, use_kernel: bool = True):
+                   g: int = 1, u_cap: int = 1024, use_kernel: bool = True,
+                   storage=None):
     """Top-N item ids for a batch of users on one worker.
 
     Args:
@@ -101,7 +119,8 @@ def recommend_topn(state: DisgdState, user_ids, *, top_n: int = 10,
       never -inf-scored garbage ids.
     """
     ids, scores, known = partial_topn(
-        state, user_ids, top_n=top_n, g=g, u_cap=u_cap, use_kernel=use_kernel
+        state, user_ids, top_n=top_n, g=g, u_cap=u_cap, use_kernel=use_kernel,
+        storage=storage
     )
     ok = jnp.isfinite(scores) & known[:, None]
     return jnp.where(ok, ids, -1), jnp.where(ok, scores, -jnp.inf)

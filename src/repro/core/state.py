@@ -21,7 +21,7 @@ as the *number of entries* per worker; here that is table occupancy
 
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -88,12 +88,21 @@ class DicsState(NamedTuple):
     With the paper's positive-only binary feedback, TencentRec's
     ``sum_u min(r_up, r_uq)`` is the co-rating count and ``sum r_up`` the
     item count, so Eq. 6 reduces to ``co[p,q] / sqrt(cnt[p] * cnt[q])``.
+
+    ``co_scale`` exists only under a quantized storage policy
+    (``repro.core.storage``): per-row dequantization scales for ``co``
+    (f32[I_cap]). In the f32 compute form — everything the algorithm
+    code ever sees — it is ``None``, which jax treats as an empty
+    subtree, so the default-policy pytree structure matches the
+    pre-policy layout leaf for leaf.
     """
 
     tables: Tables
     co: jax.Array        # f32[I_cap, I_cap] pairwise co-rating counts
+                         # (or the quantized int form under a policy)
     item_cnt: jax.Array  # f32[I_cap] per-item rating counts
-    rated: jax.Array     # bool[U_cap, I_cap]
+    rated: jax.Array     # bool[U_cap, I_cap] (uint32 bitfields if packed)
+    co_scale: Any = None  # f32[I_cap] per-row scales, or None
 
 
 def _init_tables(u_cap: int, i_cap: int) -> Tables:
@@ -108,22 +117,35 @@ def _init_tables(u_cap: int, i_cap: int) -> Tables:
     )
 
 
-def init_disgd_state(u_cap: int, i_cap: int, k: int, dtype=jnp.float32) -> DisgdState:
-    return DisgdState(
+def init_disgd_state(u_cap: int, i_cap: int, k: int, dtype=jnp.float32,
+                     storage=None) -> DisgdState:
+    state = DisgdState(
         tables=_init_tables(u_cap, i_cap),
         user_vecs=jnp.zeros((u_cap, k), dtype),
         item_vecs=jnp.zeros((i_cap, k), dtype),
         rated=jnp.zeros((u_cap, i_cap), bool),
     )
+    return _maybe_encode(state, storage)
 
 
-def init_dics_state(u_cap: int, i_cap: int, dtype=jnp.float32) -> DicsState:
-    return DicsState(
+def init_dics_state(u_cap: int, i_cap: int, dtype=jnp.float32,
+                    storage=None) -> DicsState:
+    state = DicsState(
         tables=_init_tables(u_cap, i_cap),
         co=jnp.zeros((i_cap, i_cap), dtype),
         item_cnt=jnp.zeros((i_cap,), dtype),
         rated=jnp.zeros((u_cap, i_cap), bool),
     )
+    return _maybe_encode(state, storage)
+
+
+def _maybe_encode(state, storage):
+    """Encode a fresh compute-form state per an optional StoragePolicy."""
+    if storage is None:
+        return state
+    from repro.core import storage as storage_lib
+
+    return storage_lib.encode_state(state, storage)
 
 
 def occupancy(tables: Tables):

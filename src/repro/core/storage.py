@@ -1,0 +1,323 @@
+"""StoragePolicy — how worker-state tables are *stored*, not computed.
+
+The paper's headline is recall at >50% less memory from S&R; this module
+pushes the other axis: how many entities one host can hold. Every
+algorithm computes in f32/bool, but the *resident* encoding of each
+table is a per-table policy choice carried on ``StreamConfig.storage``:
+
+  * ``factors`` — DISGD/BPR factor matrices (and any future f32 model
+    table): ``"f32"`` or ``"bf16"`` (2x).
+  * ``co`` — the DICS co-rating counts: ``"f32"``, ``"bf16"``, or
+    integer-quantized ``"uint16"`` / ``"int8"`` with one power-of-two
+    scale per matrix row (2-4x; exact while counts stay <= qmax, which
+    makes DICS ranking bit-identical at benchmark scale).
+  * ``rated`` — the rating-history bitmaps: ``"dense"`` bool or
+    ``"packed"`` uint32 bitfields (8x).
+
+The contract every consumer honors (engine workers, forgetting, drift
+control, serve leaves, regrid, checkpoints): **decode -> compute in
+f32/bool -> encode** at micro-batch (or call) boundaries. The default
+policy short-circuits both codecs to literal identity, so the default
+configuration is bit-identical to the pre-policy code — the existing
+host/scan/pallas parity suites are the gate.
+
+Encoding is a *deterministic* function of the decoded values. That is
+the property the checkpoint round-trip leans on: a state rebuilt from
+identical decoded values (e.g. an identity regrid) re-encodes to
+bit-identical stored arrays. For the quantizer specifically, scales are
+powers of two so ``decode(encode(x))`` is value-exact whenever row
+maxima stay within the integer range (integer co-counts always are),
+and lossy only by <= scale/2 per entry beyond it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.state import DicsState, DisgdState
+
+__all__ = [
+    "StoragePolicy",
+    "StoragePolicyError",
+    "pack_bits",
+    "unpack_bits",
+    "quantize_rows",
+    "dequantize_rows",
+    "encode_state",
+    "decode_state",
+    "state_codecs",
+    "gather_rated",
+    "decode_co",
+    "factor_f32",
+    "table_arrays",
+    "state_nbytes",
+]
+
+_FACTORS = ("f32", "bf16")
+_CO = ("f32", "bf16", "uint16", "int8")
+_RATED = ("dense", "packed")
+
+# Quantized co-count dtypes and their integer ranges.
+_QSPEC = {"uint16": (jnp.uint16, 0, 65535), "int8": (jnp.int8, -127, 127)}
+
+
+class StoragePolicyError(ValueError):
+    """A checkpoint's storage policy does not match the restoring config.
+
+    Mirrors ``regrid.CheckpointShapeError``: carries both policies so
+    callers can react programmatically. Policy migration is a regrid
+    concern — restore under the checkpoint's policy, then
+    ``StreamSession.rescale(..., storage=new_policy)`` re-encodes.
+    """
+
+    def __init__(self, checkpoint_policy: "StoragePolicy",
+                 config_policy: "StoragePolicy"):
+        self.checkpoint_policy = checkpoint_policy
+        self.config_policy = config_policy
+        super().__init__(
+            f"checkpoint was written under storage policy "
+            f"{checkpoint_policy} but the config asks for {config_policy}. "
+            "Restore with the checkpoint's policy (StreamConfig(storage="
+            f"{checkpoint_policy!r})), then migrate live via "
+            "StreamSession.rescale(..., storage=<new policy>) — regrid is "
+            "the re-encoding path.")
+
+
+@dataclasses.dataclass(frozen=True)
+class StoragePolicy:
+    """Frozen per-table encoding spec (hashable: it keys jit caches)."""
+
+    factors: str = "f32"   # "f32" | "bf16"
+    co: str = "f32"        # "f32" | "bf16" | "uint16" | "int8"
+    rated: str = "dense"   # "dense" | "packed"
+
+    def __post_init__(self):
+        if self.factors not in _FACTORS:
+            raise ValueError(f"factors={self.factors!r}; one of {_FACTORS}")
+        if self.co not in _CO:
+            raise ValueError(f"co={self.co!r}; one of {_CO}")
+        if self.rated not in _RATED:
+            raise ValueError(f"rated={self.rated!r}; one of {_RATED}")
+
+    @property
+    def is_default(self) -> bool:
+        return (self.factors == "f32" and self.co == "f32"
+                and self.rated == "dense")
+
+    @classmethod
+    def compressed(cls, factors: str = "f32") -> "StoragePolicy":
+        """Quantized co + packed rated — the capacity-benchmark policy.
+
+        Exact at benchmark scale (integer co-counts <= 65535 quantize
+        losslessly; bit-packing is always exact), so recall matches the
+        default bit for bit. Pass ``factors="bf16"`` to also halve the
+        factor tables (sub-ulp ranking perturbations possible).
+        """
+        return cls(factors=factors, co="uint16", rated="packed")
+
+    def describe(self) -> dict:
+        """JSON-able descriptor (the checkpoint's ``storage`` record)."""
+        return {"factors": self.factors, "co": self.co, "rated": self.rated}
+
+    @classmethod
+    def from_descriptor(cls, desc) -> "StoragePolicy":
+        if desc is None:
+            return cls()
+        return cls(factors=str(desc["factors"]), co=str(desc["co"]),
+                   rated=str(desc["rated"]))
+
+
+# ---------------------------------------------------------------------------
+# Bit-packed rated bitmaps: bool[..., I] <-> uint32[..., ceil(I/32)]
+# ---------------------------------------------------------------------------
+
+
+def packed_width(n: int) -> int:
+    """uint32 words needed for ``n`` bits."""
+    return -(-n // 32)
+
+
+def pack_bits(b: jax.Array) -> jax.Array:
+    """bool[..., I] -> uint32[..., ceil(I/32)] little-endian bitfields."""
+    n = b.shape[-1]
+    w = packed_width(n)
+    pad = w * 32 - n
+    if pad:
+        b = jnp.concatenate(
+            [b, jnp.zeros(b.shape[:-1] + (pad,), bool)], axis=-1)
+    b = b.reshape(b.shape[:-1] + (w, 32))
+    weights = jnp.left_shift(jnp.uint32(1),
+                             jnp.arange(32, dtype=jnp.uint32))
+    return jnp.sum(b.astype(jnp.uint32) * weights, axis=-1,
+                   dtype=jnp.uint32)
+
+
+def unpack_bits(words: jax.Array, n: int) -> jax.Array:
+    """uint32[..., W] -> bool[..., n] (inverse of :func:`pack_bits`)."""
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = jnp.right_shift(words[..., :, None], shifts) & jnp.uint32(1)
+    flat = bits.reshape(words.shape[:-1] + (words.shape[-1] * 32,))
+    return flat[..., :n].astype(bool)
+
+
+# ---------------------------------------------------------------------------
+# Per-row power-of-two quantization: f32[..., R, C] <-> (int[..., R, C],
+# f32[..., R])
+# ---------------------------------------------------------------------------
+
+
+def quantize_rows(x: jax.Array, dtype: str):
+    """Quantize along the last axis with one power-of-two scale per row.
+
+    ``scale = 2^max(0, ceil(log2(rowmax / qmax)))`` — exactly 1 while the
+    row fits the integer range (integer-valued rows then round-trip
+    losslessly), doubling as the row grows. Power-of-two scales keep
+    re-encoding deterministic and division exact.
+    """
+    dt, qmin, qmax = _QSPEC[dtype]
+    # initial= gives the reduction an identity, so zero-size tables
+    # (e.g. a factor model's empty co matrix in the logical form)
+    # quantize to an empty array with unit scales instead of raising.
+    rowmax = jnp.max(jnp.abs(x), axis=-1, initial=0.0)
+    exp = jnp.ceil(jnp.log2(jnp.maximum(rowmax / qmax, 1.0)))
+    scale = jnp.exp2(exp).astype(jnp.float32)
+    q = jnp.clip(jnp.round(x / scale[..., None]), qmin, qmax)
+    return q.astype(dt), scale
+
+
+def dequantize_rows(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale[..., None]
+
+
+# ---------------------------------------------------------------------------
+# Whole-state codecs
+# ---------------------------------------------------------------------------
+
+
+def factor_f32(x: jax.Array) -> jax.Array:
+    """Decode a (possibly bf16) factor table to the f32 compute form."""
+    return x if x.dtype == jnp.float32 else x.astype(jnp.float32)
+
+
+def decode_co(co: jax.Array, co_scale, policy: StoragePolicy) -> jax.Array:
+    """Decode a stored co-count table to the f32 compute form."""
+    if policy.co in _QSPEC:
+        return dequantize_rows(co, co_scale)
+    return factor_f32(co)
+
+
+def gather_rated(rated: jax.Array, slots, policy: StoragePolicy,
+                 i_cap: int) -> jax.Array:
+    """Gather + decode rated rows for a batch of user slots.
+
+    The serve-path primitive: under a packed policy only the gathered
+    ``[B, W]`` words are unpacked, never the full bitmap.
+    """
+    rows = rated[slots]
+    if policy.rated == "packed":
+        rows = unpack_bits(rows, i_cap)
+    return rows
+
+
+def encode_state(states, policy: StoragePolicy):
+    """Compute-form (f32/bool) state -> policy-encoded resident state."""
+    if policy.is_default:
+        return states
+    if isinstance(states, DisgdState):
+        out = states
+        if policy.factors == "bf16":
+            out = out._replace(user_vecs=out.user_vecs.astype(jnp.bfloat16),
+                               item_vecs=out.item_vecs.astype(jnp.bfloat16))
+        if policy.rated == "packed":
+            out = out._replace(rated=pack_bits(out.rated))
+        return out
+    if isinstance(states, DicsState):
+        out = states
+        if policy.co == "bf16":
+            out = out._replace(co=out.co.astype(jnp.bfloat16), co_scale=None)
+        elif policy.co in _QSPEC:
+            q, scale = quantize_rows(out.co, policy.co)
+            out = out._replace(co=q, co_scale=scale)
+        if policy.rated == "packed":
+            out = out._replace(rated=pack_bits(out.rated))
+        return out
+    raise TypeError(f"unknown state type {type(states)}")
+
+
+def decode_state(states, policy: StoragePolicy):
+    """Policy-encoded resident state -> the f32/bool compute form."""
+    if policy.is_default:
+        return states
+    if isinstance(states, DisgdState):
+        out = states
+        if policy.factors == "bf16":
+            out = out._replace(user_vecs=factor_f32(out.user_vecs),
+                               item_vecs=factor_f32(out.item_vecs))
+        if policy.rated == "packed":
+            i_cap = out.tables.item_ids.shape[-1]
+            out = out._replace(rated=unpack_bits(out.rated, i_cap))
+        return out
+    if isinstance(states, DicsState):
+        out = states
+        out = out._replace(co=decode_co(out.co, out.co_scale, policy),
+                           co_scale=None)
+        if policy.rated == "packed":
+            i_cap = out.tables.item_ids.shape[-1]
+            out = out._replace(rated=unpack_bits(out.rated, i_cap))
+        return out
+    raise TypeError(f"unknown state type {type(states)}")
+
+
+def state_codecs(policy: StoragePolicy) -> tuple[Callable, Callable]:
+    """``(decode, encode)`` for a policy; literal identities by default.
+
+    The identity short-circuit is the bit-identity guarantee: under the
+    default policy wrapped compute traces to exactly the pre-policy
+    graph (no same-dtype casts, no structure churn).
+    """
+    if policy.is_default:
+        ident = lambda s: s  # noqa: E731 — shared pre-policy fast path
+        return ident, ident
+    return (partial(decode_state, policy=policy),
+            partial(encode_state, policy=policy))
+
+
+# ---------------------------------------------------------------------------
+# Memory accounting (exact nbytes from live array metadata, no sync)
+# ---------------------------------------------------------------------------
+
+
+def table_arrays(states) -> dict[str, jax.Array]:
+    """Named tables of a (single or stacked) worker-state pytree."""
+    out = dict(states.tables._asdict())
+    if isinstance(states, DisgdState):
+        out.update(user_vecs=states.user_vecs, item_vecs=states.item_vecs,
+                   rated=states.rated)
+    elif isinstance(states, DicsState):
+        out.update(co=states.co, item_cnt=states.item_cnt,
+                   rated=states.rated)
+        if states.co_scale is not None:
+            out["co_scale"] = states.co_scale
+    else:
+        raise TypeError(f"unknown state type {type(states)}")
+    return out
+
+
+def state_nbytes(states) -> dict[str, tuple[str, int]]:
+    """Exact resident bytes per table: ``{table: (dtype, nbytes)}``."""
+    out = {}
+    for name, arr in table_arrays(states).items():
+        nbytes = int(np.prod(arr.shape, dtype=np.int64)) * arr.dtype.itemsize
+        out[name] = (str(arr.dtype), nbytes)
+    return out
+
+
+def total_nbytes(states) -> int:
+    """Total resident bytes of a worker-state pytree."""
+    return sum(n for _, n in state_nbytes(states).values())

@@ -63,22 +63,31 @@ class TelemetryState(NamedTuple):
     hits: jnp.ndarray        # prequential recall hits
     evals: jnp.ndarray       # prequential recall evaluations
     bucket_hwm: jnp.ndarray  # i32[n_c] per-bucket load high-water mark
+    occ_hwm: jnp.ndarray     # i32[n_c] per-worker occupancy high-water
+                             # mark (user + item live entries)
 
 
 def telemetry_init(n_c: int) -> TelemetryState:
     z = jnp.zeros((), jnp.int32)
-    return TelemetryState(z, z, z, z, z, z, jnp.zeros((n_c,), jnp.int32))
+    return TelemetryState(z, z, z, z, z, z, jnp.zeros((n_c,), jnp.int32),
+                          jnp.zeros((n_c,), jnp.int32))
 
 
 def telemetry_update(tel: TelemetryState, *, kept, overflow, carry_cap,
-                     evicted, hits, evals, load) -> TelemetryState:
+                     evicted, hits, evals, load,
+                     occupancy=None) -> TelemetryState:
     """Fold one micro-batch of scalar counts into the running vector.
 
     Pure integer arithmetic so host and scan backends produce
     bit-identical values; every argument is (convertible to) i32.
+    ``occupancy`` (i32[n_c] live entries per worker, user + item) is
+    optional — ``None`` leaves the occupancy high-water mark unchanged.
     """
     overflow = jnp.asarray(overflow, jnp.int32)
     carry_cap = jnp.asarray(carry_cap, jnp.int32)
+    occ_hwm = tel.occ_hwm
+    if occupancy is not None:
+        occ_hwm = jnp.maximum(occ_hwm, jnp.asarray(occupancy, jnp.int32))
     return TelemetryState(
         events=tel.events + jnp.asarray(kept, jnp.int32),
         dropped=tel.dropped + jnp.maximum(overflow - carry_cap, 0),
@@ -88,12 +97,13 @@ def telemetry_update(tel: TelemetryState, *, kept, overflow, carry_cap,
         evals=tel.evals + jnp.asarray(evals, jnp.int32),
         bucket_hwm=jnp.maximum(tel.bucket_hwm,
                                jnp.asarray(load, jnp.int32)),
+        occ_hwm=occ_hwm,
     )
 
 
 def telemetry_batch_update(tel: TelemetryState, *, kept, overflow,
                            carry_cap, evicted, hits, evaluated,
-                           load) -> TelemetryState:
+                           load, occupancy=None) -> TelemetryState:
     """:func:`telemetry_update` with the recall reduction inlined.
 
     ``hits`` / ``evaluated`` are the worker step's ``bool[n_c, cap]``
@@ -104,7 +114,8 @@ def telemetry_batch_update(tel: TelemetryState, *, kept, overflow,
         tel, kept=kept, overflow=overflow, carry_cap=carry_cap,
         evicted=evicted,
         hits=jnp.sum((hits & evaluated).astype(jnp.int32)),
-        evals=jnp.sum(evaluated.astype(jnp.int32)), load=load)
+        evals=jnp.sum(evaluated.astype(jnp.int32)), load=load,
+        occupancy=occupancy)
 
 
 def telemetry_ints(tel: TelemetryState) -> dict:
@@ -117,6 +128,7 @@ def telemetry_ints(tel: TelemetryState) -> dict:
         "hits": int(tel.hits),
         "evals": int(tel.evals),
         "bucket_hwm": [int(v) for v in np.asarray(tel.bucket_hwm)],
+        "occ_hwm": [int(v) for v in np.asarray(tel.occ_hwm)],
     }
 
 
@@ -160,6 +172,17 @@ class TelemetryFolder:
         self._hwm = registry.gauge(
             "stream_bucket_hwm", "Per-bucket dispatch-load high-water "
             "mark (events)", labels=("bucket",))
+        self._occ_frac = registry.gauge(
+            "bucket_occupancy_frac", "Per-worker occupancy high-water "
+            "mark as a fraction of table capacity (user + item entries)",
+            labels=("bucket",))
+        self._capacity: int | None = None
+
+    def set_capacity(self, entries: int) -> None:
+        """Per-worker entry capacity (u_cap + i_cap) for the occupancy
+        fraction gauge; owner calls this at init and after a rescale."""
+        with self._lock:
+            self._capacity = int(entries) if entries else None
 
     def rebase(self) -> None:
         """Mark the start of a new stream segment (counters reset to 0)."""
@@ -179,5 +202,9 @@ class TelemetryFolder:
                     self._counters[f].inc(delta)
             for b, v in enumerate(vals["bucket_hwm"]):
                 self._hwm.labels(bucket=str(b)).set_max(v)
+            if self._capacity:
+                for b, v in enumerate(vals.get("occ_hwm", ())):
+                    self._occ_frac.labels(bucket=str(b)).set(
+                        v / self._capacity)
             self._last = vals
         return vals

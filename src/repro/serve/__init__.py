@@ -15,6 +15,9 @@ ingests. This package is that serving plane:
   * ``frontend`` — micro-batched query front-end: LRU response cache
     (lazily invalidated by snapshot generation) and a popularity
     fallback for unknown users;
+  * ``autoscaler`` — closes the regrid loop: walks the grid up/down a
+    balanced power-of-two ladder from the overflow / occupancy /
+    staleness telemetry the engine already exports;
   * ``loadgen``  — seeded mixed-load traffic generation (Zipf-skewed
     queries, Poisson/bursty arrivals, events:queries mix);
   * ``service``  — the mixed-load runner: interleaved ingest + query
@@ -26,6 +29,7 @@ Drivers: ``repro.launch.service_rs`` (mixed-load harness),
 ``benchmarks.bench_service`` / ``benchmarks.bench_serve``.
 """
 
+from repro.serve.autoscaler import AutoscalePolicy, Autoscaler, balanced_grid
 from repro.serve.frontend import QueryFrontend, ServeConfig, ServeResponse
 from repro.serve.plane import grid_topn, query_capacity
 from repro.serve.policy import PublishPolicy
@@ -33,6 +37,9 @@ from repro.serve.snapshot import (Snapshot, SnapshotStore, StaleSnapshotError,
                                   popularity_topn)
 
 __all__ = [
+    "AutoscalePolicy",
+    "Autoscaler",
+    "balanced_grid",
     "grid_topn",
     "query_capacity",
     "Snapshot",

@@ -30,7 +30,6 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
-import warnings
 
 import jax.numpy as jnp
 import numpy as np
@@ -60,6 +59,9 @@ class ServeConfig:
     cache_capacity: int = 4096            # LRU response-cache entries
     # Publish-plane contract (cadence, async/sync, staleness bound).
     publish: PublishPolicy = PublishPolicy()
+    # Resident encoding of the published states (StoragePolicy when the
+    # trainer stores compressed tables; None = compute-form states).
+    storage: object = None
 
     @property
     def max_staleness_events(self) -> int | None:
@@ -77,12 +79,17 @@ class ServeConfig:
     def from_stream(cls, stream_cfg, **overrides) -> "ServeConfig":
         """Derive the serving parameters from a training ``StreamConfig``."""
         hyper = stream_cfg.resolved_hyper()
+        storage = getattr(stream_cfg, "storage", None)
         fields = dict(
             algorithm=stream_cfg.algorithm,
             grid=stream_cfg.grid,
             u_cap=hyper.u_cap,
             top_n=hyper.top_n,
             k_nn=getattr(hyper, "k_nn", 10),
+            # None when the stream runs the default (identity) policy so
+            # serving traces exactly the pre-policy graph.
+            storage=(storage if storage is not None
+                     and not storage.is_default else None),
         )
         fields.update(overrides)
         return cls(**fields)
@@ -182,7 +189,7 @@ class QueryFrontend:
 
     # -- elasticity ------------------------------------------------------
 
-    def retarget(self, grid, u_cap: int | None = None) -> None:
+    def retarget(self, grid, u_cap: int | None = None, storage=...) -> None:
         """Point the front-end at a resharded grid (``core/regrid``).
 
         Swaps the static plane parameters (new jit signature) and drops
@@ -192,10 +199,15 @@ class QueryFrontend:
         not just its freshness.) The snapshot store is shape-agnostic,
         so the same store keeps serving across the rescale; callers
         publish the first post-regrid snapshot and then retarget.
+        ``storage`` (a StoragePolicy or None) follows a policy migration;
+        left unset, the current policy is kept.
         """
         over = {"grid": grid}
         if u_cap is not None:
             over["u_cap"] = u_cap
+        if storage is not ...:
+            over["storage"] = (storage if storage is not None
+                               and not storage.is_default else None)
         self.cfg = dataclasses.replace(self.cfg, **over)
         self._cache.clear()
         self._seen_gen = (-1, -1)
@@ -223,7 +235,8 @@ class QueryFrontend:
                 snap.states, jnp.asarray(arr),
                 algorithm=cfg.algorithm, grid=cfg.grid,
                 top_n=cfg.top_n, u_cap=cfg.u_cap, qcap=cfg.qcap,
-                k_nn=cfg.k_nn, use_kernel=cfg.use_kernel)
+                k_nn=cfg.k_nn, use_kernel=cfg.use_kernel,
+                storage=cfg.storage)
             ids, scores = np.asarray(ids), np.asarray(scores)
             known, served = np.asarray(known), np.asarray(served)
             self._c["plane_batches"].inc()
@@ -319,16 +332,3 @@ class QueryFrontend:
         ``serve_<key>_total``.
         """
         return {k: int(c.value) for k, c in self._c.items()}
-
-    @property
-    def stats(self):
-        """Deprecated (one release): the old ad-hoc counter dict.
-
-        Use :meth:`stats_snapshot` (same keys) or ``self.metrics``.
-        """
-        warnings.warn(
-            "QueryFrontend.stats is deprecated; use stats_snapshot() or "
-            "the metrics registry (frontend.metrics) — the dict view "
-            "will be removed next release", DeprecationWarning,
-            stacklevel=2)
-        return self.stats_snapshot()

@@ -48,11 +48,11 @@ def query_capacity(batch_size: int, g: int, factor: float = 2.0) -> int:
 
 
 @partial(jax.jit, static_argnames=("algorithm", "grid", "top_n", "u_cap",
-                                   "qcap", "k_nn", "use_kernel"))
+                                   "qcap", "k_nn", "use_kernel", "storage"))
 def grid_topn(states, user_ids, *, algorithm: str = "disgd",
               grid: routing.GridSpec = routing.GridSpec(1), top_n: int = 10,
               u_cap: int = 1024, qcap: int = 64,
-              k_nn: int = 10, use_kernel: bool = True):
+              k_nn: int = 10, use_kernel: bool = True, storage=None):
     """Grid-wide top-N for a batch of users, merged across item splits.
 
     Args:
@@ -68,6 +68,9 @@ def grid_topn(states, user_ids, *, algorithm: str = "disgd",
       u_cap / k_nn: hyper parameters (``DisgdHyper`` / ``DicsHyper``).
       qcap: per-column query bucket capacity (``query_capacity``).
       use_kernel: route DISGD scoring through the Pallas kernel.
+      storage: the :class:`~repro.core.storage.StoragePolicy` the states
+        are resident under (hashable, a jit key); the serve leaves decode
+        lazily. None = compute-form states.
 
     Returns:
       ids i32[Q, N]: merged top-N global item ids, -1 padded.
@@ -97,7 +100,8 @@ def grid_topn(states, user_ids, *, algorithm: str = "disgd",
     # jit key), so the per-call cost is identical to the old hard-coded
     # branches.
     leaf = algorithm_lib.get_algorithm(algorithm).make_serve_leaf(
-        top_n=top_n, g=g, u_cap=u_cap, k_nn=k_nn, use_kernel=use_kernel)
+        top_n=top_n, g=g, u_cap=u_cap, k_nn=k_nn, use_kernel=use_kernel,
+        storage=storage)
 
     per_col = jax.vmap(leaf, in_axes=(0, 0))        # over the g columns
     per_grid = jax.vmap(per_col, in_axes=(0, None))  # over the n_i rows

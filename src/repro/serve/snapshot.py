@@ -50,7 +50,6 @@ from __future__ import annotations
 import collections
 import dataclasses
 import threading
-import warnings
 from typing import Any, Callable
 
 import numpy as np
@@ -288,19 +287,6 @@ class SnapshotStore:
         return {"async_rotations": a, "sync_rotations": s,
                 "rotations": a + s,
                 "coalesced": int(self._c_coalesced.value)}
-
-    @property
-    def stats(self):
-        """Deprecated (one release): the old ad-hoc counter dict.
-
-        Reads now come from the metrics registry; use
-        :meth:`stats_snapshot` (same keys) or ``self.metrics`` directly.
-        """
-        warnings.warn(
-            "SnapshotStore.stats is deprecated; use stats_snapshot() or "
-            "the metrics registry (store.metrics) — the dict view will "
-            "be removed next release", DeprecationWarning, stacklevel=2)
-        return self.stats_snapshot()
 
     # -- subscribers ------------------------------------------------------
 

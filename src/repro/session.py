@@ -37,6 +37,7 @@ import numpy as np
 
 from repro.core import algorithm as algorithm_lib
 from repro.core import pipeline as pipeline_lib
+from repro.core import storage as storage_lib
 from repro.core.pipeline import (RestoredCheckpoint, StreamConfig,
                                  StreamResult, restore_stream_checkpoint,
                                  run_stream, save_stream_checkpoint)
@@ -97,6 +98,20 @@ class StreamSession:
         self._detector: Any = None
         self.events_processed = 0
         self.forgets = 0
+        hyper = cfg.resolved_hyper()
+        self._telemetry.set_capacity(hyper.u_cap + hyper.i_cap)
+        self._table_bytes = self.metrics.gauge(
+            "table_bytes", "Exact resident bytes of a live state table",
+            labels=("algorithm", "table", "dtype"))
+        self._update_table_bytes()
+
+    def _update_table_bytes(self) -> None:
+        # Array metadata only (shape x itemsize) — no device sync.
+        for table, (dtype, nbytes) in storage_lib.state_nbytes(
+                self._states).items():
+            self._table_bytes.labels(
+                algorithm=self.cfg.algorithm, table=table,
+                dtype=dtype).set(nbytes)
 
     # -- introspection ----------------------------------------------------
 
@@ -181,6 +196,7 @@ class StreamSession:
             self.store.flush()
             self.store.publish(self._states, self.events_processed,
                                self.forgets)
+            self._update_table_bytes()
 
     # -- serve ------------------------------------------------------------
 
@@ -210,7 +226,8 @@ class StreamSession:
         return save_stream_checkpoint(
             directory, self.events_processed, self._states,
             carry=self._carry, grid=self.cfg.grid,
-            algorithm=self.cfg.algorithm, detector=self._detector)
+            algorithm=self.cfg.algorithm, detector=self._detector,
+            storage=self.cfg.storage)
 
     @classmethod
     def restore(cls, directory: str, cfg: StreamConfig,
@@ -235,7 +252,8 @@ class StreamSession:
     # -- elasticity -------------------------------------------------------
 
     def rescale(self, grid: GridSpec, *, u_cap: int | None = None,
-                i_cap: int | None = None, merge: str = "fresh") -> None:
+                i_cap: int | None = None, merge: str = "fresh",
+                storage=None) -> None:
         """Reshape the live worker grid to ``grid`` (elastic S&R).
 
         Runs the algorithm's regrid hooks (logical extract + rebuild),
@@ -243,18 +261,25 @@ class StreamSession:
         per-worker capacities), publishes the resharded snapshot, and
         retargets the query front-end — queries served right after this
         call already answer from the new grid, before any retraining.
+
+        ``storage`` migrates the resident encoding in the same pass (the
+        logical form is policy-portable): pass a new
+        :class:`~repro.core.storage.StoragePolicy` to re-encode every
+        table while regridding; default keeps the current policy.
         """
         hyper = self.cfg.resolved_hyper()
         new_u = u_cap if u_cap is not None else hyper.u_cap
         new_i = i_cap if i_cap is not None else hyper.i_cap
+        new_storage = storage if storage is not None else self.cfg.storage
         with trace_lib.span("regrid", self.metrics):
             logical = self.algorithm.extract_logical(
-                self._states, self.cfg.grid)
+                self._states, self.cfg.grid, storage=self.cfg.storage)
             self._states = self.algorithm.build_states(
                 logical, src=self.cfg.grid, dst=grid,
-                u_cap=new_u, i_cap=new_i, merge=merge)
+                u_cap=new_u, i_cap=new_i, merge=merge, storage=new_storage)
             self.cfg = dataclasses.replace(
-                self.cfg, grid=grid,
+                self.cfg, grid=grid, storage=new_storage,
                 hyper=hyper._replace(u_cap=new_u, i_cap=new_i))
+            self._telemetry.set_capacity(new_u + new_i)
             self._publish()
-            self._frontend.retarget(grid, u_cap=u_cap)
+            self._frontend.retarget(grid, u_cap=u_cap, storage=new_storage)

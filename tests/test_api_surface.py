@@ -35,12 +35,14 @@ G22 = GridSpec.rect(2, 2)
 EXPECTED_ALL = {
     "Algorithm", "register", "get_algorithm", "registered",
     "StreamConfig", "GridSpec", "ForgettingConfig", "DriftPolicy",
+    "StoragePolicy", "StoragePolicyError",
     "DisgdHyper", "DicsHyper", "BprHyper",
     "StreamSession", "RestoredCheckpoint",
     "run_stream", "StreamResult",
     "save_stream_checkpoint", "restore_stream_checkpoint",
     "PublishPolicy", "ServeConfig", "ServeResponse", "QueryFrontend",
     "SnapshotStore", "StaleSnapshotError", "grid_topn",
+    "Autoscaler", "AutoscalePolicy",
     "MetricsRegistry",
 }
 

@@ -12,7 +12,8 @@ Four contracts under test:
     requeues, forgetting evictions, recall hits/evals, bucket HWM), and
     ``PublishEvent.as_ints`` syncs the device scalars of async runs;
   * the serve layer on the registry — ``stats_snapshot()`` replaces the
-    ad-hoc dicts (which survive one release as deprecated shims), and
+    ad-hoc dicts (the one-release ``.stats`` shims are now gone —
+    pinned as AttributeError), and
     ``ServiceReport.summary()`` computes its percentiles from registry
     histograms, matching the former inline ``np.percentile`` math;
   * spans — nest into "/"-joined stage paths and observe wall time into
@@ -275,7 +276,7 @@ def test_session_folds_telemetry_into_registry():
 # ---------------------------------------------------------------------------
 
 
-def test_store_and_frontend_stats_snapshot_and_deprecated_shim():
+def test_store_and_frontend_stats_snapshot_and_shim_removed():
     users, items = _stream(n=512)
     s = repro.StreamSession(_cfg(backend="scan"))
     s.ingest(users, items)
@@ -285,12 +286,13 @@ def test_store_and_frontend_stats_snapshot_and_deprecated_shim():
     assert st["rotations"] == st["sync_rotations"] + st["async_rotations"]
     fe = s.frontend.stats_snapshot()
     assert fe["queries"] == 8
-    with pytest.deprecated_call():
-        legacy = s.store.stats
-    assert legacy["rotations"] == st["rotations"]
-    with pytest.deprecated_call():
-        legacy_fe = s.frontend.stats
-    assert legacy_fe["queries"] == 8
+    # The one-release deprecation window for the `.stats` dict shims is
+    # over: the attribute is gone, not warning. Pin the removal so the
+    # shim can't silently come back.
+    with pytest.raises(AttributeError):
+        s.store.stats
+    with pytest.raises(AttributeError):
+        s.frontend.stats
 
 
 def test_frontend_latency_and_staleness_histograms_populate():

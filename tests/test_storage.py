@@ -1,0 +1,326 @@
+"""Storage-policy layer (ISSUE 9): resident encodings + the autoscaler.
+
+Five contracts under test:
+
+  * codecs — bit packing and per-row power-of-two quantization
+    round-trip exactly on their domains (bool masks; integer counts
+    within the quantized range), and policy descriptors round-trip;
+  * stream parity — a full stream under a compressed policy produces
+    the *same trained model* as the f32 default: identical recall,
+    identical decoded tables, identical telemetry, on every registered
+    algorithm and on both host and scan backends;
+  * checkpoints — compressed-state checkpoints save -> restore
+    bit-exact in the resident encoding, through identity regrid and a
+    (2,2) -> (1,4) reshape; restoring under a different configured
+    policy fails loudly, naming both policies;
+  * migration — ``session.rescale(storage=...)`` re-encodes live state
+    without changing what it decodes to, and serving keeps answering;
+  * autoscaler — under mixed load on a deliberately undersized grid it
+    grows the grid from the overflow/occupancy telemetry and ends with
+    fewer dropped events than a fixed-grid control, leaves its decision
+    trail in the registry, and shrinks back when traffic goes quiet.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.core import storage as storage_lib
+from repro.core.pipeline import (StreamConfig, restore_stream_checkpoint,
+                                 run_stream, save_stream_checkpoint)
+from repro.core.routing import GridSpec
+from repro.core.algorithm import get_algorithm, registered
+from repro.core.storage import StoragePolicy, StoragePolicyError
+from repro.serve import Autoscaler, AutoscalePolicy, balanced_grid
+
+COMPRESSED = StoragePolicy.compressed()          # lossless: f32 factors
+BF16 = StoragePolicy.compressed(factors="bf16")  # lossy factors
+
+
+def _stream(n=1536, n_users=200, n_items=80, seed=0):
+    rng = np.random.default_rng(seed)
+    return (rng.integers(0, n_users, n).astype(np.int32),
+            rng.integers(0, n_items, n).astype(np.int32))
+
+
+def _cfg(algorithm="disgd", grid=GridSpec.rect(2, 2), backend="host",
+         storage=StoragePolicy(), **kw):
+    kw.setdefault("micro_batch", 256)
+    return StreamConfig(algorithm=algorithm, grid=grid,
+                        backend=backend, storage=storage, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Codecs
+# ---------------------------------------------------------------------------
+
+
+def test_pack_unpack_bits_round_trip():
+    rng = np.random.default_rng(1)
+    for width in (1, 31, 32, 33, 100):
+        bits = jnp.asarray(rng.random((5, width)) < 0.3)
+        packed = storage_lib.pack_bits(bits)
+        assert packed.dtype == jnp.uint32
+        assert packed.shape == (5, storage_lib.packed_width(width))
+        out = storage_lib.unpack_bits(packed, width)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(bits))
+
+
+@pytest.mark.parametrize("dtype", ["uint16", "int8"])
+def test_quantize_rows_exact_on_small_integer_counts(dtype):
+    qmax = 65535 if dtype == "uint16" else 127
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.integers(0, qmax + 1, (6, 17)), jnp.float32)
+    q, scale = storage_lib.quantize_rows(x, dtype)
+    out = storage_lib.dequantize_rows(q, scale)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
+
+
+def test_quantize_rows_scales_rows_beyond_range():
+    x = jnp.asarray([[0.0, 70000.0, 131000.0]], jnp.float32)
+    q, scale = storage_lib.quantize_rows(x, "uint16")
+    out = np.asarray(storage_lib.dequantize_rows(q, scale))
+    # Power-of-two scale 2: even counts survive exactly.
+    np.testing.assert_array_equal(out, np.asarray(x))
+
+
+def test_policy_descriptor_round_trip_and_validation():
+    for policy in (StoragePolicy(), COMPRESSED, BF16,
+                   StoragePolicy(co="int8")):
+        assert StoragePolicy.from_descriptor(policy.describe()) == policy
+    assert StoragePolicy().is_default
+    assert not COMPRESSED.is_default
+    with pytest.raises(ValueError):
+        StoragePolicy(factors="f16")
+    with pytest.raises(ValueError):
+        StoragePolicy(rated="sparse")
+
+
+def test_encode_decode_state_round_trip_per_algorithm():
+    for algorithm in registered():
+        cfg = _cfg(algorithm)
+        states = repro.core.pipeline.init_states(
+            dataclasses.replace(cfg, storage=StoragePolicy()))
+        for policy in (COMPRESSED, BF16):
+            enc = storage_lib.encode_state(states, policy)
+            dec = storage_lib.decode_state(enc, policy)
+            if policy is COMPRESSED:    # lossless preset: exact
+                for a, b in zip(jax.tree.leaves(states),
+                                jax.tree.leaves(dec)):
+                    np.testing.assert_array_equal(np.asarray(a),
+                                                  np.asarray(b))
+            assert storage_lib.total_nbytes(enc) < \
+                storage_lib.total_nbytes(states)
+
+
+# ---------------------------------------------------------------------------
+# Stream parity: compressed policy trains the same model
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["host", "scan"])
+def test_compressed_policy_stream_parity(backend):
+    users, items = _stream()
+    for algorithm in registered():
+        base = run_stream(users, items, _cfg(algorithm, backend=backend))
+        comp = run_stream(users, items,
+                          _cfg(algorithm, backend=backend,
+                               storage=COMPRESSED))
+        assert base.recall.mean() == comp.recall.mean()
+        decoded = storage_lib.decode_state(comp.final_states, COMPRESSED)
+        for a, b in zip(jax.tree.leaves(base.final_states),
+                        jax.tree.leaves(decoded)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # Telemetry folds are policy-independent (occ_hwm included).
+        from repro.obs import telemetry_ints
+        bi, ci = telemetry_ints(base.telemetry), telemetry_ints(comp.telemetry)
+        assert bi == ci
+
+
+def test_serving_matches_across_policies():
+    users, items = _stream()
+    answers = {}
+    for name, policy in (("f32", StoragePolicy()), ("comp", COMPRESSED)):
+        s = repro.StreamSession(_cfg(storage=policy))
+        s.ingest(users, items)
+        r = s.recommend(users[:16], n=5)
+        answers[name] = (np.asarray(r.ids), np.asarray(r.scores))
+    np.testing.assert_array_equal(answers["f32"][0], answers["comp"][0])
+    np.testing.assert_array_equal(answers["f32"][1], answers["comp"][1])
+
+
+# ---------------------------------------------------------------------------
+# Checkpoints
+# ---------------------------------------------------------------------------
+
+
+def _run_states(algorithm, policy, grid=GridSpec.rect(2, 2)):
+    users, items = _stream()
+    cfg = _cfg(algorithm, grid=grid, storage=policy)
+    return run_stream(users, items, cfg).final_states, cfg
+
+
+@pytest.mark.parametrize("policy", [StoragePolicy(), COMPRESSED, BF16],
+                         ids=["f32", "compressed", "bf16"])
+@pytest.mark.parametrize("algorithm", ["disgd", "dics"])
+def test_checkpoint_round_trip_bit_exact_per_policy(tmp_path, algorithm,
+                                                    policy):
+    states, cfg = _run_states(algorithm, policy)
+    save_stream_checkpoint(str(tmp_path), 1536, states, grid=cfg.grid,
+                           algorithm=algorithm, storage=policy)
+    ck = restore_stream_checkpoint(str(tmp_path), cfg)
+    # Bitwise over the *resident* leaves — quantized co + scales and
+    # packed rated bitmaps included, not just their decoded views.
+    for a, b in zip(jax.tree.leaves(states), jax.tree.leaves(ck.states)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("algorithm", ["disgd", "dics"])
+def test_checkpoint_reshape_regrid_preserves_decoded_state(tmp_path,
+                                                           algorithm):
+    states, cfg = _run_states(algorithm, COMPRESSED)
+    save_stream_checkpoint(str(tmp_path), 1536, states, grid=cfg.grid,
+                           algorithm=algorithm, storage=COMPRESSED)
+    wide = dataclasses.replace(cfg, grid=GridSpec.rect(1, 4))
+    ck = restore_stream_checkpoint(str(tmp_path), wide)
+    # The restore-time reshape must equal a live regrid of the same
+    # states, bit for bit in the resident (compressed) encoding.
+    from repro.core import regrid as rg
+    live = rg.regrid(states, cfg.grid, wide.grid,
+                     storage=COMPRESSED)
+    for x, y in zip(jax.tree.leaves(live), jax.tree.leaves(ck.states)):
+        assert x.dtype == y.dtype
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_checkpoint_policy_mismatch_raises_naming_both(tmp_path):
+    states, cfg = _run_states("disgd", COMPRESSED)
+    save_stream_checkpoint(str(tmp_path), 1536, states, grid=cfg.grid,
+                           algorithm="disgd", storage=COMPRESSED)
+    wrong = dataclasses.replace(cfg, storage=StoragePolicy())
+    with pytest.raises(StoragePolicyError) as ei:
+        restore_stream_checkpoint(str(tmp_path), wrong)
+    msg = str(ei.value)
+    assert str(COMPRESSED) in msg and str(StoragePolicy()) in msg
+    assert ei.value.checkpoint_policy == COMPRESSED
+    assert ei.value.config_policy == StoragePolicy()
+
+
+# ---------------------------------------------------------------------------
+# Live migration + capacity observability
+# ---------------------------------------------------------------------------
+
+
+def test_rescale_migrates_storage_policy_in_place():
+    users, items = _stream()
+    s = repro.StreamSession(_cfg())
+    s.ingest(users, items)
+    before = storage_lib.total_nbytes(s.states)
+    answer0 = np.asarray(s.recommend(users[:8], n=5).ids)
+    s.rescale(GridSpec.rect(2, 2), storage=COMPRESSED)
+    assert s.cfg.storage == COMPRESSED
+    assert storage_lib.total_nbytes(s.states) < before
+    # The compressed session keeps serving the same model.
+    np.testing.assert_array_equal(
+        np.asarray(s.recommend(users[:8], n=5).ids), answer0)
+    # table_bytes gauges track the resident encoding exactly.
+    fam = s.metrics.get("table_bytes")
+    by_table = {lab["table"]: g.value for lab, g in fam.series()
+                if lab["algorithm"] == "disgd"}
+    for table, (dtype, nbytes) in storage_lib.state_nbytes(s.states).items():
+        assert by_table[table] == nbytes
+
+
+def test_occupancy_fraction_gauges_populate():
+    users, items = _stream()
+    s = repro.StreamSession(_cfg(backend="scan"))
+    s.ingest(users, items)
+    fam = s.metrics.get("bucket_occupancy_frac")
+    vals = [g.value for _, g in fam.series()]
+    assert len(vals) == s.grid.n_c
+    assert all(0.0 <= v <= 1.0 for v in vals) and max(vals) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# Autoscaler
+# ---------------------------------------------------------------------------
+
+
+def test_balanced_grid_ladder():
+    assert [(balanced_grid(n).n_i, balanced_grid(n).g)
+            for n in (1, 2, 4, 8, 16)] == \
+        [(1, 1), (2, 1), (2, 2), (4, 2), (4, 4)]
+    assert balanced_grid(3).n_c == 4    # rounds up to the next rung
+
+
+def _overloaded_run(autoscale: bool):
+    """Mixed ingest+query load against a deliberately undersized grid:
+    one worker, quartered dispatch capacity, a tiny engine re-queue —
+    overflow past it is dropped, the pressure the scaler must relieve."""
+    rng = np.random.default_rng(7)
+    cfg = StreamConfig(algorithm="disgd", grid=GridSpec.rect(1, 1),
+                       micro_batch=64, capacity_factor=0.25,
+                       carry_slots=8, backend="scan")
+    s = repro.StreamSession(cfg)
+    scaler = (Autoscaler(s, AutoscalePolicy(max_workers=8, cooldown=0))
+              if autoscale else None)
+    actions, dropped = [], 0
+    for _ in range(8):
+        u = rng.integers(0, 400, 512).astype(np.int32)
+        i = rng.integers(0, 160, 512).astype(np.int32)
+        dropped += s.ingest(u, i).dropped
+        s.recommend(u[:8])
+        if scaler is not None:
+            actions.append(scaler.step())
+    return s, scaler, actions, dropped
+
+
+def test_autoscaler_relieves_undersized_grid():
+    s, _, actions, dropped = _overloaded_run(autoscale=True)
+    _, _, _, dropped_fixed = _overloaded_run(autoscale=False)
+    assert "grow" in actions
+    assert s.grid.n_c > 1
+    assert dropped < dropped_fixed
+    # Decision trail: every step accounted for, in the same registry
+    # that carried the trigger signals.
+    fam = s.metrics.get("autoscaler_decisions_total")
+    trail = {lab["action"]: c.value for lab, c in fam.series()}
+    assert sum(trail.values()) == len(actions)
+    assert trail["grow"] == actions.count("grow")
+    assert s.metrics.get("autoscaler_workers").value == s.grid.n_c
+
+
+def test_autoscaler_shrinks_when_idle():
+    users, items = _stream(n=256, n_users=40, n_items=16)
+    cfg = _cfg(grid=GridSpec.rect(2, 2), backend="scan")
+    s = repro.StreamSession(cfg)
+    scaler = Autoscaler(s, AutoscalePolicy(min_workers=1, cooldown=0,
+                                           grow_occupancy_frac=1.0,
+                                           shrink_occupancy_frac=0.99))
+    s.ingest(users, items)     # light, overflow-free traffic
+    assert scaler.step() == "shrink"
+    assert s.grid.n_c == 2
+
+
+def test_autoscaler_respects_cooldown_and_bounds():
+    users, items = _stream(n=256)
+    s = repro.StreamSession(_cfg(grid=GridSpec.rect(1, 1), backend="scan",
+                                 micro_batch=64, capacity_factor=0.25,
+                                 carry_slots=8))
+    scaler = Autoscaler(s, AutoscalePolicy(max_workers=2, cooldown=2))
+    s.ingest(users, items)
+    assert scaler.step() == "grow"
+    assert s.grid.n_c == 2
+    # Cooldown holds even if signals stay hot; max_workers caps growth.
+    s.ingest(users, items)
+    assert scaler.step() == "hold"
+    s.ingest(users, items)
+    assert scaler.step() == "hold"
+    s.ingest(users, items)
+    assert scaler.step() in ("hold", "shrink")   # at cap: never "grow"
+    assert s.grid.n_c <= 2
