@@ -1,0 +1,261 @@
+"""Adaptive ensemble vs best single algorithm under concept drift.
+
+Claim under test: under non-stationary streams, an online-weighted
+ensemble of the registered algorithms holds the recall of whichever
+single member is best *right now* — without knowing in advance which
+one that is — at a bounded throughput overhead.
+
+For each seeded drift scenario (``repro.drift.scenarios``), one
+:class:`~repro.ensemble.EnsembleSession` trains every member on the
+same stream in segments; between segments the prequential weigher
+re-weighs members from their scan-carry recall heads, and any member's
+drift flag flattens the weights (exploration re-opens). Because member
+training inside the ensemble is EXACTLY a standalone run of that member
+(same config, same stream, independent states), each member's own
+recall bits double as the single-algorithm baseline — best-single is
+measured from the same run, not re-trained.
+
+Reported per scenario: windowed recall of the blended ensemble (expected
+recall of the weight-mixture, weights frozen per segment — prequential:
+each segment is scored with the weights chosen *before* it), of the
+hard-switch ensemble, and of the best/worst single member; drift flags,
+exploration resets, and combined events/s vs best single.
+
+``smoke_rows()`` is the CI subset — the recurring-drift scenario (the
+one where no fixed single choice can win both phases) — gated on
+"ensemble windowed recall >= best single member − 1% absolute" and on
+the drift flag demonstrably re-opening exploration (resets >= 1).
+
+  PYTHONPATH=src python -m benchmarks.bench_ensemble            # full sweep
+  PYTHONPATH=src python -m benchmarks.bench_ensemble --smoke    # CI row
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+EVENTS = 8192
+# 32 segments = a weigher update every 256 events; the mixture needs
+# that cadence to re-track the leading member between recurring phases.
+SEGMENTS = 32
+WINDOW = 400
+SMOKE_MEMBERS = ("dics", "disgd")
+SMOKE_SCENARIO = "recurring"
+# Gate: ensemble windowed recall >= best single member - 1% absolute.
+MARGIN = 0.01
+
+
+def _cfg(algorithm: str, micro_batch: int = 256):
+    from repro.core.algorithm import get_algorithm
+    from repro.core.pipeline import StreamConfig
+    from repro.core.routing import GridSpec
+    from repro.drift import DriftPolicy
+
+    hyper = get_algorithm(algorithm).default_hyper()._replace(
+        u_cap=256, i_cap=64)
+    return StreamConfig(algorithm=algorithm, grid=GridSpec(2),
+                        micro_batch=micro_batch, hyper=hyper,
+                        backend="scan", drift=DriftPolicy())
+
+
+def _segment_bounds(n: int, segments: int):
+    edges = np.linspace(0, n, segments + 1).astype(int)
+    return [(int(a), int(b)) for a, b in zip(edges[:-1], edges[1:])
+            if b > a]
+
+
+def _run(scenario: str, members, events: int, seed: int = 0,
+         segments: int = SEGMENTS):
+    """One ensemble run; returns per-member bits + blended/switch bits."""
+    from repro.drift import make_scenario
+    from repro.ensemble import EnsembleSession
+
+    sc = make_scenario(scenario, events=events, seed=seed)
+    ens = EnsembleSession([_cfg(m) for m in members])
+    names = list(ens.member_names)
+    member_bits = {m: [] for m in names}
+    blended_bits, switch_bits = [], []
+    walls = {m: 0.0 for m in names}
+    drift_fires = 0
+
+    for lo, hi in _segment_bounds(len(sc.users), segments):
+        # Prequential: this segment is scored with the weights chosen
+        # BEFORE it (from everything seen so far).
+        w_prev = ens.weights
+        r = ens.ingest(sc.users[lo:hi], sc.items[lo:hi])
+        seg = {}
+        for m in names:
+            res = r.members[m]
+            assert res.dropped == 0, f"ensemble bench overflowed ({m})"
+            bits = res.recall.bits()
+            seg[m] = bits[~np.isnan(bits)]
+            member_bits[m].append(seg[m])
+            walls[m] += res.wall_seconds
+        drift_fires += int(r.drift)
+        # All members evaluate the same events (same dispatch), so the
+        # bit streams align 1:1 and mix per event.
+        k = min(len(seg[m]) for m in names)
+        blended_bits.append(sum(w_prev[m] * seg[m][:k] for m in names))
+        best = max(names, key=lambda m: (w_prev[m], m))
+        switch_bits.append(seg[best][:k])
+
+    return {
+        "scenario": sc,
+        "ensemble": ens,
+        "member_bits": {m: np.concatenate(member_bits[m]) for m in names},
+        "blended_bits": np.concatenate(blended_bits),
+        "switch_bits": np.concatenate(switch_bits),
+        "walls": walls,
+        "drift_fires": drift_fires,
+        "resets": ens.exploration_resets,
+    }
+
+
+def _windowed(bits: np.ndarray, window: int = WINDOW) -> float:
+    from repro.core.evaluator import moving_average
+
+    return float(moving_average(bits, window).mean()) if bits.size else float("nan")
+
+
+def _summarize(run, events: int) -> dict:
+    names = list(run["member_bits"])
+    singles = {m: _windowed(run["member_bits"][m]) for m in names}
+    best = max(names, key=lambda m: singles[m])
+    worst = min(names, key=lambda m: singles[m])
+    total_wall = sum(run["walls"].values())
+    return {
+        "members": names,
+        "recall_blend": _windowed(run["blended_bits"]),
+        "recall_switch": _windowed(run["switch_bits"]),
+        "best_single": best,
+        "best_single_recall": singles[best],
+        "worst_single_recall": singles[worst],
+        "singles": singles,
+        "drift_fires": run["drift_fires"],
+        "exploration_resets": run["resets"],
+        "events_per_sec": events / max(total_wall, 1e-9),
+        "best_single_events_per_sec": events / max(run["walls"][best], 1e-9),
+        "overhead_x": total_wall / max(run["walls"][best], 1e-9),
+        "final_weights": {m: round(w, 4)
+                          for m, w in run["ensemble"].weights.items()},
+    }
+
+
+def rows(events: int = EVENTS):
+    from repro.core.algorithm import registered
+    from repro.drift import list_scenarios
+
+    members = tuple(sorted(registered()))
+    out = []
+    for scenario in list_scenarios():
+        s = _summarize(_run(scenario, members, events), events)
+        margin = s["recall_blend"] - s["best_single_recall"]
+        out.append({
+            "name": f"ensemble/{scenario}/blend",
+            "us_per_call": 1e6 / max(s["events_per_sec"], 1e-9),
+            "derived": (
+                f"blend={s['recall_blend']:.3f}"
+                f" switch={s['recall_switch']:.3f}"
+                f" best={s['best_single']}:{s['best_single_recall']:.3f}"
+                f" margin={margin:+.3f}"
+                f" resets={s['exploration_resets']}"
+                f" overhead={s['overhead_x']:.1f}x"
+                f" events/s={s['events_per_sec']:,.0f}"
+            ),
+        })
+    return out
+
+
+def smoke_rows(events: int = EVENTS):
+    """CI subset: {DICS, DISGD} on the recurring-drift scenario.
+
+    Two acceptance bars ride in the artifact row: the blended ensemble's
+    windowed recall must hold within ``MARGIN`` (1% absolute) of the
+    best single member, and the members' drift detectors must have
+    re-opened exploration at least once (the weight trail in the metrics
+    registry is the evidence — ``ensemble_member_weight_trail``).
+    """
+    run = _run(SMOKE_SCENARIO, SMOKE_MEMBERS, events)
+    s = _summarize(run, events)
+    margin = s["recall_blend"] - s["best_single_recall"]
+    row = {
+        "name": f"ensemble/{SMOKE_SCENARIO}/blend",
+        "members": list(s["members"]),
+        "recall_blend": s["recall_blend"],
+        "recall_switch": s["recall_switch"],
+        "best_single": s["best_single"],
+        "best_single_recall": s["best_single_recall"],
+        "worst_single_recall": s["worst_single_recall"],
+        "margin_vs_best": margin,
+        "drift_fires": s["drift_fires"],
+        "exploration_resets": s["exploration_resets"],
+        "events_per_sec": s["events_per_sec"],
+        "best_single_events_per_sec": s["best_single_events_per_sec"],
+        "overhead_x": s["overhead_x"],
+        "final_weights": s["final_weights"],
+        "holds_best_single": bool(margin >= -MARGIN),
+        "explored_on_drift": bool(s["exploration_resets"] >= 1),
+    }
+    singles = [{
+        "name": f"ensemble/{SMOKE_SCENARIO}/single:{m}",
+        "recall": s["singles"][m],
+        "events_per_sec": events / max(run["walls"][m], 1e-9),
+    } for m in s["members"]]
+    return [row] + singles
+
+
+def smoke(out_path: str = "BENCH_smoke.json",
+          events: int = EVENTS) -> int:
+    """Append ensemble rows to the CI artifact; returns exit status."""
+    from benchmarks.common import smoke_update
+
+    t0 = time.perf_counter()
+    new_rows = smoke_rows(events)
+    smoke_update(out_path, "ensemble/", new_rows,
+                 wall_seconds=time.perf_counter() - t0)
+    head = new_rows[0]
+    print(f"{head['name']},blend={head['recall_blend']:.3f},"
+          f"switch={head['recall_switch']:.3f},"
+          f"best={head['best_single']}:{head['best_single_recall']:.3f},"
+          f"margin={head['margin_vs_best']:+.3f},"
+          f"resets={head['exploration_resets']},"
+          f"overhead={head['overhead_x']:.1f}x,"
+          f"events/s={head['events_per_sec']:,.0f}")
+    for r in new_rows[1:]:
+        print(f"{r['name']},recall={r['recall']:.3f},"
+              f"events/s={r['events_per_sec']:,.0f}")
+    print(f"# appended ensemble rows to {out_path}")
+    status = 0
+    if not head["holds_best_single"]:
+        print(f"ensemble smoke REGRESSION: blended recall "
+              f"{head['recall_blend']:.3f} fell more than {MARGIN:.0%} "
+              f"below the best single member "
+              f"({head['best_single']}={head['best_single_recall']:.3f})")
+        status = 1
+    if not head["explored_on_drift"]:
+        print("ensemble smoke REGRESSION: no drift flag re-opened "
+              "exploration (exploration_resets == 0) on the recurring "
+              "scenario")
+        status = 1
+    return status
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: append ensemble rows to the artifact")
+    ap.add_argument("--smoke-out", default="BENCH_smoke.json")
+    ap.add_argument("--events", type=int, default=EVENTS)
+    args = ap.parse_args()
+    if args.smoke:
+        raise SystemExit(smoke(args.smoke_out, args.events))
+    print("name,us_per_call,derived")
+    for row in rows(args.events):
+        print(f"{row['name']},{row['us_per_call']:.2f},{row['derived']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,6 +1,16 @@
-"""Render reports/dryrun_*.json into the EXPERIMENTS.md tables.
+"""Render benchmark JSON artifacts into markdown tables.
+
+Two input shapes, auto-detected per file:
+
+  * a ``reports/dryrun_*.json`` list — the EXPERIMENTS.md dryrun /
+    roofline / skip tables;
+  * a ``BENCH_smoke.json`` dict (``"rows"`` key) — the CI smoke
+    artifact, rendered one table per row-name prefix (``throughput/``,
+    ``kernels/``, ``ensemble/``, ...), with the ensemble rows getting
+    their own blend-vs-best-single columns.
 
   PYTHONPATH=src python -m benchmarks.report_md reports/dryrun_16x16.json
+  PYTHONPATH=src python -m benchmarks.report_md BENCH_smoke.json
 """
 
 from __future__ import annotations
@@ -79,10 +89,75 @@ def skip_table(reports):
     return "\n".join(rows)
 
 
+def _fmt_num(x):
+    if x is None:
+        return "-"
+    if isinstance(x, bool):
+        return "PASS" if x else "FAIL"
+    if isinstance(x, float):
+        return f"{x:,.0f}" if abs(x) >= 1000 else f"{x:.3f}"
+    return str(x)
+
+
+def ensemble_table(rows):
+    """``ensemble/`` rows: blend vs best single, plus per-member rows."""
+    out = ["| row | blend | switch | best single | margin | resets | "
+           "overhead | events/s | gates |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if "recall_blend" in r:
+            gates = ("holds=" + _fmt_num(r.get("holds_best_single")) +
+                     " explored=" + _fmt_num(r.get("explored_on_drift")))
+            best = (f"{r.get('best_single', '-')}:"
+                    f"{r.get('best_single_recall', float('nan')):.3f}")
+            out.append(
+                f"| {r['name']} | {r['recall_blend']:.3f} "
+                f"| {r.get('recall_switch', float('nan')):.3f} | {best} "
+                f"| {r.get('margin_vs_best', 0.0):+.3f} "
+                f"| {r.get('exploration_resets', '-')} "
+                f"| {r.get('overhead_x', float('nan')):.1f}x "
+                f"| {r.get('events_per_sec', 0.0):,.0f} | {gates} |")
+        else:   # per-member single-baseline row
+            out.append(
+                f"| {r['name']} | {r.get('recall', float('nan')):.3f} "
+                f"| - | - | - | - | - "
+                f"| {r.get('events_per_sec', 0.0):,.0f} | - |")
+    return "\n".join(out)
+
+
+def smoke_tables(payload):
+    """One markdown table per row-name prefix of a smoke artifact."""
+    groups: dict[str, list] = {}
+    for r in payload.get("rows", []):
+        prefix = r["name"].split("/", 1)[0] if "/" in r["name"] else "misc"
+        groups.setdefault(prefix, []).append(r)
+    chunks = []
+    for prefix in sorted(groups):
+        rows = groups[prefix]
+        chunks.append(f"#### {prefix}\n")
+        if prefix == "ensemble":
+            chunks.append(ensemble_table(rows))
+            continue
+        # Generic: union of scalar keys, name first, stable order.
+        keys = ["name"]
+        for r in rows:
+            keys += [k for k in r if k not in keys
+                     and isinstance(r[k], (int, float, str, bool, type(None)))]
+        chunks.append("| " + " | ".join(keys) + " |")
+        chunks.append("|" + "---|" * len(keys))
+        for r in rows:
+            chunks.append(
+                "| " + " | ".join(_fmt_num(r.get(k)) for k in keys) + " |")
+    return "\n".join(chunks)
+
+
 def main():
     for path in sys.argv[1:]:
         reports = json.load(open(path))
         print(f"\n### {path}\n")
+        if isinstance(reports, dict) and "rows" in reports:
+            print(smoke_tables(reports))
+            continue
         print(dryrun_table(reports))
         print("\n#### Roofline (per chip, per step)\n")
         print(roofline_table(reports))

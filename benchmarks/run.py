@@ -14,20 +14,23 @@ import sys
 import time
 
 SUITES = ("kernels", "recall", "memory", "forgetting", "throughput", "skew",
-          "serve", "service", "regrid", "drift", "obs")
+          "serve", "service", "regrid", "drift", "obs", "ensemble")
 
 
 def smoke(out_path: str = "BENCH_smoke.json", events: int = 4096) -> int:
     """Tiny host-vs-engine throughput check emitted as a JSON artifact so
     CI runs leave a perf trajectory behind. Also appends the kernel-level
     ``kernels/`` rows (fused ops + tuned-tile engine configs) and the
-    ``memory/`` capacity rows (``bench_memory.smoke``); the combined
-    return carries every gate — kernel floors and the compressed-policy
-    capacity/recall floor — enforced separately from these end-to-end
+    ``memory/`` capacity rows (``bench_memory.smoke``) and the
+    ``ensemble/`` rows (``bench_ensemble.smoke``); the combined return
+    carries every gate — kernel floors, the compressed-policy
+    capacity/recall floor, and the ensemble hold-best-single /
+    explored-on-drift gates — enforced separately from these end-to-end
     rows."""
     import jax
 
-    from benchmarks import bench_kernels, bench_memory, bench_throughput
+    from benchmarks import (bench_ensemble, bench_kernels, bench_memory,
+                            bench_throughput)
     from benchmarks.common import SMOKE_SCHEMA_VERSION
 
     t0 = time.perf_counter()
@@ -55,7 +58,8 @@ def smoke(out_path: str = "BENCH_smoke.json", events: int = 4096) -> int:
     print(f"# wrote {out_path} in {payload['total_seconds']:.1f}s",
           file=sys.stderr)
     status = bench_kernels.smoke(out_path)
-    return bench_memory.smoke(out_path, events=events) or status
+    status = bench_memory.smoke(out_path, events=events) or status
+    return bench_ensemble.smoke(out_path) or status
 
 
 def main() -> None:
@@ -72,10 +76,10 @@ def main() -> None:
         raise SystemExit(smoke(args.smoke_out))
     only = set(args.only.split(",")) if args.only else set(SUITES)
 
-    from benchmarks import (bench_drift, bench_forgetting, bench_kernels,
-                            bench_memory, bench_obs, bench_recall,
-                            bench_regrid, bench_serve, bench_service,
-                            bench_skew, bench_throughput)
+    from benchmarks import (bench_drift, bench_ensemble, bench_forgetting,
+                            bench_kernels, bench_memory, bench_obs,
+                            bench_recall, bench_regrid, bench_serve,
+                            bench_service, bench_skew, bench_throughput)
 
     scale = 4 if args.fast else 1
     plans = {
@@ -90,6 +94,7 @@ def main() -> None:
         "regrid": lambda: bench_regrid.rows(8_192 // scale),
         "drift": lambda: bench_drift.rows(32_768 // scale),
         "obs": lambda: bench_obs.rows(8_192 // scale),
+        "ensemble": lambda: bench_ensemble.rows(8_192 // scale),
     }
 
     print("name,us_per_call,derived")

@@ -1,10 +1,10 @@
 """Serve a small model with batched requests: prefill + streaming decode.
 
-  PYTHONPATH=src python examples/serve_decode.py [--arch h2o_danube_1p8b]
-"""
+Install the package first (no sys.path tricks needed):
 
-import sys
-sys.path.insert(0, "src")
+  pip install -e .
+  python examples/serve_decode.py [--arch h2o_danube_1p8b]
+"""
 
 import argparse
 

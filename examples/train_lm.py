@@ -3,11 +3,11 @@
 Uses the launcher's real code path (sharding rules, AdamW, schedule,
 checkpointing) on a reduced stablelm-family config; loss must decrease.
 
-  PYTHONPATH=src python examples/train_lm.py [--arch stablelm_3b] [--steps 200]
-"""
+Install the package first (no sys.path tricks needed):
 
-import sys
-sys.path.insert(0, "src")
+  pip install -e .
+  python examples/train_lm.py [--arch stablelm_3b] [--steps 200]
+"""
 
 import argparse
 

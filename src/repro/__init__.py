@@ -20,6 +20,11 @@ This is the supported import surface (pinned by
   * **Elasticity** — :class:`Autoscaler` + :class:`AutoscalePolicy`:
     drive ``StreamSession.rescale`` from the session's own overflow /
     occupancy / staleness telemetry.
+  * **Ensemble runtime** — :class:`EnsembleSession` trains any >= 2
+    registered algorithms concurrently on one stream and serves a
+    weighted rank fusion (or hard switch) of their top-N lists, with
+    :class:`WeigherConfig` tuning the exp3-style prequential weigher
+    and :class:`BlendPolicy` the fusion mode.
   * **Streaming / serving primitives** — for power users composing the
     layers directly.
   * **Observability** — :class:`MetricsRegistry`: one registry of typed,
@@ -44,7 +49,9 @@ from repro.core.pipeline import (RestoredCheckpoint, StreamConfig,
 from repro.core.routing import GridSpec
 from repro.core.storage import StoragePolicy, StoragePolicyError
 from repro.drift import DriftPolicy
-from repro.obs import MetricsRegistry
+from repro.ensemble import (BlendPolicy, EnsembleResult, EnsembleSession,
+                            WeigherConfig)
+from repro.obs import MetricsRegistry, ScopedRegistry
 from repro.serve import (AutoscalePolicy, Autoscaler, PublishPolicy,
                          QueryFrontend, ServeConfig, ServeResponse,
                          SnapshotStore, StaleSnapshotError, grid_topn)
@@ -89,6 +96,12 @@ __all__ = [
     # elasticity
     "Autoscaler",
     "AutoscalePolicy",
+    # ensemble runtime
+    "EnsembleSession",
+    "EnsembleResult",
+    "WeigherConfig",
+    "BlendPolicy",
     # observability
     "MetricsRegistry",
+    "ScopedRegistry",
 ]

@@ -195,6 +195,14 @@ def _make_batch_step(cfg, worker_fn):
 
         ev_u = jnp.where(buckets >= 0, bu[jnp.clip(buckets, 0, None)], -1)
         ev_i = jnp.where(buckets >= 0, bi[jnp.clip(buckets, 0, None)], -1)
+        # Precision@N denominator, measured on the bucket-start states
+        # (before this batch trains) — the same expression the host loop
+        # folds, so the two backends stay bit-identical.
+        list_len = 0
+        if tel_on:
+            list_len = telemetry_lib.effective_list_len(
+                states, ev_u.astype(jnp.int32),
+                top_n=cfg.resolved_hyper().top_n, g=g, storage=cfg.storage)
         states, hits, evaluated = worker_fn(
             states, ev_u.astype(jnp.int32), ev_i.astype(jnp.int32)
         )
@@ -263,7 +271,7 @@ def _make_batch_step(cfg, worker_fn):
             tel = telemetry_lib.telemetry_batch_update(
                 tel, kept=kept_n, overflow=n_overflow, carry_cap=carry_cap,
                 evicted=evicted, hits=hits, evaluated=evaluated, load=load,
-                occupancy=u_o + i_o)
+                occupancy=u_o + i_o, list_len=list_len)
 
         carry = (states, cu_new, ci_new, since, processed, dropped, forgets,
                  det, boost, tel)
@@ -360,7 +368,11 @@ class PublishEvent(NamedTuple):
     (:class:`repro.obs.telemetry.TelemetryState`, cumulative for the
     run) — always device arrays in both modes; ``None`` when
     ``StreamConfig.telemetry`` is off. The host reference loop hands the
-    equivalent host-folded vector (bit-identical values).
+    equivalent host-folded vector (bit-identical values). The recall head
+    (``hits``/``evals``) and the precision@N head (``hits``/``list_len``)
+    both ride here, so boundary subscribers (the ensemble weigher,
+    ``TelemetryFolder``) read ranking quality without a device sync on
+    the trainer.
     """
 
     states: Any

@@ -124,6 +124,23 @@ class StreamResult:
     def throughput(self) -> float:
         return self.events_processed / max(self.wall_seconds, 1e-9)
 
+    @property
+    def precision_at_n(self) -> float:
+        """Micro-averaged prequential precision@N for this segment.
+
+        Hits over summed *effective* list length (``min(top_n, live
+        unrated candidates)`` per evaluated event — short lists while
+        tables warm up don't get charged for slots they could not fill).
+        Both terms ride the scan carry
+        (:class:`repro.obs.telemetry.TelemetryState`), bit-identical
+        between host and scan backends. ``nan`` when telemetry is off or
+        nothing was evaluated.
+        """
+        if self.telemetry is None:
+            return float("nan")
+        denom = int(self.telemetry.list_len)
+        return int(self.telemetry.hits) / denom if denom else float("nan")
+
     def occupancy_summary(self):
         """Mean per-worker live entries at end of stream (paper's metric)."""
         u = self.user_occupancy[-1][1] if self.user_occupancy else np.zeros(1)
@@ -264,13 +281,18 @@ def run_stream(users: np.ndarray, items: np.ndarray, cfg: StreamConfig,
     # micro-batch here — bit-identical values by construction. The host
     # re-queue is unbounded, hence HOST_CARRY_CAP (nothing drops at the
     # dispatch boundary).
-    tel = tel_step = occ_total = None
+    tel = tel_step = occ_total = list_fn = None
     if cfg.telemetry:
         from repro.obs import telemetry as telemetry_lib
 
         tel = telemetry_lib.telemetry_init(grid.n_c)
         tel_step = jax.jit(partial(telemetry_lib.telemetry_batch_update,
                                    carry_cap=telemetry_lib.HOST_CARRY_CAP))
+        # Precision@N denominator on bucket-start states — the same
+        # expression the engine folds in-scan (bit-parity contract).
+        list_fn = jax.jit(partial(telemetry_lib.effective_list_len,
+                                  top_n=cfg.resolved_hyper().top_n,
+                                  g=grid.g, storage=cfg.storage))
         occ_total = jax.jit(
             lambda s: sum(jnp.sum(o) for o in
                           jax.vmap(lambda w: state_lib.occupancy(w.tables))(s)
@@ -303,7 +325,8 @@ def run_stream(users: np.ndarray, items: np.ndarray, cfg: StreamConfig,
         jax.block_until_ready(tel_step(
             tel, kept=zero, overflow=zero, evicted=zero, hits=dummy_b,
             evaluated=dummy_b, load=jnp.zeros((grid.n_c,), jnp.int32),
-            occupancy=jnp.zeros((grid.n_c,), jnp.int32)))
+            occupancy=jnp.zeros((grid.n_c,), jnp.int32), list_len=zero))
+        jax.block_until_ready(list_fn(states, dummy))
         jax.block_until_ready(occ_total(states))
 
     t0 = time.perf_counter()
@@ -341,8 +364,12 @@ def run_stream(users: np.ndarray, items: np.ndarray, cfg: StreamConfig,
 
         ev_u = np.where(buckets >= 0, bu[np.clip(buckets, 0, None)], -1)
         ev_i = np.where(buckets >= 0, bi[np.clip(buckets, 0, None)], -1)
+        ev_u_j = jnp.asarray(ev_u, jnp.int32)
+        # Precision@N denominator from the pre-step states (the engine
+        # computes it at the same point inside its scan body).
+        lens = list_fn(states, ev_u_j) if list_fn is not None else None
         states, hits, evaluated = step(
-            states, jnp.asarray(ev_u, jnp.int32), jnp.asarray(ev_i, jnp.int32)
+            states, ev_u_j, jnp.asarray(ev_i, jnp.int32)
         )
 
         # Stream-order scatter needs bucket indices relative to this batch.
@@ -378,7 +405,7 @@ def run_stream(users: np.ndarray, items: np.ndarray, cfg: StreamConfig,
                            evicted=jnp.asarray(evicted, jnp.int32),
                            hits=hits, evaluated=evaluated,
                            load=jnp.asarray(load, jnp.int32),
-                           occupancy=u_o + i_o)
+                           occupancy=u_o + i_o, list_len=lens)
 
         if publish_every and on_publish is not None and (b + 1) % publish_every == 0:
             # Sync in-flight device work (async forgetting dispatch) before

@@ -1,0 +1,29 @@
+"""Adaptive ensemble runtime over the ``Algorithm`` registry.
+
+Trains several registered algorithms ({DISGD, DICS, BPR-MF}, or any
+subset) concurrently on one event stream and serves a blended or
+hard-switched per-user top-N from their snapshot planes:
+
+  * ``members`` — :class:`EnsembleSession`: the fan-out facade (ingest /
+    recommend / checkpoint / restore / rescale over N member
+    ``StreamSession``\\ s sharing one metrics registry);
+  * ``weights`` — the on-device prequential weigher (exp3/softmax over
+    each member's scan-carry recall or precision@N head; drift flags
+    re-open exploration);
+  * ``blend``   — serve-plane rank fusion (weighted RRF / Borda with the
+    deterministic score-desc/id-asc tie-break) and switch routing.
+"""
+
+from repro.ensemble.blend import BlendPolicy, fuse_topn, switch_choice
+from repro.ensemble.members import (ENSEMBLE_FORMAT, EnsembleResult,
+                                    EnsembleSession)
+from repro.ensemble.weights import (WeigherConfig, WeigherState,
+                                    popularity_stratum, weigher_init,
+                                    weigher_update)
+
+__all__ = [
+    "EnsembleSession", "EnsembleResult", "ENSEMBLE_FORMAT",
+    "WeigherConfig", "WeigherState", "weigher_init", "weigher_update",
+    "popularity_stratum",
+    "BlendPolicy", "fuse_topn", "switch_choice",
+]

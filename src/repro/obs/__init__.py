@@ -15,17 +15,19 @@ Three planes, one package:
 
 from repro.obs.metrics import (Counter, Gauge, Histogram,
                                HistogramSnapshot, MetricsRegistry,
-                               default_buckets, merge_histograms)
+                               ScopedRegistry, default_buckets,
+                               merge_histograms)
 from repro.obs.telemetry import (HOST_CARRY_CAP, TelemetryFolder,
-                                 TelemetryState, telemetry_batch_update,
-                                 telemetry_init, telemetry_ints,
-                                 telemetry_update)
+                                 TelemetryState, effective_list_len,
+                                 telemetry_batch_update, telemetry_init,
+                                 telemetry_ints, telemetry_update)
 from repro.obs.trace import current_span, profile, span
 
 __all__ = [
-    "MetricsRegistry", "Counter", "Gauge", "Histogram",
+    "MetricsRegistry", "ScopedRegistry", "Counter", "Gauge", "Histogram",
     "HistogramSnapshot", "default_buckets", "merge_histograms",
     "TelemetryState", "TelemetryFolder", "telemetry_init",
     "telemetry_update", "telemetry_batch_update", "telemetry_ints",
-    "HOST_CARRY_CAP", "span", "profile", "current_span",
+    "effective_list_len", "HOST_CARRY_CAP", "span", "profile",
+    "current_span",
 ]

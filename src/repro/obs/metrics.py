@@ -41,8 +41,9 @@ from typing import Any, Iterable
 
 import numpy as np
 
-__all__ = ["MetricsRegistry", "Counter", "Gauge", "Histogram",
-           "HistogramSnapshot", "default_buckets", "merge_histograms"]
+__all__ = ["MetricsRegistry", "ScopedRegistry", "Counter", "Gauge",
+           "Histogram", "HistogramSnapshot", "default_buckets",
+           "merge_histograms"]
 
 
 def default_buckets(lo_exp: int = -6, hi_exp: int = 4,
@@ -417,6 +418,122 @@ class MetricsRegistry:
         with open(path, "w") as f:
             f.write(self.to_prometheus())
         return path
+
+
+class _ScopedFamily:
+    """A :class:`MetricFamily` view with scope labels pre-bound.
+
+    ``labels(**extra)`` merges the scope into the child lookup;
+    the unlabeled convenience API (``inc`` / ``set`` / ``observe`` /
+    ``value`` / ...) resolves to the scope-only child — the analogue of
+    ``MetricFamily._default`` for a family whose only labels are the
+    scope's. ``series()`` filters to this scope's children, so consumers
+    that enumerate label series (e.g. the autoscaler reading per-bucket
+    occupancy gauges) see only their own slice of a shared family.
+    """
+
+    __slots__ = ("_fam", "_scope")
+
+    def __init__(self, fam: MetricFamily, scope: dict[str, str]):
+        self._fam = fam
+        self._scope = scope
+
+    def labels(self, **labels):
+        return self._fam.labels(**self._scope, **labels)
+
+    def series(self) -> list[tuple[dict[str, str], Any]]:
+        return [(labels, child) for labels, child in self._fam.series()
+                if all(labels.get(k) == v for k, v in self._scope.items())]
+
+    def _default(self):
+        return self._fam.labels(**self._scope)
+
+    def inc(self, n=1):
+        return self._default().inc(n)
+
+    def set(self, v):
+        return self._default().set(v)
+
+    def set_max(self, v):
+        return self._default().set_max(v)
+
+    def observe(self, v):
+        return self._default().observe(v)
+
+    def snapshot(self):
+        return self._default().snapshot()
+
+    def percentile(self, q):
+        return self._default().percentile(q)
+
+    @property
+    def value(self):
+        return self._default().value
+
+    def __getattr__(self, name):   # name / kind / help / label_names ...
+        return getattr(self._fam, name)
+
+
+class ScopedRegistry:
+    """A constant-label view over a shared :class:`MetricsRegistry`.
+
+    ``ScopedRegistry(base, member="dics")`` hands out instruments whose
+    families carry the scope's label(s) in addition to their own, with
+    the scope values pre-bound — so N components (e.g. the member
+    sessions of an ``EnsembleSession``) share ONE base registry and one
+    scrape without label-set collisions:
+
+        scoped = ScopedRegistry(base, member="dics")
+        scoped.counter("stream_events_total").inc(5)
+        # == base family "stream_events_total"{member="dics"} += 5
+
+    Families created through a scope declare ``scope labels + own
+    labels``; a family of the same name created through a *different*
+    scope with the same label names is the same base family (idempotent
+    get-or-create), while creating it unscoped on the base raises — the
+    registry's usual label-set strictness, now guarding against mixing
+    scoped and unscoped writers of one name.
+
+    Scopes nest: ``ScopedRegistry(scoped, stage="serve")`` flattens into
+    a single combined label set on the underlying base. Everything else
+    (``snapshot`` / ``to_prometheus`` / ``get`` / export) delegates to
+    the base registry and covers ALL scopes.
+    """
+
+    def __init__(self, base, **labels):
+        if not labels:
+            raise ValueError("ScopedRegistry needs at least one label")
+        if isinstance(base, ScopedRegistry):
+            labels = {**base.scope, **labels}
+            base = base.base
+        self.base: MetricsRegistry = base
+        self.scope: dict[str, str] = {k: str(v) for k, v in labels.items()}
+
+    def _label_names(self, labels: Iterable[str]) -> tuple[str, ...]:
+        return tuple(self.scope) + tuple(labels)
+
+    def counter(self, name: str, help: str = "",
+                labels: Iterable[str] = ()) -> _ScopedFamily:
+        fam = self.base.counter(name, help, labels=self._label_names(labels))
+        return _ScopedFamily(fam, self.scope)
+
+    def gauge(self, name: str, help: str = "",
+              labels: Iterable[str] = ()) -> _ScopedFamily:
+        fam = self.base.gauge(name, help, labels=self._label_names(labels))
+        return _ScopedFamily(fam, self.scope)
+
+    def histogram(self, name: str, help: str = "",
+                  labels: Iterable[str] = (),
+                  buckets: Iterable[float] | None = None,
+                  keep_samples: int = 65536) -> _ScopedFamily:
+        fam = self.base.histogram(name, help,
+                                  labels=self._label_names(labels),
+                                  buckets=buckets,
+                                  keep_samples=keep_samples)
+        return _ScopedFamily(fam, self.scope)
+
+    def __getattr__(self, name):   # snapshot / to_json / get / families ...
+        return getattr(self.base, name)
 
 
 def _fmt_f(v) -> str:

@@ -40,12 +40,13 @@ from __future__ import annotations
 import threading
 from typing import NamedTuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["TelemetryState", "telemetry_init", "telemetry_update",
            "telemetry_batch_update", "telemetry_ints", "TelemetryFolder",
-           "HOST_CARRY_CAP"]
+           "effective_list_len", "HOST_CARRY_CAP"]
 
 # The host reference loop re-queues overflow into an unbounded Python
 # list; folding with this capacity makes "never drops, always requeues"
@@ -65,23 +66,30 @@ class TelemetryState(NamedTuple):
     bucket_hwm: jnp.ndarray  # i32[n_c] per-bucket load high-water mark
     occ_hwm: jnp.ndarray     # i32[n_c] per-worker occupancy high-water
                              # mark (user + item live entries)
+    list_len: jnp.ndarray    # summed effective top-N list length — the
+                             # precision@N denominator (min(top_n,
+                             # unrated candidates) per kept event,
+                             # measured at bucket start)
 
 
 def telemetry_init(n_c: int) -> TelemetryState:
     z = jnp.zeros((), jnp.int32)
     return TelemetryState(z, z, z, z, z, z, jnp.zeros((n_c,), jnp.int32),
-                          jnp.zeros((n_c,), jnp.int32))
+                          jnp.zeros((n_c,), jnp.int32), z)
 
 
 def telemetry_update(tel: TelemetryState, *, kept, overflow, carry_cap,
                      evicted, hits, evals, load,
-                     occupancy=None) -> TelemetryState:
+                     occupancy=None, list_len=0) -> TelemetryState:
     """Fold one micro-batch of scalar counts into the running vector.
 
     Pure integer arithmetic so host and scan backends produce
     bit-identical values; every argument is (convertible to) i32.
     ``occupancy`` (i32[n_c] live entries per worker, user + item) is
     optional — ``None`` leaves the occupancy high-water mark unchanged.
+    ``list_len`` is the batch's summed effective recommendation-list
+    length (:func:`effective_list_len`) — the precision@N denominator;
+    callers without a precision head leave it at 0.
     """
     overflow = jnp.asarray(overflow, jnp.int32)
     carry_cap = jnp.asarray(carry_cap, jnp.int32)
@@ -98,12 +106,14 @@ def telemetry_update(tel: TelemetryState, *, kept, overflow, carry_cap,
         bucket_hwm=jnp.maximum(tel.bucket_hwm,
                                jnp.asarray(load, jnp.int32)),
         occ_hwm=occ_hwm,
+        list_len=tel.list_len + jnp.asarray(list_len, jnp.int32),
     )
 
 
 def telemetry_batch_update(tel: TelemetryState, *, kept, overflow,
                            carry_cap, evicted, hits, evaluated,
-                           load, occupancy=None) -> TelemetryState:
+                           load, occupancy=None,
+                           list_len=0) -> TelemetryState:
     """:func:`telemetry_update` with the recall reduction inlined.
 
     ``hits`` / ``evaluated`` are the worker step's ``bool[n_c, cap]``
@@ -115,7 +125,45 @@ def telemetry_batch_update(tel: TelemetryState, *, kept, overflow,
         evicted=evicted,
         hits=jnp.sum((hits & evaluated).astype(jnp.int32)),
         evals=jnp.sum(evaluated.astype(jnp.int32)), load=load,
-        occupancy=occupancy)
+        occupancy=occupancy, list_len=list_len)
+
+
+def effective_list_len(states, ev_u, *, top_n: int, g: int, storage):
+    """Summed effective top-N list length for one dispatched micro-batch.
+
+    The precision@N head's denominator, computed where the recall head
+    computes its numerator — on device, from the bucket-start ``states``
+    (BEFORE the worker step trains on the batch; the same bucket-start
+    contract the pallas recall bits carry). For each kept event the
+    serveable list is ``min(top_n, live unrated items on the worker)`` —
+    shorter than ``top_n`` only while a worker's item table is still
+    warming up or the user has rated nearly everything resident.
+
+    ``states`` is the stacked ``[n_c, ...]`` worker pytree (in its
+    resident encoding — only the gathered rated rows are decoded, via
+    :func:`repro.core.storage.gather_rated`); ``ev_u`` is the dispatch's
+    ``i32[n_c, cap]`` user-id layout (−1 = empty slot). Pure integer
+    arithmetic on the same inputs in both backends, so host and scan
+    fold bit-identical sums.
+    """
+    from repro.core import state as state_lib
+    from repro.core import storage as storage_lib
+
+    ev_u = jnp.asarray(ev_u, jnp.int32)
+
+    def per_worker(st, eu):
+        t = st.tables
+        u_cap = t.user_ids.shape[-1]
+        i_cap = t.item_ids.shape[-1]
+        valid = eu >= 0
+        u_slot = state_lib.slot_of(eu, g, u_cap)
+        known_u = valid & (t.user_ids[u_slot] == eu)
+        rated = storage_lib.gather_rated(st.rated, u_slot, storage, i_cap)
+        cand = (t.item_ids >= 0)[None, :] & ~(rated & known_u[:, None])
+        n_cand = jnp.sum(cand.astype(jnp.int32), axis=-1)
+        return jnp.sum(jnp.where(valid, jnp.minimum(n_cand, top_n), 0))
+
+    return jnp.sum(jax.vmap(per_worker)(states, ev_u)).astype(jnp.int32)
 
 
 def telemetry_ints(tel: TelemetryState) -> dict:
@@ -129,6 +177,7 @@ def telemetry_ints(tel: TelemetryState) -> dict:
         "evals": int(tel.evals),
         "bucket_hwm": [int(v) for v in np.asarray(tel.bucket_hwm)],
         "occ_hwm": [int(v) for v in np.asarray(tel.occ_hwm)],
+        "list_len": int(tel.list_len),
     }
 
 
@@ -144,7 +193,7 @@ class TelemetryFolder:
     """
 
     _SCALARS = ("events", "dropped", "requeued", "evictions", "hits",
-                "evals")
+                "evals", "list_len")
 
     def __init__(self, registry):
         self.registry = registry
@@ -168,6 +217,9 @@ class TelemetryFolder:
             "evals": registry.counter(
                 "stream_recall_evals_total", "Prequential recall "
                 "evaluations"),
+            "list_len": registry.counter(
+                "stream_list_len_total", "Summed effective top-N list "
+                "length (precision@N denominator)"),
         }
         self._hwm = registry.gauge(
             "stream_bucket_hwm", "Per-bucket dispatch-load high-water "

@@ -233,15 +233,21 @@ class StreamSession:
     def restore(cls, directory: str, cfg: StreamConfig,
                 step: int | None = None, *,
                 serve: ServeConfig | None = None,
-                publish: PublishPolicy | None = None) -> "StreamSession":
+                publish: PublishPolicy | None = None,
+                snapshot_slots: int = 2,
+                metrics: metrics_lib.MetricsRegistry | None = None,
+                ) -> "StreamSession":
         """Resume a session from ``checkpoint`` output, at ``cfg.grid``.
 
         Grid-portable checkpoints regrid to the configured shape on the
         fly, so restoring at a different ``(n_i, g)`` than the save IS
         the scale-out path (see also :meth:`rescale` for live states).
+        ``metrics`` lets the restored session join a shared (possibly
+        scoped) registry — the ensemble restore path relies on this.
         """
         ck: RestoredCheckpoint = restore_stream_checkpoint(directory, cfg, step)
-        session = cls(cfg, serve=serve, publish=publish)
+        session = cls(cfg, serve=serve, publish=publish,
+                      snapshot_slots=snapshot_slots, metrics=metrics)
         session._states = ck.states
         session._carry = ck.carry
         session._detector = ck.detector

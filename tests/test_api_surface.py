@@ -43,7 +43,8 @@ EXPECTED_ALL = {
     "PublishPolicy", "ServeConfig", "ServeResponse", "QueryFrontend",
     "SnapshotStore", "StaleSnapshotError", "grid_topn",
     "Autoscaler", "AutoscalePolicy",
-    "MetricsRegistry",
+    "EnsembleSession", "EnsembleResult", "WeigherConfig", "BlendPolicy",
+    "MetricsRegistry", "ScopedRegistry",
 }
 
 

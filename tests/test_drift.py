@@ -299,3 +299,51 @@ def test_adaptive_detector_checkpoint_roundtrip(tmp_path):
     more = run_stream(sc.users[:512], sc.items[:512], cfg,
                       initial_states=ck.states, initial_detector=ck.detector)
     assert more.events_processed == 512
+
+
+def test_autoscaler_rescale_mid_boost_preserves_drift_loop():
+    """An ``Autoscaler.step()`` that fires ``rescale()`` while the
+    adaptive policy is inside a drift-eviction boost window must not
+    lose closed-loop state. The session-level carry is the detector
+    (the boost counter is per-``run_stream`` by construction); it must
+    survive the regrid bit for bit, and the loop must keep running —
+    ``fires`` monotone, flags still produced — on the new grid.
+    """
+    import repro
+    from repro.serve import Autoscaler, AutoscalePolicy
+
+    sc = make_scenario("abrupt", events=16384, seed=0, at=0.5)
+    cfg = StreamConfig(algorithm="dics", grid=GridSpec(1), micro_batch=256,
+                       hyper=DicsHyper(u_cap=256, i_cap=64), backend="scan",
+                       drift=DriftPolicy(boost_batches=8))
+    session = repro.StreamSession(cfg)
+    scaler = Autoscaler(session, AutoscalePolicy(cooldown=0, max_workers=4,
+                                                 grow_occupancy_frac=0.5))
+
+    # Ingest in chunks until the detector fires: the eviction pass runs
+    # and the boost window opens inside that chunk. Reserve a tail so
+    # the post-rescale segment still has traffic to prove resumption.
+    n, chunk, tail = len(sc.users), 1024, 2048
+    hi = 0
+    while hi < n - tail and int(session._detector.fires
+                                if session._detector is not None else 0) < 1:
+        session.ingest(sc.users[hi:hi + chunk], sc.items[hi:hi + chunk])
+        hi += chunk
+    det_before = jax.tree.map(np.asarray, session._detector)
+    fires_before = int(det_before.fires)
+    assert fires_before >= 1, "detector never fired before the tail"
+
+    action = scaler.step()      # occupancy pressure on the 1-worker grid
+    assert action == "grow"
+    assert session.grid.n_c == 2
+    # rescale() rebuilt every state table, but the detector carry is
+    # bit-identical — the drift loop did not restart from warm-up.
+    for a, b in zip(det_before, session._detector):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # The closed loop resumes on the rescaled grid: flags keep flowing
+    # and the firing count is monotone (a reset would zero it).
+    r2 = session.ingest(sc.users[hi:], sc.items[hi:])
+    assert r2.drift_flags is not None
+    assert int(session._detector.fires) >= fires_before
+    assert int(session._detector.seen) > int(det_before.seen)

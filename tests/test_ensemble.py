@@ -1,0 +1,358 @@
+"""Adaptive ensemble runtime (ISSUE 10): scoped registry, weigher,
+rank fusion, and the EnsembleSession lifecycle.
+
+Pins the acceptance criteria: an ``EnsembleSession`` trains >= 2
+registered algorithms concurrently on one stream with member-tagged
+telemetry in ONE shared registry; serving is a deterministic weighted
+rank fusion (config-order invariant, fixed tie-break) or a hard switch
+that exactly matches the argmax member's own answer; a member drift
+flag re-opens exploration (weights flatten, the trail is visible in the
+registry); and the whole session — members plus weigher — survives
+checkpoint/restore (including at a different grid) and live rescale.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import repro
+from repro.core.pipeline import StreamConfig
+from repro.core.routing import GridSpec
+from repro.drift import DriftPolicy, make_scenario
+from repro.ensemble import (BlendPolicy, EnsembleSession, WeigherConfig,
+                            fuse_topn, popularity_stratum, switch_choice,
+                            weigher_init, weigher_update)
+from repro.ensemble.weights import weigher_from_dict, weigher_to_dict
+from repro.obs import MetricsRegistry, ScopedRegistry
+
+
+def _stream(n=600, seed=0):
+    from repro.data.stream import MOVIELENS_25M, scaled, synth_stream
+
+    users, items, _ = synth_stream(scaled(MOVIELENS_25M, 0.002), seed=seed)
+    return users[:n], items[:n]
+
+
+def _cfg(algorithm, grid=GridSpec(2), u_cap=128, i_cap=32, **over):
+    hyper = repro.get_algorithm(algorithm).default_hyper()._replace(
+        u_cap=u_cap, i_cap=i_cap)
+    over.setdefault("micro_batch", 128)
+    return StreamConfig(algorithm=algorithm, grid=grid, hyper=hyper,
+                        backend="scan", **over)
+
+
+# ---------------------------------------------------------------------------
+# ScopedRegistry: member-tagged views over one registry
+# ---------------------------------------------------------------------------
+
+
+def test_scoped_registry_tags_and_filters_one_shared_family():
+    reg = MetricsRegistry()
+    a = ScopedRegistry(reg, member="a")
+    b = ScopedRegistry(reg, member="b")
+    ca = a.counter("x_total", "x")
+    cb = b.counter("x_total", "x")
+    ca.inc(2)
+    cb.inc(3)
+    # Both scopes write the SAME base family, separated by label.
+    vals = {lab["member"]: c.value for lab, c in reg.get("x_total").series()}
+    assert vals == {"a": 2, "b": 3}
+    # The scoped view's series() only sees its own label slice.
+    assert [lab["member"] for lab, _ in ca.series()] == ["a"]
+    # Extra labels compose with (and come after) the scope labels.
+    g = a.gauge("y", "y", labels=("k",))
+    g.labels(k="1").set(5)
+    assert {(lab["member"], lab["k"])
+            for lab, _ in reg.get("y").series()} == {("a", "1")}
+    # Nesting flattens into one label dict.
+    nested = ScopedRegistry(a, stage="s")
+    assert nested.scope == {"member": "a", "stage": "s"}
+    assert nested.base is reg
+    # The scrape carries the member label like any other label.
+    assert 'member="a"' in reg.to_prometheus()
+    with pytest.raises(ValueError):
+        ScopedRegistry(reg)    # a scope with no labels is a bug
+
+
+# ---------------------------------------------------------------------------
+# Weigher: exp3-style softmax over prequential rewards
+# ---------------------------------------------------------------------------
+
+
+def test_weigher_tracks_the_better_member():
+    cfg = WeigherConfig()
+    st = weigher_init(2, cfg)
+    np.testing.assert_allclose(np.asarray(st.weights), 0.5)
+    for _ in range(3):
+        st = weigher_update(st, hits=[[8.0], [2.0]], evals=[[10.0], [10.0]],
+                            drift=False, cfg=cfg)
+    w = np.asarray(st.weights)[:, 0]
+    assert w[0] > 0.6 > 0.4 > w[1]
+    np.testing.assert_allclose(w.sum(), 1.0, rtol=1e-6)
+    assert int(st.updates) == 3 and int(st.resets) == 0
+
+
+def test_weigher_unseen_stratum_keeps_prior_estimate():
+    cfg = WeigherConfig(strata=2)
+    st = weigher_init(2, cfg)
+    st = weigher_update(st, hits=[[8.0, 0.0], [2.0, 0.0]],
+                        evals=[[10.0, 0.0], [10.0, 0.0]],
+                        drift=False, cfg=cfg)
+    # Stratum 1 saw no evaluations: no phantom zero-reward fold.
+    np.testing.assert_array_equal(np.asarray(st.reward)[:, 1], 0.0)
+    np.testing.assert_array_equal(np.asarray(st.mass)[:, 1], 0.0)
+    np.testing.assert_allclose(np.asarray(st.weights)[:, 1], 0.5)
+    # Stratum 0 separated.
+    assert np.asarray(st.weights)[0, 0] > np.asarray(st.weights)[1, 0]
+
+
+def test_weigher_drift_flattens_weights_and_counts_reset():
+    cfg = WeigherConfig()
+    st = weigher_init(2, cfg)
+    st = weigher_update(st, [[9.0], [1.0]], [[10.0], [10.0]], False, cfg)
+    mass_before = np.asarray(st.mass).copy()
+    st = weigher_update(st, [[9.0], [1.0]], [[10.0], [10.0]], True, cfg)
+    np.testing.assert_allclose(np.asarray(st.weights), 0.5)
+    assert int(st.resets) == 1
+    # Evidence mass is discounted so post-drift segments dominate.
+    assert (np.asarray(st.mass) < mass_before).all()
+    # Opting out keeps the weights sharp through the flag.
+    off = WeigherConfig(drift_reset=False)
+    st2 = weigher_update(weigher_init(2, off),
+                         [[9.0], [1.0]], [[10.0], [10.0]], True, off)
+    assert int(st2.resets) == 0
+    assert np.asarray(st2.weights)[0, 0] > 0.5
+
+
+def test_weigher_dict_roundtrip_and_popularity_strata():
+    cfg = WeigherConfig(strata=3)
+    st = weigher_update(weigher_init(2, cfg),
+                        [[1.0, 2.0, 3.0], [3.0, 2.0, 1.0]],
+                        [[4.0, 4.0, 4.0], [4.0, 4.0, 4.0]], False, cfg)
+    back = weigher_from_dict(weigher_to_dict(st))
+    for a, b in zip(st, back):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(
+        popularity_stratum([0, 1, 2, 3, 7, 1000], 4), [0, 1, 1, 2, 3, 3])
+
+
+# ---------------------------------------------------------------------------
+# Rank fusion: deterministic weighted RRF / Borda
+# ---------------------------------------------------------------------------
+
+
+def test_fuse_topn_rrf_hand_computed():
+    ids = [np.array([[5, 7]], np.int32), np.array([[7, 3]], np.int32)]
+    scores = [np.ones((1, 2), np.float32)] * 2
+    known = [np.array([True]), np.array([True])]
+    out_ids, out_scores, out_known = fuse_topn(
+        ids, scores, known, np.array([[1.0, 1.0]]), top_n=3,
+        method="rrf", rrf_k=1)
+    # 7: 1/3 + 1/2 = 0.8333..; 5: 1/2; 3: 1/3
+    np.testing.assert_array_equal(out_ids[0], [7, 5, 3])
+    np.testing.assert_allclose(out_scores[0], [5 / 6, 1 / 2, 1 / 3],
+                               rtol=1e-6)
+    assert out_known[0]
+
+
+def test_fuse_topn_tie_breaks_by_id_ascending():
+    ids = [np.array([[1, 2]], np.int32), np.array([[2, 1]], np.int32)]
+    scores = [np.ones((1, 2), np.float32)] * 2
+    known = [np.array([True])] * 2
+    out_ids, out_scores, _ = fuse_topn(ids, scores, known,
+                                       np.array([[1.0, 1.0]]), top_n=2)
+    # Symmetric ranks -> equal fused scores -> id ascending.
+    np.testing.assert_array_equal(out_ids[0], [1, 2])
+    assert out_scores[0, 0] == out_scores[0, 1]
+
+
+def test_fuse_topn_borda_skips_unknown_and_zero_weight():
+    ids = [np.array([[5, 7]], np.int32), np.array([[9, 3]], np.int32)]
+    scores = [np.ones((1, 2), np.float32)] * 2
+    # Member 1 unknown for this row: only member 0 contributes.
+    out_ids, _, known = fuse_topn(
+        ids, scores, [np.array([True]), np.array([False])],
+        np.array([[1.0, 1.0]]), top_n=2, method="borda")
+    np.testing.assert_array_equal(out_ids[0], [5, 7])
+    assert known[0]
+    # Zero weight mutes a member the same way.
+    out_ids2, _, _ = fuse_topn(
+        ids, scores, [np.array([True]), np.array([True])],
+        np.array([[1.0, 0.0]]), top_n=2, method="borda")
+    np.testing.assert_array_equal(out_ids2[0], [5, 7])
+    # All-unknown row: -1 padding, known False.
+    out3, sc3, kn3 = fuse_topn(
+        ids, scores, [np.array([False]), np.array([False])],
+        np.array([[1.0, 1.0]]), top_n=2)
+    np.testing.assert_array_equal(out3[0], [-1, -1])
+    assert not kn3[0]
+
+
+def test_switch_choice_argmax_with_name_tie_break():
+    assert switch_choice(np.array([0.3, 0.3, 0.4]), ["a", "b", "c"]) == 2
+    assert switch_choice(np.array([0.5, 0.5]), ["b", "a"]) == 1
+
+
+# ---------------------------------------------------------------------------
+# EnsembleSession: train / serve / checkpoint / rescale
+# ---------------------------------------------------------------------------
+
+
+def test_ensemble_trains_two_algorithms_with_tagged_telemetry():
+    users, items = _stream()
+    ens = EnsembleSession([_cfg("dics"), _cfg("disgd")])
+    r = ens.ingest(users, items)
+    assert set(r.members) == {"dics", "disgd"}
+    assert r.events_processed == users.size
+    # Every member's engine telemetry landed in ONE registry, tagged.
+    vals = {lab["member"]: c.value
+            for lab, c in ens.metrics.get("stream_events_total").series()}
+    assert vals["dics"] == vals["disgd"] == users.size
+    text = ens.metrics.to_prometheus()
+    assert 'member="dics"' in text and "ensemble_member_weight" in text
+    np.testing.assert_allclose(sum(ens.weights.values()), 1.0, rtol=1e-6)
+    assert int(ens.weigher_state.updates) == 1
+
+
+def test_ensemble_validates_member_sets():
+    with pytest.raises(ValueError):
+        EnsembleSession([_cfg("dics")])                  # one is no ensemble
+    with pytest.raises(ValueError):
+        EnsembleSession([_cfg("dics"), _cfg("dics")])    # duplicates
+    ens = EnsembleSession.for_algorithms(["disgd", "dics"], base=_cfg("dics"))
+    assert ens.member_names == ("dics", "disgd")         # name-sorted
+
+
+def test_blend_serving_deterministic_and_config_order_invariant():
+    users, items = _stream()
+    uids = np.unique(users)[:24]
+    e1 = EnsembleSession([_cfg("dics"), _cfg("disgd")])
+    e2 = EnsembleSession([_cfg("disgd"), _cfg("dics")])
+    e1.ingest(users, items)
+    e2.ingest(users, items)
+    r1, r2 = e1.recommend(uids), e2.recommend(uids)
+    np.testing.assert_array_equal(r1.ids, r2.ids)
+    np.testing.assert_allclose(r1.scores, r2.scores, rtol=1e-6)
+    np.testing.assert_array_equal(r1.known, r2.known)
+    # Same session, same query, same answer.
+    again = e1.recommend(uids)
+    np.testing.assert_array_equal(r1.ids, again.ids)
+    # Borda is a valid fusion too and keeps the response shape.
+    borda = EnsembleSession([_cfg("dics"), _cfg("disgd")],
+                            blend=BlendPolicy(method="borda"))
+    borda.ingest(users, items)
+    rb = borda.recommend(uids)
+    assert rb.ids.shape == r1.ids.shape
+
+
+def test_switch_mode_matches_argmax_member_exactly():
+    users, items = _stream()
+    uids = np.unique(users)[:16]
+    ens = EnsembleSession([_cfg("dics"), _cfg("disgd")])
+    ens.ingest(users, items)
+    names = list(ens.member_names)
+    w = ens.weights
+    best = names[switch_choice(np.array([w[m] for m in names]), names)]
+    r = ens.recommend(uids, mode="switch")
+    own = ens.members[best].recommend(uids)
+    np.testing.assert_array_equal(r.ids, own.ids)
+    np.testing.assert_array_equal(r.known, own.known)
+    routed = {lab["member"]: c.value
+              for lab, c in ens.metrics.get("ensemble_switch_total").series()}
+    assert routed == {best: uids.size}
+    with pytest.raises(ValueError):
+        ens.recommend(uids, mode="winner-takes-all")
+
+
+def test_ensemble_checkpoint_restore_roundtrip(tmp_path):
+    users, items = _stream(800)
+    cfgs = [_cfg("dics"), _cfg("disgd")]
+    ens = EnsembleSession(cfgs, weigher=WeigherConfig(reward="precision"))
+    ens.ingest(users, items)
+    uids = np.unique(users)[:16]
+    before = ens.recommend(uids)
+    ens.checkpoint(str(tmp_path))
+
+    back = EnsembleSession.restore(str(tmp_path), cfgs)
+    assert back.weights == ens.weights
+    assert back.events_processed == ens.events_processed
+    assert back.weigher_config.reward == "precision"
+    for a, b in zip(ens.weigher_state, back.weigher_state):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    after = back.recommend(uids)
+    np.testing.assert_array_equal(before.ids, after.ids)
+
+    # Restoring at a DIFFERENT grid is the rescale-through-restart path.
+    wide = [dataclasses.replace(c, grid=GridSpec.rect(2, 2)) for c in cfgs]
+    big = EnsembleSession.restore(str(tmp_path), wide)
+    assert all(m.grid.n_c == 4 for m in big.members.values())
+    assert big.weights == ens.weights
+    r = big.recommend(uids)
+    assert r.ids.shape == before.ids.shape
+
+    # Member-set mismatch refuses loudly.
+    with pytest.raises(ValueError):
+        EnsembleSession.restore(str(tmp_path), [_cfg("dics"), _cfg("bpr")])
+
+
+def test_ensemble_live_rescale_keeps_weigher_and_serves():
+    users, items = _stream()
+    ens = EnsembleSession([_cfg("dics"), _cfg("disgd")])
+    ens.ingest(users, items)
+    w = ens.weights
+    st = ens.weigher_state
+    ens.rescale(GridSpec.rect(2, 2))
+    assert ens.weights == w
+    for a, b in zip(st, ens.weigher_state):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for m in ens.members.values():
+        assert m.grid.n_c == 4
+    r = ens.recommend(np.unique(users)[:8])
+    assert r.ids.shape[0] == 8
+    # Training continues on the rescaled grid (weigher keeps folding).
+    ens.ingest(users[:256], items[:256])
+    assert int(ens.weigher_state.updates) == 2
+
+
+def test_stratified_reward_mode_trains_and_serves():
+    users, items = _stream(800)
+    ens = EnsembleSession([_cfg("dics"), _cfg("disgd")],
+                          weigher=WeigherConfig(strata=3))
+    ens.ingest(users[:400], items[:400])
+    ens.ingest(users[400:], items[400:])
+    w = np.asarray(ens.weigher_state.weights)
+    assert w.shape == (2, 3)
+    np.testing.assert_allclose(w.sum(axis=0), 1.0, rtol=1e-6)
+    # Per-user stratum lookup routes serving without error.
+    r = ens.recommend(np.unique(users)[:8], mode="switch")
+    assert r.ids.shape[0] == 8
+
+
+def test_drift_flag_reopens_exploration_with_visible_trail():
+    """Acceptance: a member drift flag flattens the weights (exploration
+    re-opens) and the weight trail is visible in the metrics registry."""
+    sc = make_scenario("recurring", events=8192, seed=0)
+    cfgs = [_cfg(a, u_cap=256, i_cap=64, micro_batch=256,
+                 drift=DriftPolicy()) for a in ("dics", "disgd")]
+    ens = EnsembleSession(cfgs)
+    segments = np.array_split(np.arange(len(sc.users)), 16)
+    drift_segment = None
+    for seg in segments:
+        r = ens.ingest(sc.users[seg], sc.items[seg])
+        if r.drift and drift_segment is None:
+            drift_segment = r
+    assert drift_segment is not None, "no member detector fired"
+    assert ens.exploration_resets >= 1
+    # The reset flattened the weights back to uniform at that boundary.
+    for w in drift_segment.weights.values():
+        np.testing.assert_allclose(np.asarray(w), 0.5)
+    assert int(ens.metrics.counter(
+        "ensemble_exploration_resets_total").value) == ens.exploration_resets
+    fired = {lab["member"]: c.value for lab, c in ens.metrics.get(
+        "ensemble_drift_flags_total").series()}
+    assert sum(fired.values()) >= 1
+    # Weight trail: one histogram sample per member per segment.
+    for lab, hist in ens.metrics.get(
+            "ensemble_member_weight_trail").series():
+        assert hist.snapshot().count == len(segments)

@@ -205,6 +205,38 @@ def test_telemetry_host_scan_bit_parity_with_forgetting_and_requeue():
     assert host.forgets == scan.forgets > 0
 
 
+def test_precision_head_parity_and_surfacing():
+    """The precision@N head (hits / effective list length) rides the
+    same scan-carry vector as the recall head: bit-parity host vs scan,
+    surfaced on ``StreamResult.precision_at_n``, on publish boundaries,
+    and as ``stream_list_len_total`` in a session's registry."""
+    users, items = _stream()
+    cfg = _cfg()
+    host = run_stream(users, items, cfg)
+    scan = run_stream(users, items, dataclasses.replace(cfg, backend="scan"))
+    th, ts = telemetry_ints(host.telemetry), telemetry_ints(scan.telemetry)
+    assert th["list_len"] == ts["list_len"] > 0
+    # precision@N is well-formed: hits bound by both denominators.
+    assert th["hits"] <= th["list_len"]
+    assert 0.0 < scan.precision_at_n < 1.0
+    assert scan.precision_at_n == th["hits"] / th["list_len"]
+    assert host.precision_at_n == scan.precision_at_n
+    # The head rides publish boundaries (the ensemble weigher's read).
+    boundary = []
+    run_stream(users, items, dataclasses.replace(cfg, backend="scan"),
+               publish_every=2, on_publish=lambda ev: boundary.append(ev))
+    assert telemetry_ints(boundary[-1].telemetry)["list_len"] > 0
+    # Telemetry off: the property degrades to NaN, not a crash.
+    off = run_stream(users, items,
+                     dataclasses.replace(cfg, telemetry=False))
+    assert np.isnan(off.precision_at_n)
+    # Session fold: the denominator lands as a registry counter.
+    s = repro.StreamSession(_cfg(backend="scan"))
+    s.ingest(users, items)
+    assert (s.metrics.counter("stream_list_len_total").value
+            == th["list_len"])
+
+
 def test_telemetry_off_yields_none_and_identical_training():
     users, items = _stream(n=600)
     cfg = _cfg(backend="scan")
